@@ -1,0 +1,110 @@
+"""Shared benchmark substrate: datasets, embedder zoo, timing.
+
+CPU-scale stand-ins for the paper's experimental setup (DESIGN.md §5-6):
+the embedder is the reduced ModernBERT-family config, datasets are the
+deterministic domain corpora, and the paper's closed-source comparison
+rows are represented by local baselines of the same character.
+"""
+from __future__ import annotations
+
+import time
+from functools import lru_cache
+
+from repro.configs import get_config
+from repro.core import EmbedderTrainer, FinetuneConfig
+from repro.core.embedders import (
+    EncoderEmbedder, HashNgramEmbedder, RandomProjectionEmbedder,
+)
+from repro.data import HashTokenizer, make_pair_dataset
+
+VOCAB = 4096
+MAX_LEN = 24
+N_TRAIN = 2048
+N_EVAL = 256
+
+
+@lru_cache(maxsize=None)
+def embedder_cfg():
+    return get_config("modernbert-149m").reduced(vocab_size=VOCAB)
+
+
+@lru_cache(maxsize=None)
+def big_encoder_cfg():
+    """Stand-in for the '7B-class general encoder' comparison row: the
+    same family scaled 4x deeper/wider, untuned."""
+    return get_config("modernbert-149m").reduced(
+        vocab_size=VOCAB, n_layers=4, d_model=256, n_heads=8,
+        head_dim=32, d_ff=512).replace(name="modernbert-149m-big-smoke")
+
+
+@lru_cache(maxsize=None)
+def tokenizer():
+    return HashTokenizer(vocab_size=VOCAB)
+
+
+@lru_cache(maxsize=None)
+def dataset(domain: str, split: str):
+    ds = make_pair_dataset(domain, N_TRAIN + N_EVAL, seed=0)
+    tr, ev = ds.split(eval_frac=N_EVAL / (N_TRAIN + N_EVAL), seed=1)
+    return tr if split == "train" else ev
+
+
+def finetune_cfg(epochs: int = 4, clip: float | None = 0.5):
+    # paper recipe scaled to CPU: online contrastive loss; lr/epochs
+    # scaled up for the 1000x-smaller smoke model (margin 0.7 widens the
+    # 1-vs-N separation the cache needs)
+    return FinetuneConfig(epochs=epochs, batch_size=32, max_len=MAX_LEN,
+                          lr=5e-4, max_grad_norm=clip, margin=0.7)
+
+
+@lru_cache(maxsize=None)
+def langcache_embed(domain: str, epochs: int = 4):
+    """The paper's artifact: fine-tuned compact encoder on `domain`."""
+    trainer = EmbedderTrainer(embedder_cfg(), finetune_cfg(epochs))
+    trainer.fit(dataset(domain, "train"), tokenizer())
+    return trainer
+
+
+@lru_cache(maxsize=None)
+def base_embed():
+    """Untuned base ModernBERT row (the paper's true baseline)."""
+    return EmbedderTrainer(embedder_cfg(), finetune_cfg(0))
+
+
+def embedder_rows(domain: str):
+    """(name, embed_fn) rows mirroring the paper's Figure-1/2 lineup."""
+    tok = tokenizer()
+    ft = langcache_embed(domain)
+    base = base_embed()
+    big = EncoderEmbedder(big_encoder_cfg(), name="big-encoder(untuned)")
+    rows = [
+        ("LangCache-Embed(finetuned)", lambda t: ft.embed_texts(t, tok)),
+        ("modernbert-base(untuned)", lambda t: base.embed_texts(t, tok)),
+        ("big-encoder(untuned)", big.embed),
+        ("hash-3gram", HashNgramEmbedder(dim=256).embed),
+        ("random-projection", RandomProjectionEmbedder(dim=256,
+                                                       vocab=VOCAB).embed),
+    ]
+    return rows
+
+
+def score_pairs(embed_fn, ds):
+    import numpy as np
+    e1 = embed_fn(list(ds.q1))
+    e2 = embed_fn(list(ds.q2))
+    return np.sum(e1 * e2, axis=-1)
+
+
+def timed(fn, *args, repeats: int = 3):
+    """Returns (result, us_per_call)."""
+    fn(*args)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def fmt_derived(d: dict) -> str:
+    return ";".join(f"{k}={v:.4f}" if isinstance(v, float) else f"{k}={v}"
+                    for k, v in d.items())

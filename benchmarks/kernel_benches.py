@@ -1,0 +1,90 @@
+"""Kernel microbenches: Pallas (interpret on CPU) vs pure-jnp oracle.
+
+On this CPU container the interpret-mode timing is NOT the TPU story —
+the derived column carries the correctness error and the working-set
+arithmetic that the §Roofline analysis uses; ref timings show the
+XLA-fallback cost the kernel replaces.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import fmt_derived, timed
+from repro.kernels.cosine_topk import kernel as ctk_kernel, ref as ctk_ref
+from repro.kernels.decode_attention import kernel as da_kernel, ref as da_ref
+from repro.kernels.flash_attention import kernel as fa_kernel, ref as fa_ref
+
+rng = np.random.default_rng(0)
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def bench_kernels():
+    # cosine_topk: the cache-lookup hot path at deployment scale
+    for (Q, N, D, k) in [(8, 4096, 256, 1), (32, 16384, 256, 4)]:
+        q = jnp.asarray(_unit(rng.standard_normal((Q, D)).astype(np.float32)))
+        keys = jnp.asarray(_unit(rng.standard_normal((N, D)).astype(
+            np.float32)))
+        valid = jnp.ones(N, bool)
+        (s_ref, i_ref), us_ref = timed(
+            lambda: ctk_ref.cosine_topk(q, keys, valid, k))
+        (s_k, i_k), us_k = timed(
+            lambda: ctk_kernel.cosine_topk(q, keys, valid, k, interpret=True))
+        err = float(jnp.max(jnp.abs(s_ref - s_k)))
+        vmem_kb = (512 * D + Q * D) * 4 / 1024
+        yield (f"kernels/cosine_topk_Q{Q}_N{N}", us_ref,
+               fmt_derived({"err_vs_ref": err, "interp_us": us_k,
+                            "vmem_tile_kb": vmem_kb}))
+
+    # flash attention prefill tile
+    q = jnp.asarray(rng.standard_normal((1, 8, 512, 64)), jnp.float32)
+    kv = jnp.asarray(rng.standard_normal((1, 2, 512, 64)), jnp.float32)
+    o_ref, us_ref = timed(lambda: fa_ref.flash_attention(q, kv, kv,
+                                                         causal=True))
+    o_k, us_k = timed(lambda: fa_kernel.flash_attention(
+        q, kv, kv, causal=True, block_q=128, block_kv=128, interpret=True))
+    err = float(jnp.max(jnp.abs(o_ref - o_k)))
+    yield ("kernels/flash_attention_S512", us_ref,
+           fmt_derived({"err_vs_ref": err, "interp_us": us_k,
+                        "vmem_tile_kb": (128 * 64 * 3 + 128 * 128) * 4 / 1024}))
+
+    # decode attention against a 32k cache slice
+    q1 = jnp.asarray(rng.standard_normal((4, 8, 64)), jnp.float32)
+    kc = jnp.asarray(rng.standard_normal((4, 8192, 2, 64)), jnp.float32)
+    valid = jnp.ones((4, 8192), bool)
+    o_ref, us_ref = timed(lambda: da_ref.decode_attention(q1, kc, kc, valid))
+    o_k, us_k = timed(lambda: da_kernel.decode_attention(
+        q1, kc, kc, valid, block_l=512, interpret=True))
+    err = float(jnp.max(jnp.abs(o_ref - o_k)))
+    yield ("kernels/decode_attention_L8192", us_ref,
+           fmt_derived({"err_vs_ref": err, "interp_us": us_k}))
+
+    # IVF two-level index vs exact flat search (recall + speedup)
+    from repro.core.ivf import build_ivf, ivf_query
+    from repro.core.store import init_store, insert_batch, query as fquery
+    n_clusters, per, D = 64, 128, 128
+    cents = _unit(rng.standard_normal((n_clusters, D)).astype(np.float32))
+    keys = _unit(np.repeat(cents, per, 0) + 0.15 * rng.standard_normal(
+        (n_clusters * per, D)).astype(np.float32))
+    N = len(keys)
+    vids = jnp.arange(N)
+    state = build_ivf(jnp.asarray(keys), jnp.ones(N, bool), vids,
+                      n_clusters=n_clusters, bucket=2 * per)
+    flat = insert_batch(init_store(N, D), jnp.asarray(keys), vids)
+    qi = rng.choice(N, 64, replace=False)
+    q = jnp.asarray(_unit(keys[qi] + 0.02 * rng.standard_normal(
+        (64, D)).astype(np.float32)))
+    jq = jax.jit(lambda st, qq: ivf_query(st, qq, 0.9, 1, 8))
+    jf = jax.jit(lambda st, qq: fquery(st, qq, 0.9, 1))
+    (s, sl, v, hit), us_ivf = timed(lambda: jax.block_until_ready(
+        jq(state, q)))
+    res, us_flat = timed(lambda: jax.block_until_ready(jf(flat, q)))
+    recall = float(np.mean(np.asarray(v[:, 0]) ==
+                           np.asarray(res.value_ids[:, 0])))
+    yield ("kernels/ivf_vs_flat_N8192", us_flat,
+           fmt_derived({"ivf_us": us_ivf, "top1_recall_vs_exact": recall,
+                        "speedup": us_flat / max(us_ivf, 1e-9)}))

@@ -1,0 +1,191 @@
+"""One benchmark per paper table/figure.  Each prints CSV rows:
+``name,us_per_call,derived``.
+
+Absolute numbers differ from the paper (CPU-scale models, deterministic
+corpora, no closed APIs — DESIGN.md §6); the *claims* being reproduced
+are the orderings and deltas: fine-tuned-compact > untuned/large
+baselines, synthetic data closes the gap, 1-epoch+clip avoids
+forgetting, fine-tuned model sits upper-left in the latency/AP plane.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    MAX_LEN, base_embed, dataset, embedder_cfg, embedder_rows, finetune_cfg,
+    fmt_derived, langcache_embed, score_pairs, timed, tokenizer,
+)
+from repro.core import (
+    EmbedderTrainer, SemanticCache, TemplateGenerator,
+    generate_synthetic_pairs, pair_classification_metrics,
+    records_to_dataset,
+)
+from repro.core.metrics import metrics_at_threshold
+from repro.data import make_query_stream, sample_query
+
+
+def bench_fig1_quora():
+    """Figure 1: embedding-model comparison on the Quora-style corpus."""
+    ev = dataset("quora", "eval")
+    for name, fn in embedder_rows("quora"):
+        scores, us = timed(lambda: score_pairs(fn, ev))
+        m = pair_classification_metrics(scores, ev.labels)
+        yield f"fig1/{name}", us, fmt_derived(
+            {k: m[k] for k in ("precision", "recall", "f1", "accuracy",
+                               "ap")})
+
+
+def bench_fig2_medical():
+    """Figure 2: same lineup on the specialised medical corpus."""
+    ev = dataset("medical", "eval")
+    for name, fn in embedder_rows("medical"):
+        scores, us = timed(lambda: score_pairs(fn, ev))
+        m = pair_classification_metrics(scores, ev.labels)
+        yield f"fig2/{name}", us, fmt_derived(
+            {k: m[k] for k in ("precision", "recall", "f1", "accuracy",
+                               "ap")})
+
+
+def bench_fig3_forgetting():
+    """Figure 3: catastrophic forgetting.  The paper's base model is
+    *pretrained* — it has cross-domain knowledge to lose.  We emulate
+    that with a mixed-domain 'pretraining' stage, then fine-tune on
+    quora only: 6 epochs without clipping erodes the previously-learned
+    medical precision, while the paper's 1-epoch + clip-0.5 recipe
+    preserves it."""
+    import copy
+
+    from repro.data.corpora import PairDataset
+
+    tok = tokenizer()
+    ev_q = dataset("quora", "eval")
+    ev_m = dataset("medical", "eval")
+    mix_q = dataset("quora", "train")
+    mix_m = dataset("medical", "train")
+    mixed = PairDataset(mix_q.q1 + mix_m.q1, mix_q.q2 + mix_m.q2,
+                        np.concatenate([mix_q.labels, mix_m.labels]),
+                        "mixed")
+    pre = EmbedderTrainer(embedder_cfg(), finetune_cfg(epochs=2))
+    pre.fit(mixed, tok)
+    pre_params = pre.params
+
+    rows = [("pretrained(mixed)", pre)]
+    short = EmbedderTrainer(embedder_cfg(),
+                            finetune_cfg(epochs=1, clip=0.5),
+                            params=copy.deepcopy(pre_params))
+    short.fit(dataset("quora", "train"), tok)
+    rows.append(("then-quora-ft(1ep,clip0.5)", short))
+    long_ = EmbedderTrainer(embedder_cfg(),
+                            finetune_cfg(epochs=6, clip=None),
+                            params=copy.deepcopy(pre_params))
+    long_.fit(dataset("quora", "train"), tok)
+    rows.append(("then-quora-ft(6ep,noclip)", long_))
+    for name, tr in rows:
+        (mq, mm), us = timed(lambda tr=tr: (tr.evaluate(ev_q, tok),
+                                            tr.evaluate(ev_m, tok)),
+                             repeats=1)
+        yield f"fig3/{name}", us, fmt_derived({
+            "quora_precision": mq["precision"], "quora_ap": mq["ap"],
+            "medical_precision": mm["precision"], "medical_ap": mm["ap"],
+        })
+
+
+def bench_table1_synthetic():
+    """Table 1: fine-tune on PURELY synthetic medical pairs (dual-label
+    pipeline), evaluate on held-out 'real' medical pairs."""
+    tok = tokenizer()
+    ev = dataset("medical", "eval")
+    rng = np.random.default_rng(5)
+    unlabeled = [sample_query(rng, "medical") for _ in range(256)]
+    records = generate_synthetic_pairs(unlabeled, TemplateGenerator(2),
+                                       n_pos=1, n_neg=1)
+    synth = records_to_dataset(records)
+
+    rows = [("base(untuned)", base_embed())]
+    synth_ft = EmbedderTrainer(embedder_cfg(), finetune_cfg(epochs=2))
+    synth_ft.fit(synth, tok)
+    rows.append(("LangCache-Embed-Synthetic", synth_ft))
+    rows.append(("LangCache-Embed(real-ft)", langcache_embed("medical")))
+    for name, tr in rows:
+        m, us = timed(lambda tr=tr: tr.evaluate(ev, tok), repeats=1)
+        yield f"table1/{name}", us, fmt_derived(
+            {k: m[k] for k in ("precision", "recall", "f1", "accuracy",
+                               "ap")})
+
+
+def bench_fig4_latency():
+    """Figure 4: embedding overhead (us/query) vs AP on quora eval."""
+    ev = dataset("quora", "eval")
+    queries = list(ev.q1)[:64]
+    for name, fn in embedder_rows("quora"):
+        _, us_total = timed(lambda: fn(queries))
+        scores = score_pairs(fn, ev)
+        ap = pair_classification_metrics(scores, ev.labels)["ap"]
+        yield f"fig4/{name}", us_total / len(queries), fmt_derived(
+            {"ap": ap, "us_per_query": us_total / len(queries)})
+
+
+def bench_ablation_loss():
+    """Paper §2 argument: ONLINE contrastive (hard-pair mining) converges
+    to better precision than conventional contrastive under the same
+    budget.  Head-to-head at identical steps/lr/data."""
+    from repro.core import EmbedderTrainer as ET
+    tok = tokenizer()
+    ev = dataset("medical", "eval")
+    tr = dataset("medical", "train")
+    for loss in ("online", "contrastive"):
+        cfg = finetune_cfg(epochs=2)
+        cfg = type(cfg)(**{**cfg.__dict__, "loss": loss})
+        trainer = ET(embedder_cfg(), cfg)
+        _, us = timed(lambda tr_=trainer: tr_.fit(tr, tok), repeats=1)
+        m = trainer.evaluate(ev, tok)
+        yield f"ablation/loss={loss}", us, fmt_derived(
+            {k: m[k] for k in ("precision", "recall", "f1", "ap")})
+
+
+def bench_cache_hit_rate():
+    """System-level: deployed-cache hit quality on a repeated-query
+    stream (the 33%-repeats serving trace).  The 1-vs-N lookup is much
+    harder than pairwise eval (a query competes against every stored
+    entry), which is exactly why the paper's precision argument matters:
+    the fine-tuned embedder dominates the untuned base at every
+    threshold."""
+    tok = tokenizer()
+    stream = make_query_stream("medical", 200, seed=9, repeat_frac=0.4)
+    texts = [q.text for q in stream]
+    models = [("finetuned", langcache_embed("medical")),
+              ("base", base_embed())]
+    for model_name, trainer in models:
+        embs = trainer.embed_texts(texts, tok)
+        # calibrate on the eval split (the paper's evaluator convention):
+        # probe the best-F1 threshold and stricter serving points
+        ev = dataset("medical", "eval")
+        scores = score_pairs(lambda t: trainer.embed_texts(t, tok), ev)
+        thr0 = pair_classification_metrics(scores, ev.labels)["f1_threshold"]
+        for threshold in (round(thr0, 4), round(thr0 + 0.1, 4),
+                          round(thr0 + 0.2, 4)):
+            def run():
+                cache = SemanticCache(capacity=2048,
+                                      dim=embedder_cfg().d_model,
+                                      threshold=threshold)
+                inserted = {}
+                th = fh = miss = 0
+                for q, e in zip(stream, embs):
+                    hit, score, val = cache.lookup(e[None])
+                    key = (q.entity, q.aspect)
+                    if hit[0]:
+                        if inserted.get(val[0]) == key:
+                            th += 1
+                        else:
+                            fh += 1
+                    else:
+                        rid = f"r{miss}"
+                        inserted[rid] = key
+                        cache.insert(e[None], [rid])
+                        miss += 1
+                return th, fh, miss
+            (th, fh, miss), us = timed(run, repeats=1)
+            yield (f"cache/{model_name}@thr={threshold}", us / len(stream),
+                   fmt_derived({"true_hit_rate": th / len(stream),
+                                "false_hit_rate": fh / len(stream),
+                                "miss_rate": miss / len(stream)}))

@@ -1,0 +1,53 @@
+"""Quickstart: a semantic cache in 40 lines.
+
+Builds the compact encoder, embeds a few queries, and shows the
+hit/miss/threshold mechanics of the cache.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import EmbedderTrainer, FinetuneConfig, SemanticCache
+from repro.data import HashTokenizer, make_pair_dataset
+
+# 1. a compact embedder (reduced ModernBERT-family config; pass the full
+#    `modernbert-149m` config on real hardware)
+cfg = get_config("modernbert-149m").reduced(vocab_size=4096)
+tok = HashTokenizer(vocab_size=cfg.vocab_size)
+trainer = EmbedderTrainer(cfg, FinetuneConfig(epochs=2, batch_size=32,
+                                              max_len=24, lr=5e-4,
+                                              margin=0.7))
+
+# 2. short domain fine-tuning (the paper's recipe: online contrastive
+#    loss, grad-norm clip 0.5; 2 epochs for the 1000x-smaller smoke
+#    model — the real 149M model needs just 1)
+train_ds = make_pair_dataset("medical", 1024, seed=0)
+stats = trainer.fit(train_ds, tok)
+print(f"fine-tuned for {stats['steps']} steps "
+      f"in {stats['train_seconds']:.1f}s")
+
+# 3. the cache: embedding store + cosine threshold
+cache = SemanticCache(capacity=1024, dim=cfg.d_model, threshold=0.85)
+embed = trainer.make_embed_fn(tok)
+
+queries = [
+    "What are the symptoms of early-stage diabetes?",
+    "How is hypertension treated?",
+]
+hits, scores, _ = cache.lookup(embed(queries))
+print("first lookup (cold):", list(hits))
+cache.insert(embed(queries), ["<llm answer about diabetes symptoms>",
+                              "<llm answer about hypertension treatment>"])
+
+paraphrases = [
+    # same intent, different surface form -> should HIT
+    "Which warning signs point to early-stage diabetes?",
+    # topically related but semantically distinct -> must MISS
+    "What diet helps with early-stage diabetes?",
+]
+hits, scores, values = cache.lookup(embed(paraphrases))
+for q, h, s, v in zip(paraphrases, hits, scores, values):
+    print(f"  {'HIT ' if h else 'MISS'} score={s:.3f}  {q!r}"
+          + (f" -> {v!r}" if h else ""))
+print(f"cache occupancy: {cache.occupancy:.1%}")

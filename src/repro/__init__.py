@@ -1,0 +1,9 @@
+"""LangCache — semantic caching for LLM serving (Gill et al. 2025) as a
+multi-pod JAX training/serving framework.
+
+Packages: configs (arch registry), models (backbone zoo), core (the
+paper's cache/losses/trainer/synth), data, training, serving, kernels
+(Pallas), launch (mesh/sharding/dryrun/roofline).
+"""
+
+__version__ = "1.0.0"

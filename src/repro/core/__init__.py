@@ -1,0 +1,43 @@
+"""The paper's primary contribution: the semantic cache — embedding
+model + vector store + threshold policy — plus its training objective
+(online contrastive loss), fine-tuning recipe, evaluation metrics, and
+the synthetic data generation pipeline."""
+from repro.core.cache import SemanticCache
+from repro.core.losses import (
+    contrastive_loss, cosine_distance, hard_pair_fractions,
+    online_contrastive_loss,
+)
+from repro.core.metrics import (
+    average_precision, metrics_at_threshold, pair_classification_metrics,
+)
+from repro.core.store import (
+    QueryResult, StoreState, evict_older_than, init_store, insert,
+    insert_batch, occupancy, query, store_axes, touch,
+)
+from repro.core.synth import (
+    LLMGenerator, SynthRecord, TemplateGenerator, export_jsonl,
+    generate_synthetic_pairs, import_jsonl, records_to_dataset,
+)
+from repro.core.trainer import EmbedderTrainer, FinetuneConfig
+from repro.core.embedders import (
+    EncoderEmbedder, HashNgramEmbedder, RandomProjectionEmbedder,
+)
+from repro.core.ivf import IVFState, build_ivf, ivf_occupancy, ivf_query
+from repro.core.calibration import (
+    Calibration, calibrate_for_false_hit_budget, calibrate_for_precision,
+)
+
+__all__ = [
+    "SemanticCache", "contrastive_loss", "cosine_distance",
+    "hard_pair_fractions", "online_contrastive_loss", "average_precision",
+    "metrics_at_threshold", "pair_classification_metrics", "QueryResult",
+    "StoreState", "evict_older_than", "init_store", "insert", "insert_batch",
+    "occupancy", "query", "store_axes", "touch", "LLMGenerator",
+    "SynthRecord", "TemplateGenerator", "export_jsonl",
+    "generate_synthetic_pairs", "import_jsonl", "records_to_dataset",
+    "EmbedderTrainer", "FinetuneConfig",
+    "EncoderEmbedder", "HashNgramEmbedder", "RandomProjectionEmbedder",
+    "IVFState", "build_ivf", "ivf_occupancy", "ivf_query",
+    "Calibration", "calibrate_for_false_hit_budget",
+    "calibrate_for_precision",
+]

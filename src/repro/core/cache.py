@@ -1,0 +1,70 @@
+"""SemanticCache — the paper's artifact, assembled.
+
+Embedding model (compact fine-tuned encoder) + vector store + threshold
+policy.  The device half (store state, query/insert/touch) is pure JAX;
+this class is the thin host orchestration that also owns the response
+strings (which never live on device).
+
+Usage (see examples/serve_with_cache.py):
+
+    cache = SemanticCache(capacity=4096, dim=768, threshold=0.85)
+    hits, scores, values = cache.lookup(embeddings)     # (B, D)
+    cache.insert(miss_embeddings, miss_responses)
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import store as store_lib
+
+
+class SemanticCache:
+    def __init__(self, capacity: int, dim: int, threshold: float = 0.85,
+                 topk: int = 1, ttl: Optional[int] = None):
+        self.capacity = capacity
+        self.dim = dim
+        self.threshold = threshold
+        self.topk = topk
+        self.ttl = ttl
+        self.state = store_lib.init_store(capacity, dim)
+        self.responses: List[str] = []
+        self._query = jax.jit(
+            lambda st, q: store_lib.query(st, q, threshold, topk))
+        self._insert = jax.jit(store_lib.insert_batch)
+        self._touch = jax.jit(store_lib.touch)
+        self._evict = (jax.jit(lambda st: store_lib.evict_older_than(st, ttl))
+                       if ttl else None)
+
+    # ------------------------------------------------------------------
+    def lookup(self, embs) -> Tuple[np.ndarray, np.ndarray, List[Optional[str]]]:
+        """embs: (B, D).  Returns (hit (B,) bool, score (B,), values)."""
+        if self._evict is not None:
+            self.state = self._evict(self.state)
+        res = self._query(self.state, jnp.asarray(embs))
+        self.state = self._touch(self.state, res.slots[:, 0], res.hit)
+        hit = np.asarray(res.hit)
+        scores = np.asarray(res.scores[:, 0])
+        vids = np.asarray(res.value_ids[:, 0])
+        values = [self.responses[v] if h and 0 <= v < len(self.responses)
+                  else None for h, v in zip(hit, vids)]
+        return hit, scores, values
+
+    def insert(self, embs, responses: Sequence[str]) -> None:
+        embs = np.asarray(embs)
+        assert embs.shape[0] == len(responses)
+        base = len(self.responses)
+        self.responses.extend(responses)
+        vids = jnp.arange(base, base + len(responses), dtype=jnp.int32)
+        self.state = self._insert(self.state, jnp.asarray(embs), vids)
+
+    # ------------------------------------------------------------------
+    @property
+    def occupancy(self) -> float:
+        return float(store_lib.occupancy(self.state))
+
+    def __len__(self) -> int:
+        return int(np.asarray(self.state.valid).sum())

@@ -1,0 +1,71 @@
+"""Threshold calibration for deployed caches.
+
+The paper evaluates at the best-F1 threshold; a production cache
+operator instead fixes a FALSE-HIT budget (serving a wrong answer is
+much worse than a miss) and wants the loosest threshold that respects
+it.  Given scored eval pairs, these utilities map an operating
+constraint to a threshold with held-out estimates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class Calibration:
+    threshold: float
+    expected_precision: float
+    expected_recall: float
+    false_hit_rate: float      # P(score >= thr | negative)
+    true_hit_rate: float       # P(score >= thr | positive)
+
+
+def calibrate_for_precision(scores, labels, min_precision: float = 0.95
+                            ) -> Calibration:
+    """Loosest threshold whose eval precision >= min_precision."""
+    scores = np.asarray(scores, np.float64)
+    labels = np.asarray(labels, np.int32)
+    order = np.argsort(-scores, kind="stable")
+    lab = labels[order]
+    tp = np.cumsum(lab)
+    fp = np.cumsum(1 - lab)
+    precision = tp / np.maximum(tp + fp, 1)
+    n_pos = max(int(labels.sum()), 1)
+    n_neg = max(int((1 - labels).sum()), 1)
+    ok = np.nonzero(precision >= min_precision)[0]
+    if len(ok) == 0:
+        i = 0  # strictest: only the single top score
+    else:
+        i = ok[-1]
+    thr = float(scores[order][i])
+    return Calibration(
+        threshold=thr,
+        expected_precision=float(precision[i]),
+        expected_recall=float(tp[i] / n_pos),
+        false_hit_rate=float(fp[i] / n_neg),
+        true_hit_rate=float(tp[i] / n_pos),
+    )
+
+
+def calibrate_for_false_hit_budget(scores, labels, max_false_hit_rate: float
+                                   = 0.01) -> Calibration:
+    """Loosest threshold with P(hit | negative) <= budget."""
+    scores = np.asarray(scores, np.float64)
+    labels = np.asarray(labels, np.int32)
+    neg = np.sort(scores[labels == 0])
+    n_neg = max(len(neg), 1)
+    # threshold just above the (1-budget) negative quantile
+    idx = int(np.ceil((1.0 - max_false_hit_rate) * n_neg))
+    thr = float(neg[min(idx, n_neg - 1)] + 1e-9) if n_neg else 1.0
+    pos = scores[labels == 1]
+    tp = float((pos >= thr).sum())
+    fp = float((scores[labels == 0] >= thr).sum())
+    return Calibration(
+        threshold=thr,
+        expected_precision=tp / max(tp + fp, 1.0),
+        expected_recall=tp / max(len(pos), 1),
+        false_hit_rate=fp / n_neg,
+        true_hit_rate=tp / max(len(pos), 1),
+    )

@@ -1,0 +1,100 @@
+"""Baseline embedders — local stand-ins for the paper's comparison rows.
+
+The paper compares LangCache-Embed against OpenAI/Cohere/Titan APIs and
+7B-class open models, none of which are callable offline.  These
+baselines span the same design space (DESIGN.md §5):
+
+  * ``EncoderEmbedder``  — an *untuned* JAX encoder (any registry
+    config).  The untuned ModernBERT config IS the paper's true base
+    row; a scaled-up untuned config plays the "big general model" row.
+  * ``HashNgramEmbedder`` — character-3-gram hashing (classic cheap
+    lexical baseline; roughly what a BM25-ish cache key gives you).
+  * ``RandomProjectionEmbedder`` — mean-pooled random token projections
+    (the floor: position-free lexical identity only).
+
+All expose ``embed(list[str]) -> (B, D) float32`` (unit-norm) plus a
+``name`` for the benchmark tables.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import HashTokenizer
+from repro.models import encode, init_lm, split
+
+
+def _l2(x: np.ndarray) -> np.ndarray:
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+class EncoderEmbedder:
+    def __init__(self, cfg: ModelConfig, params=None, max_len: int = 32,
+                 name: str | None = None, seed: int = 0):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.name = name or f"encoder:{cfg.name}(untuned)"
+        if params is None:
+            params, _ = split(init_lm(cfg, jax.random.PRNGKey(seed)))
+        self.params = params
+        self.tok = HashTokenizer(vocab_size=cfg.vocab_size)
+        self._encode = jax.jit(lambda p, t, m: encode(p, cfg, t, m))
+
+    def embed(self, texts: List[str], batch_size: int = 64) -> np.ndarray:
+        out = []
+        for i in range(0, len(texts), batch_size):
+            chunk = list(texts[i:i + batch_size])
+            n = len(chunk)
+            while len(chunk) < batch_size:
+                chunk.append("")
+            ids, mask = self.tok.encode_batch(chunk, self.max_len)
+            e = self._encode(self.params, jnp.asarray(ids), jnp.asarray(mask))
+            out.append(np.asarray(e)[:n])
+        return np.concatenate(out, 0)
+
+
+class HashNgramEmbedder:
+    name = "hash-3gram"
+
+    def __init__(self, dim: int = 768):
+        self.dim = dim
+
+    def embed(self, texts: List[str], batch_size: int = 0) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            s = f"  {t.lower()}  "
+            for j in range(len(s) - 2):
+                g = s[j:j + 3]
+                h = hash_3gram(g)
+                out[i, h % self.dim] += 1.0 if (h >> 16) % 2 else -1.0
+        return _l2(out)
+
+
+def hash_3gram(g: str) -> int:
+    h = 0xCBF29CE484222325
+    for b in g.encode("utf-8"):
+        h = ((h ^ b) * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+class RandomProjectionEmbedder:
+    name = "random-projection"
+
+    def __init__(self, dim: int = 768, vocab: int = 50368, seed: int = 0):
+        self.dim = dim
+        self.tok = HashTokenizer(vocab_size=vocab)
+        rng = np.random.default_rng(seed)
+        self.proj = rng.standard_normal((vocab, dim)).astype(np.float32)
+        self.proj /= np.sqrt(dim)
+
+    def embed(self, texts: List[str], batch_size: int = 0) -> np.ndarray:
+        out = np.zeros((len(texts), self.dim), np.float32)
+        for i, t in enumerate(texts):
+            ids, mask = self.tok.encode(t, 32)
+            v = self.proj[ids[mask]].mean(0) if mask.any() else np.zeros(self.dim)
+            out[i] = v
+        return _l2(out)

@@ -1,0 +1,81 @@
+"""Contrastive objectives for duplicate-query embedding fine-tuning.
+
+``online_contrastive_loss`` is the paper's training objective
+(sentence-transformers' OnlineContrastiveLoss): within each batch, only
+the *hard* pairs contribute —
+
+  hard positives: duplicate pairs whose cosine distance exceeds the
+                  smallest negative distance in the batch;
+  hard negatives: distinct pairs whose distance is below the largest
+                  positive distance.
+
+The reference torch implementation selects these with boolean indexing
+(dynamic shapes).  XLA requires static shapes, so we compute identical
+math with *masked reductions* (DESIGN.md §3) — same gradients, jittable,
+and shardable under pjit.  ``contrastive_loss`` (all pairs weighted
+equally) is kept as the paper's implicit baseline objective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_distance(e1, e2):
+    """1 - cosine similarity.  e1,e2: (B, D)."""
+    e1 = e1.astype(jnp.float32)
+    e2 = e2.astype(jnp.float32)
+    num = jnp.sum(e1 * e2, axis=-1)
+    den = jnp.linalg.norm(e1, axis=-1) * jnp.linalg.norm(e2, axis=-1)
+    return 1.0 - num / jnp.maximum(den, 1e-9)
+
+
+def contrastive_loss(e1, e2, labels, margin: float = 0.5):
+    """Classic (non-online) contrastive loss — every pair contributes."""
+    d = cosine_distance(e1, e2)
+    lab = labels.astype(jnp.float32)
+    pos = lab * jnp.square(d)
+    neg = (1.0 - lab) * jnp.square(jnp.maximum(margin - d, 0.0))
+    return 0.5 * jnp.mean(pos + neg)
+
+
+def online_contrastive_loss(e1, e2, labels, margin: float = 0.5):
+    """Hard-pair-mined contrastive loss (static-shape formulation).
+
+    e1, e2: (B, D) embeddings of the two queries in each pair;
+    labels: (B,) 1 = duplicate, 0 = distinct.
+    """
+    d = cosine_distance(e1, e2)                      # (B,)
+    is_pos = labels.astype(bool)
+    is_neg = ~is_pos
+    big = jnp.asarray(1e9, jnp.float32)
+
+    any_pos = jnp.any(is_pos)
+    any_neg = jnp.any(is_neg)
+    # batch statistics over the *other* class
+    min_neg = jnp.min(jnp.where(is_neg, d, big))     # smallest negative dist
+    max_pos = jnp.max(jnp.where(is_pos, d, -big))    # largest positive dist
+
+    # hard-pair masks; if the opposite class is absent, fall back to all
+    # pairs of the class (matches the torch implementation's behaviour)
+    hard_pos = is_pos & (jnp.where(any_neg, d > min_neg, True))
+    hard_neg = is_neg & (jnp.where(any_pos, d < max_pos, True))
+
+    pos_loss = jnp.sum(jnp.square(d) * hard_pos.astype(jnp.float32))
+    neg_loss = jnp.sum(
+        jnp.square(jnp.maximum(margin - d, 0.0)) * hard_neg.astype(jnp.float32))
+    # normalise by batch for lr stability across batch sizes
+    return (pos_loss + neg_loss) / d.shape[0]
+
+
+def hard_pair_fractions(e1, e2, labels, margin: float = 0.5):
+    """Diagnostics: fraction of pairs that are 'hard' (for EXPERIMENTS)."""
+    d = cosine_distance(e1, e2)
+    is_pos = labels.astype(bool)
+    is_neg = ~is_pos
+    big = jnp.asarray(1e9, jnp.float32)
+    min_neg = jnp.min(jnp.where(is_neg, d, big))
+    max_pos = jnp.max(jnp.where(is_pos, d, -big))
+    hp = jnp.sum(is_pos & (d > min_neg)) / jnp.maximum(jnp.sum(is_pos), 1)
+    hn = jnp.sum(is_neg & (d < max_pos)) / jnp.maximum(jnp.sum(is_neg), 1)
+    return {"hard_pos_frac": hp, "hard_neg_frac": hn}

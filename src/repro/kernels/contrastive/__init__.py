@@ -1,0 +1,3 @@
+from repro.kernels.contrastive.ops import online_contrastive_loss
+
+__all__ = ["online_contrastive_loss"]

@@ -1,0 +1,55 @@
+"""Dispatch wrapper assembling the online-contrastive scalar loss from
+the fused kernel's components (same fallback semantics as core.losses)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.contrastive import kernel as _kernel
+from repro.kernels.contrastive import ref as _ref
+
+
+@functools.lru_cache(maxsize=1)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def online_contrastive_loss(e1, e2, labels, margin: float = 0.5, *,
+                            use_kernel: bool | None = None):
+    """Scalar loss identical to core.losses.online_contrastive_loss.
+
+    Note: the fused kernel is a forward-value fast path (serving-side
+    eval / mining diagnostics).  Training uses the jnp formulation whose
+    VJP XLA derives automatically.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    comp = (_kernel.contrastive_components if use_kernel
+            else _ref.contrastive_components)
+    if use_kernel:
+        pos_loss, neg_loss, min_neg, max_pos = comp(
+            e1, e2, labels, margin=margin, interpret=not _on_tpu())
+    else:
+        pos_loss, neg_loss, min_neg, max_pos = comp(e1, e2, labels,
+                                                    margin=margin)
+    is_pos = labels.astype(bool)
+    any_pos = jnp.any(is_pos)
+    any_neg = jnp.any(~is_pos)
+    # fallback (all pairs of a class) when the opposite class is absent
+    d = _ref_distance(e1, e2)
+    all_pos = jnp.sum(jnp.square(d) * is_pos.astype(jnp.float32))
+    all_neg = jnp.sum(jnp.square(jnp.maximum(margin - d, 0.0)) *
+                      (~is_pos).astype(jnp.float32))
+    pos_loss = jnp.where(any_neg, pos_loss, all_pos)
+    neg_loss = jnp.where(any_pos, neg_loss, all_neg)
+    return (pos_loss + neg_loss) / e1.shape[0]
+
+
+def _ref_distance(e1, e2):
+    e1 = e1.astype(jnp.float32)
+    e2 = e2.astype(jnp.float32)
+    num = jnp.sum(e1 * e2, axis=-1)
+    den = jnp.linalg.norm(e1, axis=-1) * jnp.linalg.norm(e2, axis=-1)
+    return 1.0 - num / jnp.maximum(den, 1e-9)

@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the fused online-contrastive loss kernel.
+
+Returns the *components* (pos_loss_sum, neg_loss_sum, min_neg, max_pos)
+— the op wrapper assembles the final scalar exactly like
+repro.core.losses.online_contrastive_loss.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+BIG = 1e9
+
+
+def contrastive_components(e1, e2, labels, margin: float = 0.5):
+    e1 = e1.astype(jnp.float32)
+    e2 = e2.astype(jnp.float32)
+    num = jnp.sum(e1 * e2, axis=-1)
+    den = jnp.linalg.norm(e1, axis=-1) * jnp.linalg.norm(e2, axis=-1)
+    d = 1.0 - num / jnp.maximum(den, 1e-9)
+    is_pos = labels.astype(bool)
+    is_neg = ~is_pos
+    min_neg = jnp.min(jnp.where(is_neg, d, BIG))
+    max_pos = jnp.max(jnp.where(is_pos, d, -BIG))
+    hard_pos = is_pos & (d > min_neg)
+    hard_neg = is_neg & (d < max_pos)
+    pos_loss = jnp.sum(jnp.square(d) * hard_pos)
+    neg_loss = jnp.sum(jnp.square(jnp.maximum(margin - d, 0.0)) * hard_neg)
+    return pos_loss, neg_loss, min_neg, max_pos

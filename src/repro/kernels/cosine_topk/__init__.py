@@ -1,0 +1,3 @@
+from repro.kernels.cosine_topk.ops import cosine_topk
+
+__all__ = ["cosine_topk"]

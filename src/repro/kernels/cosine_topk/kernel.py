@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused cosine-similarity top-k over a blocked corpus.
+
+The semantic cache's serving hot path (DESIGN.md §3).  The corpus is
+streamed through VMEM in (BLOCK_N × D) tiles; the query tile stays
+resident; the MXU computes the (Q × BLOCK_N) score panel; and a running
+top-k (scores+indices) is carried in VMEM scratch across grid steps —
+the (Q × N) score matrix never exists in HBM.
+
+Top-k selection uses k rounds of masked argmax (k is small for cache
+lookup, typically 1-4), which vectorises on the VPU — no sort network.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_N = 512
+
+
+def _select_topk(scores, idx, k):
+    """scores: (Q, M) candidates with global indices idx (Q, M) ->
+    (Q, k) best by k rounds of masked argmax (unrolled, k small)."""
+    out_s, out_i = [], []
+    for _ in range(k):
+        best = jnp.argmax(scores, axis=-1)                       # (Q,)
+        rows = jnp.arange(scores.shape[0])
+        out_s.append(scores[rows, best])
+        out_i.append(idx[rows, best])
+        scores = scores.at[rows, best].set(NEG_INF)
+    return jnp.stack(out_s, -1), jnp.stack(out_i, -1)
+
+
+def _kernel(q_ref, keys_ref, valid_ref, out_s_ref, out_i_ref,
+            acc_s, acc_i, *, k: int, block_n: int, n_total: int):
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s[...] = jnp.full_like(acc_s, NEG_INF)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    q = q_ref[...].astype(jnp.float32)                # (Q, D)
+    kblk = keys_ref[...].astype(jnp.float32)          # (BN, D)
+    valid = valid_ref[...]                            # (BN,)
+    s = jax.lax.dot_general(q, kblk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, BN)
+    col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = valid[None, :] & (col < n_total)
+    s = jnp.where(ok, s, NEG_INF)
+
+    blk_s, blk_rel = _select_topk(s, col, k)          # (Q, k) each
+    cand_s = jnp.concatenate([acc_s[...], blk_s], axis=-1)   # (Q, 2k)
+    cand_i = jnp.concatenate([acc_i[...], blk_rel], axis=-1)
+    new_s, new_i = _select_topk(cand_s, cand_i, k)
+    acc_s[...] = new_s
+    acc_i[...] = new_i
+
+    @pl.when(j == nb - 1)
+    def _done():
+        out_s_ref[...] = acc_s[...]
+        out_i_ref[...] = acc_i[...]
+
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "interpret"))
+def cosine_topk(q, keys, valid, k: int = 1, *,
+                block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """q: (Q, D); keys: (N, D); valid: (N,).  -> ((Q,k) scores, (Q,k) idx)."""
+    Q, D = q.shape
+    N = keys.shape[0]
+    bn = min(block_n, N)
+    n_blocks = -(-N // bn)
+    pad = n_blocks * bn - N
+    if pad:
+        keys = jnp.pad(keys, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, (0, pad))
+
+    grid = (n_blocks,)
+    out_shape = (jax.ShapeDtypeStruct((Q, k), jnp.float32),
+                 jax.ShapeDtypeStruct((Q, k), jnp.int32))
+    fn = pl.pallas_call(
+        functools.partial(_kernel, k=k, block_n=bn, n_total=N),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((Q, D), lambda j: (0, 0)),
+            pl.BlockSpec((bn, D), lambda j: (j, 0)),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+        ],
+        out_specs=(pl.BlockSpec((Q, k), lambda j: (0, 0)),
+                   pl.BlockSpec((Q, k), lambda j: (0, 0))),
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((Q, k), jnp.float32),
+            pltpu.VMEM((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    return fn(q, keys, valid)

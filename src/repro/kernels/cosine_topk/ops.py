@@ -1,0 +1,34 @@
+"""jit'd dispatch wrapper for the cosine top-k lookup.
+
+Chooses the Pallas kernel on TPU (or interpret mode when asked) and the
+pure-jnp oracle otherwise.  Both paths share the exact signature, so the
+vector store is agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cosine_topk import kernel as _kernel
+from repro.kernels.cosine_topk import ref as _ref
+
+
+@functools.lru_cache(maxsize=1)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cosine_topk(q, keys, valid, k: int = 1, *, use_kernel: bool | None = None,
+                block_n: int = _kernel.DEFAULT_BLOCK_N):
+    """q: (Q,D); keys: (N,D); valid: (N,) -> ((Q,k) scores, (Q,k) int32 idx).
+
+    use_kernel: None -> kernel on TPU, oracle elsewhere (interpret-mode
+    kernels are for correctness tests, not the CPU hot path).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return _kernel.cosine_topk(q, keys, valid, k, block_n=block_n,
+                                   interpret=not _on_tpu())
+    return _ref.cosine_topk(q, keys, valid, k)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the cosine top-k cache lookup."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def cosine_topk(q, keys, valid, k: int = 1):
+    """q: (Q, D) unit-norm queries; keys: (N, D) unit-norm corpus;
+    valid: (N,) bool.  Returns (scores (Q,k) desc, indices (Q,k))."""
+    scores = q.astype(jnp.float32) @ keys.astype(jnp.float32).T   # (Q, N)
+    scores = jnp.where(valid[None, :], scores, NEG_INF)
+    top_scores, top_idx = jax.lax.top_k(scores, k)
+    return top_scores, top_idx.astype(jnp.int32)

@@ -1,0 +1,30 @@
+"""Dispatch wrapper for flash-decode attention (model layout in/out)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.decode_attention import kernel as _kernel
+from repro.kernels.decode_attention import ref as _ref
+
+
+@functools.lru_cache(maxsize=1)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def decode_attention(q, k, v, kv_valid, *, use_kernel: bool | None = None,
+                     block_l: int = _kernel.DEFAULT_BLOCK_L):
+    """q: (B, 1, H, hd) single step (model layout); k, v: (B, L, KV, hd);
+    kv_valid: (B, L).  Returns (B, 1, H, hd)."""
+    q3 = q[:, 0]
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        o = _kernel.decode_attention(q3, k, v, kv_valid,
+                                     block_l=block_l,
+                                     interpret=not _on_tpu())
+    else:
+        o = _ref.decode_attention(q3, k, v, kv_valid)
+    return o[:, None]

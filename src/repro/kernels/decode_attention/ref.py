@@ -1,0 +1,21 @@
+"""Pure-jnp oracle: single-token GQA decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention(q, k, v, kv_valid):
+    """q: (B, H, hd) one query token; k, v: (B, L, KV, hd) cache;
+    kv_valid: (B, L) bool.  Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgh,blkh->bkgl", qg, k.astype(jnp.float32))
+    s = jnp.where(kv_valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgl,blkh->bkgh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

@@ -1,0 +1,38 @@
+"""Dispatch wrapper: Pallas flash attention on TPU, XLA fallback else.
+
+Accepts the model-layout tensors (B, S, H, hd) used by
+repro.models.attention and handles the transpose to kernel layout.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import kernel as _kernel
+from repro.kernels.flash_attention import ref as _ref
+
+
+@functools.lru_cache(maxsize=1)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    use_kernel: bool | None = None,
+                    block_q: int = _kernel.DEFAULT_BLOCK_Q,
+                    block_kv: int = _kernel.DEFAULT_BLOCK_KV):
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) -> (B, Sq, H, hd)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        ot = _kernel.flash_attention(qt, kt, vt, causal=causal, window=window,
+                                     block_q=block_q, block_kv=block_kv,
+                                     interpret=not _on_tpu())
+    else:
+        ot = _ref.flash_attention(qt, kt, vt, causal=causal, window=window)
+    return ot.transpose(0, 2, 1, 3)

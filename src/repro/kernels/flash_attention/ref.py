@@ -1,0 +1,32 @@
+"""Pure-jnp oracle: dense masked softmax attention (GQA-aware)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, Sq, hd); k, v: (B, KV, Skv, hd).  Returns (B, H, Sq, hd).
+
+    Positions are implicit (q row i is absolute position i; same for kv).
+    """
+    B, H, Sq, hd = q.shape
+    KV, Skv = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32) * hd ** -0.5
+    s = jnp.einsum("bkgqh,bksh->bkgqs", qg, k.astype(jnp.float32))
+    row = jnp.arange(Sq)[:, None]
+    col = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((Sq, Skv), bool)
+    if causal:
+        ok &= col <= row
+    if window > 0:
+        ok &= (row - col) < window
+        if not causal:
+            ok &= (col - row) < window
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksh->bkgqh", w, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,18 @@
+"""Distributed launch layer: production mesh, logical-axis sharding
+rules, the multi-pod dry-run, roofline extraction, and the train/serve
+launchers.  NOTE: do not import repro.launch.dryrun from library code —
+it sets XLA_FLAGS at import time by design."""
+from repro.launch.mesh import (
+    HBM_BANDWIDTH, ICI_LINK_BANDWIDTH, PEAK_FLOPS_BF16, make_host_mesh,
+    make_production_mesh,
+)
+from repro.launch.sharding import (
+    RULE_SETS, SERVE_RULES, TRAIN_RULES, resolve_pspec, sharded_bytes,
+    sharding_tree,
+)
+
+__all__ = [
+    "HBM_BANDWIDTH", "ICI_LINK_BANDWIDTH", "PEAK_FLOPS_BF16",
+    "make_host_mesh", "make_production_mesh", "RULE_SETS", "SERVE_RULES",
+    "TRAIN_RULES", "resolve_pspec", "sharded_bytes", "sharding_tree",
+]

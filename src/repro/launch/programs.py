@@ -1,0 +1,215 @@
+"""Program builders for the dry-run and launchers.
+
+``build_program(cfg, shape)`` assembles, for one (architecture × input
+shape), the pure function to lower plus abstract (ShapeDtypeStruct)
+arguments and their logical-axes trees:
+
+  train_4k     -> train_step(params, opt_state, batch)
+  prefill_32k  -> prefill(params, batch)          (serve_step, prompt)
+  decode_32k   -> decode_step(params, state, tok) (serve_step, 1 token)
+  long_500k    -> decode_step with a 524288-token state; pure-attention
+                  archs switch to the sliding-window variant
+                  (cfg.for_long_context()), SSM/hybrids run natively.
+
+Nothing here allocates device memory — the 398B config lowers from
+structs only.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN, INPUT_SHAPES, ModelConfig, ShapeConfig
+from repro.models import (
+    decode_step, init_lm_state, lm_param_specs, lm_state_axes, prefill,
+)
+from repro.models.param import A
+from repro.training.optim import AdamState, adamw
+from repro.training.train import make_train_step
+
+BIG_MODEL_PARAMS = 100e9   # above this, Adam moments go bf16
+
+
+@dataclass
+class Program:
+    name: str
+    cfg: ModelConfig
+    shape: ShapeConfig
+    fn: Callable
+    args: Tuple[Any, ...]        # SDS trees
+    arg_axes: Tuple[Any, ...]    # encoded-axes trees
+    out_axes: Any                # encoded-axes tree matching fn output
+
+
+def resolve_config(cfg: ModelConfig, shape: ShapeConfig,
+                   unroll: bool = True) -> ModelConfig:
+    if (shape.name == "long_500k"
+            and all(s.mixer == ATTN for s in cfg.period)):
+        # pure-attention archs need the bounded-window variant at 500k
+        cfg = cfg.for_long_context()
+    if unroll:
+        # Unrolled layers + inner chunks for honest cost_analysis (XLA
+        # counts while-loop bodies once; see ModelConfig.scan_layers).
+        cfg = cfg.replace(scan_layers=False, unroll_inner=True, remat=False)
+    return cfg
+
+
+def _batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Token (+ frontend stub) specs; frontend tokens count toward S."""
+    B, S = shape.global_batch, shape.seq_len
+    s_tok = S - (cfg.frontend_len if cfg.frontend else 0)
+    batch = {"tokens": jax.ShapeDtypeStruct((B, s_tok), jnp.int32)}
+    axes = {"tokens": A("batch", "seq")}
+    if cfg.frontend:
+        batch["frontend_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.dtype))
+        axes["frontend_embeds"] = A("batch", "seq", "embed")
+    return batch, axes
+
+
+def _opt_axes(param_axes):
+    return AdamState(step=A(), m=param_axes, v=param_axes)
+
+
+def _metric_axes(tree):
+    return jax.tree_util.tree_map(lambda _: A(), tree)
+
+
+def build_program(cfg: ModelConfig, shape: ShapeConfig,
+                  unroll: bool = True, overrides: dict | None = None
+                  ) -> Program:
+    cfg = resolve_config(cfg, shape, unroll=unroll)
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    pv, pax = lm_param_specs(cfg)
+
+    if shape.kind == "train":
+        state_dtype = (jnp.bfloat16 if cfg.param_count() > BIG_MODEL_PARAMS
+                       else None)
+        init_opt, update = adamw(3e-4, max_grad_norm=1.0,
+                                 state_dtype=state_dtype)
+        opt = init_opt(pv)
+        batch, batch_axes = _batch_specs(cfg, shape)
+        fn = make_train_step(cfg, update)
+        args = (pv, opt, batch)
+        arg_axes = (pax, _opt_axes(pax), batch_axes)
+        out_sds = jax.eval_shape(fn, *args)
+        out_axes = (pax, _opt_axes(pax), _metric_axes(out_sds[2]))
+        return Program("train_step", cfg, shape, fn, args, arg_axes, out_axes)
+
+    if shape.kind == "prefill":
+        batch, batch_axes = _batch_specs(cfg, shape)
+        cache_len = shape.seq_len
+
+        def fn(pv_, batch_):
+            return prefill(pv_, cfg, batch_["tokens"], cache_len,
+                           batch_.get("frontend_embeds"))
+
+        args = (pv, batch)
+        arg_axes = (pax, batch_axes)
+        out_axes = (A("batch", "vocab"), lm_state_axes(cfg))
+        return Program("serve_prefill", cfg, shape, fn, args, arg_axes,
+                       out_axes)
+
+    if shape.kind == "decode":
+        B = shape.global_batch
+        state = init_lm_state(cfg, B, shape.seq_len, abstract=True)
+        tok = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+
+        def fn(pv_, state_, tok_):
+            return decode_step(pv_, cfg, state_, tok_)
+
+        args = (pv, state, tok)
+        arg_axes = (pax, lm_state_axes(cfg), A("batch", "seq"))
+        out_axes = (A("batch", "vocab"), lm_state_axes(cfg))
+        return Program("serve_decode", cfg, shape, fn, args, arg_axes,
+                       out_axes)
+
+    raise ValueError(shape.kind)
+
+
+# ---------------------------------------------------------------------------
+# The paper's own serving step: semantic-cache lookup at pod scale
+# ---------------------------------------------------------------------------
+
+CACHE_SHAPE = ShapeConfig("cache_lookup", "cache", 64, 1024)  # 64-tok queries
+CACHE_CAPACITY = 1_048_576     # 1M cached queries
+
+
+def build_cache_program(corpus: int = CACHE_CAPACITY,
+                        batch: int = CACHE_SHAPE.global_batch,
+                        max_len: int = CACHE_SHAPE.seq_len,
+                        variant: str = "auto",
+                        keys_dtype=jnp.float32,
+                        multi_pod: bool = False,
+                        overrides: dict | None = None) -> Program:
+    """cache_serve(params, store, tokens, mask) -> (hit, scores, slots).
+
+    Embeds a batch of queries with the encoder (modernbert-149m) and
+    queries a 1M-entry store sharded over the `model` axis — the
+    distributed analogue of the paper's Redis lookup (DESIGN.md §3).
+    EXTRA program beyond the 40 assigned pairs: this is the technique's
+    own hot path, used as the third hillclimb target.
+
+    variant: 'auto' = GSPMD auto-partitioned lookup (baseline);
+    'shardmap' = explicit local-topk + tiny-merge schedule
+    (store.query_sharded, the beyond-paper optimization).
+    """
+    from repro.configs import get_config
+    from repro.core.store import (
+        StoreState, query as store_query, query_sharded, store_axes,
+    )
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import encode
+
+    cfg = get_config("modernbert-149m").replace(
+        scan_layers=False, unroll_inner=True, remat=False,
+        **(overrides or {}))
+    pv, pax = lm_param_specs(cfg)
+    d = cfg.d_model
+    store = StoreState(
+        keys=jax.ShapeDtypeStruct((corpus, d), keys_dtype),
+        valid=jax.ShapeDtypeStruct((corpus,), jnp.bool_),
+        last_used=jax.ShapeDtypeStruct((corpus,), jnp.int32),
+        inserted_at=jax.ShapeDtypeStruct((corpus,), jnp.int32),
+        value_ids=jax.ShapeDtypeStruct((corpus,), jnp.int32),
+        clock=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    tokens = jax.ShapeDtypeStruct((batch, max_len), jnp.int32)
+    mask = jax.ShapeDtypeStruct((batch, max_len), jnp.bool_)
+
+    if variant == "shardmap":
+        mesh = make_production_mesh(multi_pod=multi_pod)
+
+        def fn(pv_, store_, tokens_, mask_):
+            emb = encode(pv_, cfg, tokens_, mask_)
+            res = query_sharded(store_, emb, threshold=0.9, k=1, mesh=mesh)
+            return res.hit, res.scores, res.slots
+    else:
+        def fn(pv_, store_, tokens_, mask_):
+            emb = encode(pv_, cfg, tokens_, mask_)
+            res = store_query(store_, emb, threshold=0.9, k=1)
+            return res.hit, res.scores, res.slots
+
+    args = (pv, store, tokens, mask)
+    arg_axes = (pax, store_axes(), A("batch", "seq"), A("batch", "seq"))
+    out_axes = (A("batch"), A("batch", "."), A("batch", "."))
+    shape = CACHE_SHAPE
+    return Program(f"cache_serve_{variant}", cfg, shape, fn, args, arg_axes,
+                   out_axes)
+
+
+def get_program(arch: str, shape_name: str, unroll: bool = True,
+                overrides: dict | None = None,
+                multi_pod: bool = False) -> Program:
+    from repro.configs import get_config
+    if arch.startswith("langcache") or shape_name == "cache_lookup":
+        variant = "auto" if arch == "langcache" else "shardmap"
+        keys_dtype = jnp.bfloat16 if arch.endswith("-v3") else jnp.float32
+        return build_cache_program(variant=variant, keys_dtype=keys_dtype,
+                                   multi_pod=multi_pod, overrides=overrides)
+    return build_program(get_config(arch), INPUT_SHAPES[shape_name],
+                         unroll=unroll, overrides=overrides)

@@ -1,0 +1,151 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch × shape × mesh), in seconds (TPU v5e constants
+from launch/mesh.py):
+
+  compute    = per_device_HLO_FLOPs / PEAK_FLOPS_BF16
+  memory     = per_device_HLO_bytes / HBM_BANDWIDTH
+  collective = per_device_collective_bytes / ICI_LINK_BANDWIDTH
+
+XLA-CPU's ``cost_analysis()`` reports *per-partition* flops/bytes (the
+SPMD module is the per-device program), so no /chips is needed.
+Collective bytes are NOT in cost_analysis — we parse the optimized HLO
+text and sum operand/output sizes of every collective op, weighted by
+the standard ring-transfer factors with the replica-group size parsed
+per op.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from typing import Dict
+
+from repro.launch.mesh import (
+    HBM_BANDWIDTH, ICI_LINK_BANDWIDTH, PEAK_FLOPS_BF16,
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _line_output_bytes(line: str) -> int:
+    """Bytes of the op's output (left of the = sign)."""
+    lhs = line.split("=", 1)[0] + "=" + line.split("=", 1)[1]
+    # output shape is the first shape token after '= '
+    m = _SHAPE_RE.search(line.split("=", 1)[1])
+    if not m:
+        return 0
+    # tuple outputs: sum every shape up to the op name
+    rhs = line.split("=", 1)[1]
+    op_pos = min((rhs.find(c) for c in _COLLECTIVES if rhs.find(c) >= 0),
+                 default=-1)
+    head = rhs[:op_pos] if op_pos > 0 else rhs[:m.end()]
+    return sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(head))
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:  # iota format [num_groups,group_size]
+        return max(int(m.group(2)), 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> Dict[str, float]:
+    """Per-device bytes moved over ICI, by collective type (ring model).
+    Also records the top-8 largest individual collectives for §Perf
+    diagnosis (what exactly is being moved)."""
+    out: Dict[str, float] = defaultdict(float)
+    counts: Dict[str, int] = defaultdict(int)
+    top: list = []
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith("//") or "=" not in stripped:
+            continue
+        for op in _COLLECTIVES:
+            if re.search(rf"\b{op}(-start)?\(", stripped):
+                b = _line_output_bytes(stripped)
+                n = _group_size(stripped, n_devices)
+                if op == "all-reduce":
+                    moved = 2.0 * (n - 1) / max(n, 1) * b
+                elif op == "all-gather":
+                    moved = (n - 1) / max(n, 1) * b
+                elif op == "reduce-scatter":
+                    moved = (n - 1) * b            # output is the shard
+                elif op == "all-to-all":
+                    moved = (n - 1) / max(n, 1) * b
+                else:  # collective-permute
+                    moved = b
+                out[op] += moved
+                counts[op] += 1
+                m = _SHAPE_RE.search(stripped.split("=", 1)[1])
+                top.append((moved, op, m.group(0) if m else "?", n))
+                break
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["counts"] = dict(counts)  # type: ignore
+    top.sort(reverse=True)
+    out["top_ops"] = [  # type: ignore
+        {"moved_bytes": t[0], "op": t[1], "shape": t[2], "group": t[3]}
+        for t in top[:8]]
+    return dict(out)
+
+
+def roofline_terms(cost: dict, hlo_text: str, n_devices: int) -> dict:
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text, n_devices)
+    terms = {
+        "per_device_flops": flops,
+        "per_device_bytes": bytes_accessed,
+        "per_device_collective_bytes": coll["total"],
+        "collective_breakdown": {k: v for k, v in coll.items()
+                                 if k not in ("total", "counts", "top_ops")},
+        "collective_counts": coll.get("counts", {}),
+        "collective_top_ops": coll.get("top_ops", []),
+        "t_compute": flops / PEAK_FLOPS_BF16,
+        "t_memory": bytes_accessed / HBM_BANDWIDTH,
+        "t_collective": coll["total"] / ICI_LINK_BANDWIDTH,
+    }
+    dom = max(("compute", "memory", "collective"),
+              key=lambda k: terms[f"t_{k}"])
+    terms["bottleneck"] = dom
+    t_max = terms[f"t_{dom}"]
+    t_sum = terms["t_compute"] + terms["t_memory"] + terms["t_collective"]
+    terms["roofline_fraction"] = (terms["t_compute"] / t_max) if t_max else 0.0
+    terms["t_bound"] = t_max
+    return terms
+
+
+def model_flops(cfg, shape, n_layers_active=None) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (forward-only serving), with
+    N = active params for MoE."""
+    n = cfg.param_count(active_only=cfg.moe is not None)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch

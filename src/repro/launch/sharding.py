@@ -1,0 +1,155 @@
+"""Logical-axis -> mesh-axis resolution (GSPMD / MaxText style).
+
+Every parameter/state leaf carries encoded logical axes ("embed,mlp",
+"batch,cache,kv_heads,head_dim", ...).  Rules map logical names to mesh
+axes; resolution is *divisibility-aware* per tensor: a mesh axis that
+does not divide the dimension, or was already consumed by an earlier
+dimension of the same tensor, is dropped (replicated) rather than
+padded.  This is what makes qwen2.5's 40 heads (∤16) or granite's kv=1
+degrade gracefully, and what makes the KV-cache 'cache' axis
+automatically pick up the data axes exactly when the batch cannot use
+them (the long_500k batch=1 case) — see DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.models.param import decode_axes
+
+# ---------------------------------------------------------------------------
+# Rule sets
+# ---------------------------------------------------------------------------
+
+# training: FSDP over 'data' on the embed axis of every weight + tensor
+# parallel over 'model'; batch over (pod, data).
+TRAIN_RULES: Dict[str, tuple] = {
+    "batch": ("pod", "data"),
+    "embed": ("data",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "layers": (),
+    "cache": ("pod", "data"),
+    "conv": (),
+    "ssm": (),
+    "ssm_state": (),
+    "corpus": ("model",),
+}
+
+# serving: same tensor-parallel layout; weights additionally sharded over
+# 'data' (weight-stationary FSDP-for-inference keeps the 34B+ configs
+# within HBM; the §Perf loop revisits this for latency).
+SERVE_RULES = dict(TRAIN_RULES)
+
+# ---------------------------------------------------------------------------
+# §Perf hillclimb variants (EXPERIMENTS.md §Perf documents the deltas)
+# ---------------------------------------------------------------------------
+
+# H1: serving WITHOUT weight-FSDP — weights replicated across 'data',
+# sharded only over 'model'.  Hypothesis: kills the per-layer weight
+# all-gathers that dominate the collective term of prefill, at the cost
+# of 16x weight HBM (fine below ~100B params at bf16).
+SERVE_NOFSDP_RULES = dict(TRAIN_RULES)
+SERVE_NOFSDP_RULES["embed"] = ()
+
+# H2: sequence-sharded KV cache for decode — the cache-length axis gets
+# first claim on 'model' (flash-decode style partial-softmax combine).
+# Hypothesis: for GQA archs whose kv_heads don't divide the model axis
+# (kv=8 or 1 vs 16), the baseline replicates the KV cache 16x over
+# 'model'; seq-sharding cuts decode per-device KV bytes ~16x for a tiny
+# partial-attention all-reduce.
+SERVE_SEQSHARD_RULES = dict(TRAIN_RULES)
+SERVE_SEQSHARD_RULES["cache"] = ("model", "pod", "data")
+
+# H3 (cache_serve): the 149M encoder needs NO tensor parallelism — its
+# per-layer all-reduces dominate the lookup's collective term.  Pure
+# data-parallel encoder (weights replicated, 600MB), corpus sharded over
+# the otherwise-idle 'model' axis, local-topk + tiny merge.
+CACHE_DP_RULES = {**TRAIN_RULES,
+                  "embed": (), "heads": (), "kv_heads": (), "mlp": (),
+                  "vocab": (), "experts": ()}
+
+RULE_SETS = {
+    "train": TRAIN_RULES,
+    "serve": SERVE_RULES,
+    "serve_nofsdp": SERVE_NOFSDP_RULES,
+    "serve_seqshard": SERVE_SEQSHARD_RULES,
+    "cache_dp": CACHE_DP_RULES,
+}
+
+
+def resolve_pspec(shape, axes_str: str, mesh, rules: Dict[str, tuple]
+                  ) -> PartitionSpec:
+    axes = decode_axes(axes_str)
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} do not match shape {shape}")
+    # H4 (§Perf): 1-D parameter vectors (norm scales, biases) are tiny —
+    # sharding them makes GSPMD reshard the *activations* they touch
+    # (batch-replicating 8GB tensors around every norm).  Replicate all
+    # weight vectors except genuinely large ones.
+    if len(shape) == 1 and axes and axes[0] not in ("batch", "cache",
+                                                    "corpus", "seq"):
+        return PartitionSpec()
+    used = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        cand = rules.get(name, ()) if name else ()
+        if isinstance(cand, str):
+            cand = (cand,)
+        sel = [a for a in cand if a in mesh.shape and a not in used]
+        # drop trailing axes until the product divides the dimension
+        while sel and dim % math.prod(mesh.shape[a] for a in sel) != 0:
+            sel.pop()
+        if sel:
+            used.update(sel)
+            parts.append(tuple(sel) if len(sel) > 1 else sel[0])
+        else:
+            parts.append(None)
+    # trim trailing Nones (canonical form)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return PartitionSpec(*parts)
+
+
+def sharding_tree(values, axes_tree, mesh, rules=TRAIN_RULES):
+    """Map (value_tree, encoded_axes_tree) -> NamedSharding tree."""
+
+    def one(v, s):
+        return NamedSharding(mesh, resolve_pspec(v.shape, s, mesh, rules))
+
+    return jax.tree_util.tree_map(one, values, axes_tree)
+
+
+def scalar_sharding(mesh):
+    return NamedSharding(mesh, PartitionSpec())
+
+
+def replicate_tree(values, mesh):
+    return jax.tree_util.tree_map(lambda v: scalar_sharding(mesh), values)
+
+
+def sharded_bytes(values, axes_tree, mesh, rules=TRAIN_RULES) -> int:
+    """Per-device bytes for a (values, axes) tree under the rules."""
+    total = 0
+    flat_v, _ = jax.tree_util.tree_flatten(values)
+    flat_s, _ = jax.tree_util.tree_flatten(axes_tree)
+    for v, s in zip(flat_v, flat_s):
+        spec = resolve_pspec(v.shape, s, mesh, rules)
+        shard = 1
+        for dim, part in zip(v.shape, tuple(spec) + (None,) * (len(v.shape) - len(spec))):
+            if part is None:
+                shard_dim = dim
+            else:
+                names = part if isinstance(part, tuple) else (part,)
+                shard_dim = dim // math.prod(mesh.shape[a] for a in names)
+            shard *= shard_dim
+        total += shard * np.dtype(v.dtype).itemsize
+    return total

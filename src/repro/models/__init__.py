@@ -1,0 +1,18 @@
+from repro.models.model import (
+    decode_step,
+    encode,
+    forward_lm,
+    init_lm,
+    init_lm_state,
+    lm_loss,
+    lm_param_specs,
+    lm_state_axes,
+    prefill,
+)
+from repro.models.param import Param, split, merge, param_bytes
+
+__all__ = [
+    "decode_step", "encode", "forward_lm", "init_lm", "init_lm_state",
+    "lm_loss", "lm_param_specs", "lm_state_axes", "prefill",
+    "Param", "split", "merge", "param_bytes",
+]

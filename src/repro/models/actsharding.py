@@ -1,0 +1,61 @@
+"""Activation sharding constraints (§Perf H6).
+
+GSPMD propagates *weight* shardings into activations: the FSDP-sharded
+embedding table (embed→data) makes the embedding output — and from
+there the whole network — run batch-REPLICATED and embed-sharded, which
+is catastrophic (the dry-run showed every large collective carrying
+B=256 unsharded tensors).  The standard fix (MaxText) is to anchor
+activations with explicit with_sharding_constraint(batch→data axes) so
+XLA all-gathers the weights instead of replicating the batch.
+
+Model code cannot know the mesh axes; the launcher installs them via a
+contextvar *at trace time* (`activation_ctx`).  Outside any context the
+constraint is a no-op, so tests and single-device runs are untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from contextvars import ContextVar
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec
+
+_BATCH_AXES: ContextVar[Optional[Tuple[Tuple[str, ...], Tuple[int, ...]]]] = \
+    ContextVar("repro_batch_axes", default=None)
+
+
+@contextlib.contextmanager
+def activation_ctx(mesh, batch_axes=("pod", "data")):
+    axes = tuple(a for a in batch_axes if a in mesh.shape)
+    sizes = tuple(mesh.shape[a] for a in axes)
+    token = _BATCH_AXES.set((axes, sizes))
+    try:
+        yield
+    finally:
+        _BATCH_AXES.reset(token)
+
+
+def constrain_batch(x):
+    """Anchor the leading (batch) dim of an activation to the data axes;
+    no-op when no context is installed or the batch doesn't divide."""
+    ctx = _BATCH_AXES.get()
+    if ctx is None:
+        return x
+    axes, sizes = ctx
+    while axes and x.shape[0] % math.prod(sizes) != 0:
+        axes, sizes = axes[1:], sizes[1:]   # drop 'pod' first
+    if not axes:
+        return x
+    spec = PartitionSpec(axes if len(axes) > 1 else axes[0],
+                         *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def wrap_with_activation_constraints(fn, mesh):
+    """Launcher-side: run fn's TRACE inside the activation context."""
+    def wrapped(*args, **kw):
+        with activation_ctx(mesh):
+            return fn(*args, **kw)
+    return wrapped

@@ -1,0 +1,146 @@
+"""Common neural-net layers: norms, RoPE, MLPs, embeddings.
+
+All `init_*` functions return Param trees (see models/param.py); all
+`apply_*` functions take the plain-value tree (after `param.split`) and
+are pure.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import Initializer
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(ini: Initializer, cfg: ModelConfig):
+    if cfg.norm_type == "rmsnorm":
+        return {"scale": ini.ones((cfg.d_model,), ("embed",))}
+    return {
+        "scale": ini.ones((cfg.d_model,), ("embed",)),
+        "bias": ini.zeros((cfg.d_model,), ("embed",)),
+    }
+
+
+def apply_norm(p, cfg: ModelConfig, x):
+    x32 = x.astype(jnp.float32)
+    if cfg.norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(var + cfg.norm_eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * jax.lax.rsqrt(var + cfg.norm_eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(cfg: ModelConfig, positions):
+    """positions: (...,) int32 -> (sin, cos) of shape (..., head_dim//2)."""
+    hd = cfg.head_dim
+    exponent = jnp.arange(0, hd, 2, dtype=jnp.float32) / hd
+    inv_freq = 1.0 / (cfg.rope_theta ** exponent)           # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * inv_freq
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, sin, cos):
+    """x: (B, S, H, hd); sin/cos: (B, S, hd/2) or (S, hd/2)."""
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if sin.ndim == x1.ndim - 2:      # (S, hd/2) -> (1, S, hd/2)
+        sin, cos = sin[None], cos[None]
+    sin, cos = sin[:, :, None, :], cos[:, :, None, :]  # head axis
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int, offset=0):
+    """Classic sinusoidal table (used by the audio backbone in lieu of
+    MusicGen's learned absolute positions — same shape/fan-in)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32) + offset
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
+    angle = pos[:, None] / jnp.power(10_000.0, dim / d_model)[None, :]
+    emb = jnp.zeros((seq_len, d_model), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(angle))
+    emb = emb.at[:, 1::2].set(jnp.cos(angle))
+    return emb
+
+
+# ---------------------------------------------------------------------------
+# MLPs (dense FFN)
+# ---------------------------------------------------------------------------
+
+def init_mlp(ini: Initializer, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "w_gate": ini.lecun((d, f), ("embed", "mlp")),
+            "w_up": ini.lecun((d, f), ("embed", "mlp")),
+            "w_down": ini.lecun((f, d), ("mlp", "embed")),
+        }
+    if cfg.mlp_type == "gelu":
+        return {
+            "w_up": ini.lecun((d, f), ("embed", "mlp")),
+            "b_up": ini.zeros((f,), ("mlp",)),
+            "w_down": ini.lecun((f, d), ("mlp", "embed")),
+            "b_down": ini.zeros((d,), ("embed",)),
+        }
+    raise ValueError(cfg.mlp_type)
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        act = jax.nn.silu if cfg.mlp_type == "swiglu" else jax.nn.gelu
+        g = act(x @ p["w_gate"].astype(dt))
+        u = x @ p["w_up"].astype(dt)
+        return (g * u) @ p["w_down"].astype(dt)
+    h = jax.nn.gelu(x @ p["w_up"].astype(dt) + p["b_up"].astype(dt))
+    return h @ p["w_down"].astype(dt) + p["b_down"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Token embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def padded_vocab(cfg: ModelConfig) -> int:
+    if cfg.pad_vocab_to:
+        m = cfg.pad_vocab_to
+        return -(-cfg.vocab_size // m) * m
+    return cfg.vocab_size
+
+
+def init_embedding(ini: Initializer, cfg: ModelConfig):
+    v = padded_vocab(cfg)
+    p = {"table": ini.normal((v, cfg.d_model), ("vocab", "embed"))}
+    if not cfg.tie_embeddings:
+        p["unembed"] = ini.normal((cfg.d_model, v), ("embed", "vocab"))
+    return p
+
+
+def embed_tokens(p, cfg: ModelConfig, tokens):
+    return jnp.take(p["table"], tokens, axis=0).astype(jnp.dtype(cfg.dtype))
+
+
+def unembed(p, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        logits = x @ p["table"].astype(x.dtype).T
+    else:
+        logits = x @ p["unembed"].astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    v = padded_vocab(cfg)
+    if v != cfg.vocab_size:  # mask pad logits out of softmax/CE/argmax
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab_size, logits, -1e30)
+    return logits

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+TPU adaptation (DESIGN.md §3): instead of a dense (tokens × experts)
+dispatch einsum (which would charge num_experts× FLOPs) or torch-style
+ragged gathers (dynamic shapes), tokens are routed with a static-shape
+sort:  top-k expert ids are flattened, stably argsorted, each token gets
+a position-within-expert via searchsorted-cumsum, and the first
+``capacity`` tokens per expert are scattered into an (E, C, d) buffer.
+Expert matmuls are a single stacked einsum — FLOPs scale with top_k, not
+num_experts.  Experts shard over the `model` mesh axis; re-sharding the
+token buffer from batch-sharding to expert-sharding is the all-to-all
+the roofline's collective term sees.
+
+Aux losses: switch-style load balance + router z-loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.param import Initializer
+
+
+def padded_experts(cfg: ModelConfig) -> int:
+    e = cfg.moe.num_experts
+    if cfg.pad_experts_to:
+        m = cfg.pad_experts_to
+        return -(-e // m) * m
+    return e
+
+
+def init_moe(ini: Initializer, cfg: ModelConfig):
+    m = cfg.moe
+    d, f = cfg.d_model, m.expert_d_ff
+    e = padded_experts(cfg)
+    return {
+        "router": ini.lecun((d, e), ("embed", "experts"), fan_in=d),
+        "w_gate": ini.lecun((e, d, f), ("experts", "embed", "mlp"), fan_in=d),
+        "w_up": ini.lecun((e, d, f), ("experts", "embed", "mlp"), fan_in=d),
+        "w_down": ini.lecun((e, f, d), ("experts", "mlp", "embed"), fan_in=f),
+    }
+
+
+def capacity_for(cfg: ModelConfig, n_tokens: int) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k / m.num_experts * m.capacity_factor)
+    return max(8, -(-c // 8) * 8)  # round up to a multiple of 8
+
+
+def apply_moe(p, cfg: ModelConfig, x):
+    """x: (B, S, d) -> (y, aux_loss)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    E, K = padded_experts(cfg), m.top_k
+    C = capacity_for(cfg, T)
+    dt = x.dtype
+    xf = x.reshape(T, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"].astype(jnp.float32))  # (T,E)
+    if E != m.num_experts:  # mask the padded dummy experts out
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+        logits = jnp.where(col < m.num_experts, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_ids = jax.lax.top_k(probs, K)                  # (T,K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # ---- aux losses -------------------------------------------------
+    # load-balance: E * sum_e f_e * p_e  (switch transformer eq. 4)
+    onehot = jax.nn.one_hot(expert_ids[:, 0], E, dtype=jnp.float32)
+    f_e = onehot.mean(0)
+    p_e = probs.mean(0)
+    lb_loss = E * jnp.sum(f_e * p_e) * m.load_balance_coef
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2) * m.router_z_coef
+    aux = lb_loss + z_loss
+
+    # ---- sort-based dispatch ---------------------------------------
+    flat_e = expert_ids.reshape(-1)                              # (T*K,)
+    sort_idx = jnp.argsort(flat_e, stable=True)                  # (T*K,)
+    sorted_e = flat_e[sort_idx]
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * K) - starts[sorted_e]
+    keep = pos_in_e < C
+    dest = jnp.where(keep, sorted_e * C + pos_in_e, E * C)       # OOB -> drop
+    token_of = sort_idx // K                                     # (T*K,)
+
+    buf = jnp.zeros((E * C, d), dt).at[dest].set(
+        xf[token_of].astype(dt), mode="drop")
+    buf = buf.reshape(E, C, d)
+
+    # ---- expert compute (stacked SwiGLU) -----------------------------
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(dt)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(dt))
+    out = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(dt))
+    out_flat = out.reshape(E * C, d)
+
+    # ---- combine ------------------------------------------------------
+    gathered = out_flat[jnp.where(keep, dest, 0)] * keep[:, None].astype(dt)
+    contrib = jnp.zeros((T * K, d), dt).at[sort_idx].set(gathered)
+    contrib = contrib.reshape(T, K, d)
+    y = jnp.sum(contrib * gate[..., None].astype(dt), axis=1)
+    return y.reshape(B, S, d), aux

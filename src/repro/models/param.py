@@ -1,0 +1,145 @@
+"""Parameter container with logical sharding axes.
+
+Pure-JAX module system: parameters are nested dicts whose leaves are
+:class:`Param` — a (value, logical_axes) pair.  ``value`` is either a
+``jnp.ndarray`` (real init) or a ``jax.ShapeDtypeStruct`` (abstract init
+for dry-runs).  Logical axis names are resolved to mesh axes by
+``repro.launch.sharding`` with divisibility-aware fallback.
+
+``split(tree)`` -> (values, axes) lets the training/serving code work on
+plain array pytrees while the launcher keeps the axes tree for
+PartitionSpecs.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Param(NamedTuple):
+    value: Any
+    axes: Tuple[str, ...]
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def encode_axes(axes) -> str:
+    """Logical axes as a comma-joined *string* so that axes trees are
+    valid pytrees structurally identical to their value trees (a tuple
+    leaf would be flattened by tree_map)."""
+    if isinstance(axes, str):
+        return axes
+    return ",".join("." if a is None else a for a in axes)
+
+
+def decode_axes(s: str) -> Tuple:
+    if s == "":
+        return ()
+    return tuple(None if a == "." else a for a in s.split(","))
+
+
+def A(*names) -> str:
+    return encode_axes(names)
+
+
+def split(tree):
+    """Split a Param tree into (values, axes) trees of identical structure.
+    Axes leaves are encoded strings (see encode_axes)."""
+    values = jax.tree_util.tree_map(lambda p: p.value, tree, is_leaf=is_param)
+    axes = jax.tree_util.tree_map(lambda p: encode_axes(p.axes), tree,
+                                  is_leaf=is_param)
+    return values, axes
+
+
+def merge(values, axes):
+    return jax.tree_util.tree_map(Param, values, axes)
+
+
+class Initializer:
+    """Creates parameters — real arrays or abstract ShapeDtypeStructs.
+
+    A single init codepath serves both the trainer (real=True) and the
+    multi-pod dry-run (real=False: no host memory is allocated for the
+    398B-parameter configs).
+    """
+
+    def __init__(self, key: jax.Array | None, dtype=jnp.float32, abstract: bool = False):
+        self._key = key
+        self.dtype = dtype
+        self.abstract = abstract
+
+    def _next_key(self):
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
+    def normal(self, shape, axes, stddev=0.02):
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        v = jax.random.normal(self._next_key(), tuple(shape), self.dtype) * jnp.asarray(
+            stddev, self.dtype)
+        return Param(v, tuple(axes))
+
+    def lecun(self, shape, axes, fan_in=None):
+        fan = fan_in if fan_in is not None else int(np.prod(shape[:-1]))
+        return self.normal(shape, axes, stddev=1.0 / max(1.0, fan) ** 0.5)
+
+    def zeros(self, shape, axes):
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        return Param(jnp.zeros(tuple(shape), self.dtype), tuple(axes))
+
+    def ones(self, shape, axes):
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        return Param(jnp.ones(tuple(shape), self.dtype), tuple(axes))
+
+    def constant(self, shape, axes, value):
+        if self.abstract:
+            return Param(jax.ShapeDtypeStruct(tuple(shape), self.dtype), tuple(axes))
+        return Param(jnp.full(tuple(shape), value, self.dtype), tuple(axes))
+
+
+def stack_params(trees):
+    """Stack a list of same-structure Param trees along a new leading
+    'layers' axis (used to build scanned layer parameters)."""
+
+    def _stack(*ps):
+        vals = [p.value for p in ps]
+        axes = ("layers",) + ps[0].axes
+        if isinstance(vals[0], jax.ShapeDtypeStruct):
+            v = jax.ShapeDtypeStruct((len(vals),) + tuple(vals[0].shape), vals[0].dtype)
+        else:
+            v = jnp.stack(vals)
+        return Param(v, axes)
+
+    return jax.tree_util.tree_map(_stack, *trees, is_leaf=is_param)
+
+
+def stack_values(trees):
+    """Stack a list of same-structure plain-value trees along a new
+    leading axis (arrays or ShapeDtypeStructs)."""
+
+    def _stack(*vs):
+        if isinstance(vs[0], jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct((len(vs),) + tuple(vs[0].shape),
+                                        vs[0].dtype)
+        return jnp.stack(vs)
+
+    return jax.tree_util.tree_map(_stack, *trees)
+
+
+def prefix_axes(tree, prefix: str = "layers"):
+    """Prepend a leading logical axis to every encoded-axes leaf."""
+    return jax.tree_util.tree_map(
+        lambda s: prefix + ("," + s if s else ""), tree)
+
+
+def param_bytes(tree) -> int:
+    vals, _ = split(tree)
+    leaves = jax.tree_util.tree_leaves(vals)
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize for l in leaves)

@@ -1,0 +1,245 @@
+"""xLSTM mixers: mLSTM (matrix memory) and sLSTM (scalar memory).
+
+Both follow arXiv:2405.04517 with exponential gating and the max-based
+log-space stabiliser m.  The mLSTM recurrence
+
+    C_t = f'_t C_{t-1} + i'_t v_t k_t^T          (per head, hd×hd matrix)
+    n_t = f'_t n_{t-1} + i'_t k_t
+    h_t = (C_t q_t) / max(|n_t · q_t|, 1)
+
+is evaluated with a sequential ``lax.scan`` in fp32 (the recurrence is
+elementwise-gated and does not associate cheaply once stabilised;
+sequence-chunked parallelisation is a §Perf candidate).  sLSTM has true
+recurrent weight mixing (block-diagonal per head) and is inherently
+sequential — exactly why the xLSTM paper keeps it narrow.
+
+State is O(1) in sequence length — these archs run ``long_500k``
+natively (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.models.param import Initializer
+from repro.models.mamba import _causal_conv
+
+F32 = jnp.float32
+
+
+def _xcfg(cfg: ModelConfig) -> XLSTMConfig:
+    return cfg.xlstm or XLSTMConfig()
+
+
+# ===========================================================================
+# mLSTM
+# ===========================================================================
+
+def _mlstm_dims(cfg: ModelConfig):
+    x = _xcfg(cfg)
+    d_in = x.mlstm_expand * cfg.d_model
+    hd = d_in // cfg.n_heads
+    return x, d_in, hd
+
+
+def init_mlstm(ini: Initializer, cfg: ModelConfig):
+    x, d_in, hd = _mlstm_dims(cfg)
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "w_up": ini.lecun((d, 2 * d_in), ("embed", "mlp"), fan_in=d),
+        "conv_w": ini.lecun((x.d_conv, d_in), ("conv", "mlp"), fan_in=x.d_conv),
+        "conv_b": ini.zeros((d_in,), ("mlp",)),
+        "wq": ini.lecun((d_in, d_in), ("mlp", None), fan_in=d_in),
+        "wk": ini.lecun((d_in, d_in), ("mlp", None), fan_in=d_in),
+        "wv": ini.lecun((d_in, d_in), ("mlp", None), fan_in=d_in),
+        "w_if": ini.lecun((d_in, 2 * H), ("mlp", None), fan_in=d_in),
+        "b_if": ini.constant((2 * H,), (None,), value=1.0),
+        "norm_scale": ini.ones((d_in,), ("mlp",)),
+        "w_down": ini.lecun((d_in, d), ("mlp", "embed"), fan_in=d_in),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    x, d_in, hd = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    shapes = {
+        "C": ((batch, H, hd, hd), F32),
+        "n": ((batch, H, hd), F32),
+        "m": ((batch, H), F32),
+        "conv": ((batch, max(x.d_conv - 1, 1), d_in), jnp.dtype(cfg.dtype)),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def mlstm_state_axes():
+    return {"C": ("batch", "heads", None, None),
+            "n": ("batch", "heads", None),
+            "m": ("batch", "heads"),
+            "conv": ("batch", "conv", "mlp")}
+
+
+def _mlstm_step(carry, inp):
+    """carry: (C,n,m); inp: per-token (q,k,v,(i_log,f_log)) in fp32.
+    q,k,v: (B,H,hd); gates: (B,H)."""
+    C, n, m = carry
+    q, k, v, i_log, f_log = inp
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_p = jnp.exp(i_log - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    C = f_p[..., None, None] * C + i_p[..., None, None] * (
+        v[..., :, None] * k[..., None, :])
+    n = f_p[..., None] * n + i_p[..., None] * k
+    num = jnp.einsum("bhij,bhj->bhi", C, q)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhj,bhj->bh", n, q)), 1.0)
+    h = num / den[..., None]
+    return (C, n, m_new), h
+
+
+def _mlstm_qkvg(p, cfg: ModelConfig, x, conv_state):
+    """Shared projection path.  x: (B,S,d) -> per-token scan inputs."""
+    x_cfg, d_in, hd = _mlstm_dims(cfg)
+    H = cfg.n_heads
+    dt = x.dtype
+    B, S, _ = x.shape
+    up = x @ p["w_up"].astype(dt)
+    x_in, z = jnp.split(up, 2, axis=-1)
+    x_conv, new_conv = _causal_conv(x_in, p["conv_w"], p["conv_b"],
+                                    state=conv_state)
+    x_c = jax.nn.silu(x_conv)
+    q = (x_c @ p["wq"].astype(dt)).reshape(B, S, H, hd).astype(F32)
+    k = (x_c @ p["wk"].astype(dt)).reshape(B, S, H, hd).astype(F32) * hd ** -0.5
+    v = (x_in @ p["wv"].astype(dt)).reshape(B, S, H, hd).astype(F32)
+    gates = (x_in.astype(F32) @ p["w_if"].astype(F32)) + p["b_if"].astype(F32)
+    i_log, f_log = jnp.split(gates, 2, axis=-1)              # (B,S,H)
+    f_log = jax.nn.log_sigmoid(f_log)
+    return (q, k, v, i_log, f_log, z, new_conv)
+
+
+def _mlstm_out(p, cfg, h, z):
+    """h: (B,S,H,hd) fp32; z: (B,S,d_in) gate branch."""
+    x_cfg, d_in, hd = _mlstm_dims(cfg)
+    B, S = h.shape[:2]
+    dt = z.dtype
+    hf = h.reshape(B, S, d_in)
+    # per-channel RMS "group norm" over heads
+    var = jnp.mean(jnp.square(hf.reshape(B, S, cfg.n_heads, hd)),
+                   axis=-1, keepdims=True)
+    hf = (hf.reshape(B, S, cfg.n_heads, hd) * jax.lax.rsqrt(var + 1e-6)
+          ).reshape(B, S, d_in)
+    hf = hf * p["norm_scale"].astype(F32)
+    y = (hf.astype(dt) * jax.nn.silu(z)) @ p["w_down"].astype(dt)
+    return y
+
+
+def apply_mlstm_full(p, cfg: ModelConfig, x, *, return_state: bool = False,
+                     state=None):
+    B = x.shape[0]
+    if state is None:
+        state = init_mlstm_state(cfg, B)
+    q, k, v, i_log, f_log, z, new_conv = _mlstm_qkvg(
+        p, cfg, x, state["conv"].astype(x.dtype))
+    carry0 = (state["C"], state["n"], state["m"])
+    xs = tuple(a.transpose(1, 0, 2, 3) if a.ndim == 4 else a.transpose(1, 0, 2)
+               for a in (q, k, v, i_log, f_log))
+    (C, n, m), hs = jax.lax.scan(_mlstm_step, carry0, xs)
+    h = hs.transpose(1, 0, 2, 3)                             # (B,S,H,hd)
+    y = _mlstm_out(p, cfg, h, z)
+    if return_state:
+        x_cfg = _xcfg(cfg)
+        return y, {"C": C, "n": n, "m": m,
+                   "conv": new_conv[:, -(max(x_cfg.d_conv - 1, 1)):, :].astype(
+                       jnp.dtype(cfg.dtype))}
+    return y
+
+
+def apply_mlstm_decode(p, cfg: ModelConfig, x, state):
+    y, new_state = apply_mlstm_full(p, cfg, x, return_state=True, state=state)
+    return y, new_state
+
+
+# ===========================================================================
+# sLSTM
+# ===========================================================================
+
+def _slstm_dims(cfg: ModelConfig):
+    x = _xcfg(cfg)
+    hd = cfg.d_model // cfg.n_heads
+    ffh = int(cfg.d_model * x.slstm_ffn_factor)
+    return x, hd, ffh
+
+
+def init_slstm(ini: Initializer, cfg: ModelConfig):
+    x, hd, ffh = _slstm_dims(cfg)
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "w_gates": ini.lecun((d, 4 * d), ("embed", "mlp"), fan_in=d),
+        "b_gates": ini.zeros((4 * d,), ("mlp",)),
+        "r_gates": ini.lecun((4, H, hd, hd), (None, "heads", None, None),
+                             fan_in=hd),
+        "norm_scale": ini.ones((d,), ("embed",)),
+        "ff_gate": ini.lecun((d, ffh), ("embed", "mlp"), fan_in=d),
+        "ff_up": ini.lecun((d, ffh), ("embed", "mlp"), fan_in=d),
+        "ff_down": ini.lecun((ffh, d), ("mlp", "embed"), fan_in=ffh),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int, abstract: bool = False):
+    d = cfg.d_model
+    shapes = {k: ((batch, d), F32) for k in ("c", "n", "h", "m")}
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, dt) for k, (s, dt) in shapes.items()}
+    out = {k: jnp.zeros(s, dt) for k, (s, dt) in shapes.items()}
+    out["n"] = out["n"] + 1.0    # avoid 0/0 on the first step
+    return out
+
+
+def slstm_state_axes():
+    return {k: ("batch", "embed") for k in ("c", "n", "h", "m")}
+
+
+def _slstm_step(p, cfg, carry, x_t):
+    """x_t: (B, 4d) pre-computed input gate pre-activations (fp32)."""
+    H = cfg.n_heads
+    d = cfg.d_model
+    hd = d // H
+    c, n, h, m = carry
+    hh = h.reshape(-1, H, hd)
+    rec = jnp.einsum("ghij,bhj->gbhi", p["r_gates"].astype(F32), hh)
+    rec = rec.reshape(4, -1, d)
+    pre = x_t.reshape(-1, 4, d).transpose(1, 0, 2) + rec     # (4,B,d)
+    i_t, f_t, z_t, o_t = pre
+    m_new = jnp.maximum(jax.nn.log_sigmoid(f_t) + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(jax.nn.log_sigmoid(f_t) + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def apply_slstm_full(p, cfg: ModelConfig, x, *, return_state: bool = False,
+                     state=None):
+    B, S, d = x.shape
+    dt = x.dtype
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    pre = (x @ p["w_gates"].astype(dt) + p["b_gates"].astype(dt)).astype(F32)
+    carry0 = (state["c"], state["n"], state["h"], state["m"])
+    step = lambda c, x_t: _slstm_step(p, cfg, c, x_t)
+    (c, n, h, m), hs = jax.lax.scan(step, carry0, pre.transpose(1, 0, 2))
+    hseq = hs.transpose(1, 0, 2)                             # (B,S,d)
+    # RMS-normalised head output + gated FFN (the sLSTM block's own FFN)
+    var = jnp.mean(jnp.square(hseq), axis=-1, keepdims=True)
+    hn = (hseq * jax.lax.rsqrt(var + 1e-6) * p["norm_scale"].astype(F32)).astype(dt)
+    y = (jax.nn.silu(hn @ p["ff_gate"].astype(dt)) * (hn @ p["ff_up"].astype(dt))
+         ) @ p["ff_down"].astype(dt)
+    if return_state:
+        return y, {"c": c, "n": n, "h": h, "m": m}
+    return y
+
+
+def apply_slstm_decode(p, cfg: ModelConfig, x, state):
+    return apply_slstm_full(p, cfg, x, return_state=True, state=state)

@@ -1,0 +1,7 @@
+from repro.serving.engine import CachedLLMService, GenerationResult, ServeEngine
+from repro.serving.frontend import frontend_spec, stub_frontend_embeds
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+__all__ = ["CachedLLMService", "GenerationResult", "ServeEngine",
+           "frontend_spec", "stub_frontend_embeds",
+           "ContinuousBatcher", "Request"]

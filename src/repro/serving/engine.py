@@ -1,0 +1,127 @@
+"""Serving engine: batched prefill + decode with carried state.
+
+``ServeEngine`` is the host-side loop around the pure ``prefill`` /
+``decode_step`` functions (jitted once per shape).  It serves *batched
+requests* — the end-to-end example drivers put the semantic cache in
+front of this engine, which is exactly the deployment the paper targets
+(cache hit -> skip the engine entirely).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import EOS, HashTokenizer
+from repro.models import decode_step, prefill
+from repro.serving.frontend import stub_frontend_embeds
+
+
+@dataclass
+class GenerationResult:
+    tokens: np.ndarray          # (B, max_new) int32
+    n_prompt: int
+    n_generated: int
+    cache_hit: bool = False
+
+
+class ServeEngine:
+    """Batched autoregressive serving for any decoder config."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512):
+        if cfg.is_encoder:
+            raise ValueError(f"{cfg.name} is encoder-only; no decode path")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self._prefill = jax.jit(
+            lambda pv, toks, fe: prefill(pv, cfg, toks, max_len, fe),
+            static_argnames=())
+        self._decode = jax.jit(lambda pv, st, tok: decode_step(pv, cfg, st, tok))
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0,
+                 use_frontend: bool = False) -> GenerationResult:
+        """prompts: (B, S) int32.  Greedy (temperature=0) or sampled."""
+        B, S = prompts.shape
+        fe = stub_frontend_embeds(self.cfg, B, seed) if use_frontend else None
+        logits, state = self._prefill(self.params, jnp.asarray(prompts), fe)
+        key = jax.random.PRNGKey(seed)
+        out = np.zeros((B, max_new_tokens), np.int32)
+        tok = self._select(logits, temperature, key)
+        for t in range(max_new_tokens):
+            out[:, t] = np.asarray(tok)[:, 0]
+            logits, state = self._decode(self.params, state, tok)
+            key, sub = jax.random.split(key)
+            tok = self._select(logits, temperature, sub)
+        return GenerationResult(out, n_prompt=S, n_generated=max_new_tokens)
+
+    @staticmethod
+    def _select(logits, temperature, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        g = jax.random.gumbel(key, logits.shape)
+        return jnp.argmax(logits / temperature + g, axis=-1).astype(
+            jnp.int32)[:, None]
+
+
+@dataclass
+class ServedRequest:
+    query: str
+    response: str
+    cache_hit: bool
+    score: float = 0.0
+
+
+class CachedLLMService:
+    """The paper's deployment: a semantic cache in front of an LLM.
+
+    Queries are embedded with the (fine-tuned) compact encoder; on a
+    cache hit the stored response is returned without touching the
+    engine; on a miss the engine generates and the (embedding, response)
+    pair is inserted.
+    """
+
+    def __init__(self, embed_fn, cache, engine: Optional[ServeEngine],
+                 tokenizer: HashTokenizer, max_query_len: int = 32,
+                 max_new_tokens: int = 16):
+        self.embed_fn = embed_fn          # list[str] -> (B, D) unit vectors
+        self.cache = cache                # repro.core.cache.SemanticCache
+        self.engine = engine
+        self.tok = tokenizer
+        self.max_query_len = max_query_len
+        self.max_new_tokens = max_new_tokens
+        self.stats = {"hits": 0, "misses": 0}
+
+    def _llm_answer(self, queries: List[str]) -> List[str]:
+        if self.engine is None:  # degenerate echo backend for tests
+            return [f"answer({q})" for q in queries]
+        ids, _ = self.tok.encode_batch(queries, self.max_query_len)
+        res = self.engine.generate(ids, self.max_new_tokens)
+        return [" ".join(map(str, row)) for row in res.tokens]
+
+    def handle(self, queries: List[str]) -> List[ServedRequest]:
+        embs = self.embed_fn(queries)
+        hits, scores, values = self.cache.lookup(embs)
+        out: List[Optional[ServedRequest]] = [None] * len(queries)
+        miss_idx = [i for i, h in enumerate(hits) if not h]
+        for i, q in enumerate(queries):
+            if hits[i]:
+                self.stats["hits"] += 1
+                out[i] = ServedRequest(q, values[i], True, float(scores[i]))
+        if miss_idx:
+            answers = self._llm_answer([queries[i] for i in miss_idx])
+            self.cache.insert(embs[np.asarray(miss_idx)], answers)
+            for i, a in zip(miss_idx, answers):
+                self.stats["misses"] += 1
+                out[i] = ServedRequest(queries[i], a, False)
+        return out  # type: ignore
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.stats["hits"] + self.stats["misses"]
+        return self.stats["hits"] / n if n else 0.0

@@ -1,0 +1,134 @@
+"""Slot-based continuous batching scheduler.
+
+Real serving systems don't run fixed batches to completion: requests
+arrive and finish at different times, and the decode step should always
+run at full batch occupancy.  This scheduler keeps a fixed pool of B
+slots over ONE jitted decode function:
+
+  * a free slot admits a pending request via `prefill` into that slot's
+    cache region (per-slot prefill; batched decode),
+  * every engine tick decodes one token for ALL active slots,
+  * slots retire on EOS or max_new_tokens and are immediately refilled.
+
+The decode state is the model's stacked pytree; per-slot admission
+writes the prefilled slot state into the pool with a dynamic batch
+index update — pure-JAX, shape-static, so the decode step never
+recompiles.  The semantic cache composes in front: hits never consume a
+slot (that is the cost model of the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.tokenizer import EOS
+from repro.models import decode_step, init_lm_state, prefill
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    generated: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+def _write_slot(pool_state, slot_state, slot: int):
+    """Insert a single-sequence decode state into batch position `slot`."""
+
+    def upd(pool, one):
+        if pool.ndim == 0:
+            return pool
+        # layer-stacked leaves: (n_periods, B, ...); single: (n_periods, 1, ...)
+        return jax.lax.dynamic_update_index_in_dim(pool, one[:, 0], slot,
+                                                   axis=1)
+
+    new_layers = jax.tree_util.tree_map(upd, pool_state["layers"],
+                                        slot_state["layers"])
+    return {"layers": new_layers, "cur_len": pool_state["cur_len"]}
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
+                 max_len: int = 256, prompt_len: int = 32):
+        if cfg.is_encoder:
+            raise ValueError("decoder configs only")
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.prompt_len = prompt_len
+        self.pool = init_lm_state(cfg, n_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.pending: List[Request] = []
+        self.finished: Dict[int, Request] = {}
+        self.ticks = 0
+        self._next_tok = np.zeros((n_slots, 1), np.int32)
+
+        self._prefill1 = jax.jit(
+            lambda pv, toks: prefill(pv, cfg, toks, max_len))
+        self._decode = jax.jit(lambda pv, st, tok: decode_step(pv, cfg, st,
+                                                               tok))
+        self._write = jax.jit(_write_slot, static_argnames=("slot",))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.n_slots):
+            if self.slot_req[slot] is None and self.pending:
+                req = self.pending.pop(0)
+                toks = np.full((1, self.prompt_len), EOS, np.int32)
+                n = min(len(req.prompt), self.prompt_len)
+                toks[0, :n] = req.prompt[:n]
+                logits, st = self._prefill1(self.params, jnp.asarray(toks))
+                self.pool = _write_slot(self.pool, st, slot)
+                self.slot_req[slot] = req
+                first = int(jnp.argmax(logits[0]))
+                self._next_tok[slot, 0] = first
+                req.generated.append(first)
+
+    def _retire(self) -> None:
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            if (len(req.generated) >= req.max_new_tokens
+                    or (req.generated and req.generated[-1] == EOS)):
+                req.done = True
+                self.finished[req.uid] = req
+                self.slot_req[slot] = None
+
+    def tick(self) -> int:
+        """One engine iteration: admit, decode all active slots, retire.
+        Returns the number of active slots this tick."""
+        self._admit()
+        active = [s for s, r in enumerate(self.slot_req) if r is not None]
+        if active:
+            logits, self.pool = self._decode(
+                self.params, self.pool, jnp.asarray(self._next_tok))
+            nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+            for slot in active:
+                tok = int(nxt[slot])
+                self._next_tok[slot, 0] = tok
+                self.slot_req[slot].generated.append(tok)
+        self._retire()
+        self.ticks += 1
+        return len(active)
+
+    def run(self, max_ticks: int = 10_000) -> Dict[int, Request]:
+        while (self.pending or any(r is not None for r in self.slot_req)) \
+                and self.ticks < max_ticks:
+            self.tick()
+        return self.finished
+
+    @property
+    def occupancy(self) -> float:
+        n = sum(r is not None for r in self.slot_req)
+        return n / self.n_slots

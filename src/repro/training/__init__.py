@@ -1,0 +1,12 @@
+from repro.training.optim import (
+    AdamState, adam, adamw, apply_updates, clip_by_global_norm, global_norm,
+)
+from repro.training.schedule import constant, linear_decay, linear_warmup_cosine
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.train import make_eval_step, make_train_step
+
+__all__ = [
+    "AdamState", "adam", "adamw", "apply_updates", "clip_by_global_norm",
+    "global_norm", "constant", "linear_decay", "linear_warmup_cosine",
+    "load_checkpoint", "save_checkpoint", "make_eval_step", "make_train_step",
+]

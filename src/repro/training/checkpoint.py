@@ -1,0 +1,78 @@
+"""msgpack checkpointing for arbitrary pytrees of arrays.
+
+No orbax offline — nested dicts/lists/tuples/NamedTuples of jnp/np
+arrays and scalars round-trip through msgpack with an ``__nd__`` framing
+for ndarray leaves.  Atomic write (tmp + rename).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ND = "__nd__"
+
+
+def _encode(obj):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)) or hasattr(obj, "__array__"):
+        arr = np.asarray(obj)
+        return {_ND: True, "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "data": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {"__map__": [[_encode(k), _encode(v)] for k, v in obj.items()]}
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):  # NamedTuple
+        return {"__nt__": type(obj).__name__,
+                "fields": {f: _encode(getattr(obj, f)) for f in obj._fields}}
+    if isinstance(obj, (list, tuple)):
+        return {"__seq__": "tuple" if isinstance(obj, tuple) else "list",
+                "items": [_encode(x) for x in obj]}
+    if isinstance(obj, (str, int, float, bool)) or obj is None:
+        return obj
+    raise TypeError(f"cannot checkpoint {type(obj)}")
+
+
+def _decode(obj, namedtuple_types=None):
+    ntt = namedtuple_types or {}
+    if isinstance(obj, dict):
+        if obj.get(_ND):
+            return np.frombuffer(obj["data"], dtype=np.dtype(obj["dtype"])
+                                 ).reshape(obj["shape"]).copy()
+        if "__map__" in obj:
+            return {_decode(k, ntt): _decode(v, ntt) for k, v in obj["__map__"]}
+        if "__nt__" in obj:
+            fields = {f: _decode(v, ntt) for f, v in obj["fields"].items()}
+            cls = ntt.get(obj["__nt__"])
+            if cls is not None:
+                return cls(**fields)
+            return fields  # degrade to a dict if the type isn't supplied
+        if "__seq__" in obj:
+            items = [_decode(x, ntt) for x in obj["items"]]
+            return tuple(items) if obj["__seq__"] == "tuple" else items
+    return obj
+
+
+def save_checkpoint(path: str, tree) -> None:
+    host_tree = jax.tree_util.tree_map(np.asarray, tree)
+    payload = msgpack.packb(_encode(host_tree), use_bin_type=True)
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(payload)
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def load_checkpoint(path: str, namedtuple_types: dict | None = None):
+    from repro.training.optim import AdamState
+    ntt = {"AdamState": AdamState}
+    ntt.update(namedtuple_types or {})
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False), ntt)

@@ -1,0 +1,102 @@
+"""Optimizers from scratch (no optax offline): Adam/AdamW + global-norm
+clipping, as (init_fn, update_fn) pairs over arbitrary pytrees.
+
+The gradient-norm clip is a first-class citizen here because it is part
+of the paper's catastrophic-forgetting recipe (max_grad_norm = 0.5,
+Section 3.2).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: object
+    v: object
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), norm
+
+
+def adamw(lr: Callable | float, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          max_grad_norm: Optional[float] = None,
+          state_dtype=None):
+    """Returns (init_fn, update_fn).
+
+    state_dtype: dtype for the m/v moments — bf16 halves optimizer HBM
+    for the 398B-class configs (DESIGN.md §2, jamba memory budget).
+    update_fn(grads, state, params) -> (updates, new_state, metrics);
+    apply with ``apply_updates``.
+    """
+    lr_fn = lr if callable(lr) else (lambda step: lr)
+
+    def init_fn(params):
+        def zeros(p):
+            dt = state_dtype or p.dtype
+            if isinstance(p, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct(p.shape, dt)
+            return jnp.zeros(p.shape, dt)
+        zl = lambda t: jax.tree_util.tree_map(zeros, t)
+        step = (jax.ShapeDtypeStruct((), jnp.int32)
+                if any(isinstance(l, jax.ShapeDtypeStruct)
+                       for l in jax.tree_util.tree_leaves(params))
+                else jnp.zeros((), jnp.int32))
+        return AdamState(step=step, m=zl(params), v=zl(params))
+
+    def update_fn(grads, state: AdamState, params):
+        metrics = {}
+        if max_grad_norm is not None:
+            grads, raw_norm = clip_by_global_norm(grads, max_grad_norm)
+            metrics["grad_norm"] = raw_norm
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr_t = jnp.asarray(lr_fn(step), jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+            v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            u = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), m_new.astype(m.dtype), \
+                v_new.astype(v.dtype)
+
+        flat = jax.tree_util.tree_map(upd, grads, state.m, state.v, params)
+        updates = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                         is_leaf=lambda x: isinstance(x, tuple))
+        m_new = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        v_new = jax.tree_util.tree_map(lambda x: x[2], flat,
+                                       is_leaf=lambda x: isinstance(x, tuple))
+        metrics["lr"] = lr_t
+        return updates, AdamState(step=step, m=m_new, v=v_new), metrics
+
+    return init_fn, update_fn
+
+
+def adam(lr, **kw):
+    return adamw(lr, weight_decay=0.0, **kw)
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)).astype(p.dtype), params, updates)

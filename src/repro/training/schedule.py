@@ -1,0 +1,27 @@
+"""Learning-rate schedules as step -> lr callables."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_cosine(peak_lr: float, warmup_steps: int, total_steps: int,
+                         final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = peak_lr * s / max(warmup_steps, 1)
+        prog = jnp.clip((s - warmup_steps) / max(total_steps - warmup_steps, 1),
+                        0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, peak_lr * cos)
+    return fn
+
+
+def linear_decay(peak_lr: float, total_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        return peak_lr * jnp.clip(1.0 - s / max(total_steps, 1), 0.0, 1.0)
+    return fn

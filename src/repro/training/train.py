@@ -1,0 +1,45 @@
+"""LM training step factory — the `train_4k` path of every backbone.
+
+``make_train_step(cfg, update_fn)`` builds the pure function that the
+launcher jits with in/out shardings; the same function is what
+``launch/dryrun.py`` lowers for the multi-pod pass.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import lm_loss
+from repro.training.optim import apply_updates
+
+
+def make_train_step(cfg: ModelConfig, update_fn: Callable):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).  batch: {"tokens": (B,S) int32,
+    ["frontend_embeds": (B,F,d)]}.
+    """
+
+    def loss_fn(params, batch):
+        return lm_loss(params, cfg, batch["tokens"],
+                       batch.get("frontend_embeds"))
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt_state, opt_metrics = update_fn(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = {"loss": loss, **parts, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params, batch):
+        loss, parts = lm_loss(params, cfg, batch["tokens"],
+                              batch.get("frontend_embeds"))
+        return {"loss": loss, **parts}
+    return eval_step

@@ -1,0 +1,17 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here by design — tests and
+benches must see the single real CPU device; only launch/dryrun.py
+forces the 512-device placeholder fleet."""
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True)
+def _x64_off():
+    # keep default f32 semantics everywhere
+    yield

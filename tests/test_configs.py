@@ -1,0 +1,90 @@
+"""Config registry: all assigned archs present with the exact assigned
+geometry, param counts in the right ballpark, reduced() well-formed."""
+import pytest
+
+from repro.configs import (
+    ASSIGNED_ARCHS, INPUT_SHAPES, get_config, list_configs,
+)
+
+EXPECTED = {
+    # name: (layers, d_model, heads, kv, d_ff, vocab)
+    "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+    "granite-34b": (88, 6144, 48, 1, 24576, 49152),
+    "starcoder2-15b": (40, 6144, 48, 4, 24576, 49152),
+    "phi3-mini-3.8b": (32, 3072, 32, 32, 8192, 32064),
+    "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+    "jamba-1.5-large-398b": (72, 8192, 64, 8, 24576, 65536),
+    "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+    "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+}
+
+# rough total-param expectations (within 40%)
+PARAM_BALLPARK = {
+    "granite-34b": 34e9,
+    "starcoder2-15b": 15e9,
+    "phi3-mini-3.8b": 3.8e9,
+    "pixtral-12b": 12e9,
+    "jamba-1.5-large-398b": 398e9,
+    "phi3.5-moe-42b-a6.6b": 42e9,
+    "xlstm-125m": 125e6,
+    "qwen2.5-32b": 32e9,
+    "granite-moe-3b-a800m": 3.3e9,
+    "modernbert-149m": 149e6,
+}
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_assigned_geometry(name):
+    cfg = get_config(name)
+    exp = EXPECTED[name]
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == exp
+
+
+@pytest.mark.parametrize("name", sorted(PARAM_BALLPARK))
+def test_param_counts(name):
+    cfg = get_config(name)
+    n = cfg.param_count()
+    target = PARAM_BALLPARK[name]
+    assert 0.6 * target < n < 1.4 * target, f"{name}: {n:.3e} vs {target:.3e}"
+
+
+def test_moe_active_params():
+    cfg = get_config("phi3.5-moe-42b-a6.6b")
+    active = cfg.param_count(active_only=True)
+    assert 0.6 * 6.6e9 < active < 1.4 * 6.6e9
+    assert active < cfg.param_count() / 3
+
+
+def test_registry_lists_all():
+    names = list_configs()
+    for a in ASSIGNED_ARCHS:
+        assert a in names
+    assert "modernbert-149m" in names
+
+
+@pytest.mark.parametrize("name", ASSIGNED_ARCHS)
+def test_reduced_variants(name):
+    r = get_config(name).reduced()
+    assert r.n_layers <= 8 and r.d_model <= 512
+    assert r.n_layers % len(r.period) == 0
+    if r.moe:
+        assert r.moe.num_experts <= 4
+    assert r.param_count() > 0
+
+
+def test_input_shapes():
+    assert INPUT_SHAPES["train_4k"].seq_len == 4096
+    assert INPUT_SHAPES["train_4k"].global_batch == 256
+    assert INPUT_SHAPES["prefill_32k"].seq_len == 32768
+    assert INPUT_SHAPES["decode_32k"].global_batch == 128
+    assert INPUT_SHAPES["long_500k"].seq_len == 524288
+
+
+def test_long_context_variant():
+    dense = get_config("qwen2.5-32b")
+    assert dense.for_long_context().sliding_window == 8192
+    ssm = get_config("xlstm-125m")
+    assert ssm.for_long_context() is ssm  # unchanged: sub-quadratic

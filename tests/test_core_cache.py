@@ -1,0 +1,145 @@
+"""Semantic cache core: store semantics (insert/query/LRU/TTL), the
+SemanticCache wrapper, and losses/metrics behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SemanticCache, evict_older_than, init_store, insert, insert_batch,
+    metrics_at_threshold, occupancy, online_contrastive_loss,
+    contrastive_loss, pair_classification_metrics, query, touch,
+)
+
+rng = np.random.default_rng(7)
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def test_store_insert_and_exact_query():
+    st = init_store(capacity=16, dim=8)
+    embs = jnp.asarray(_unit(rng.standard_normal((5, 8)).astype(np.float32)))
+    st = insert_batch(st, embs, jnp.arange(5))
+    res = query(st, embs, threshold=0.99, k=1)
+    assert bool(jnp.all(res.hit))
+    np.testing.assert_array_equal(np.asarray(res.value_ids[:, 0]),
+                                  np.arange(5))
+    np.testing.assert_allclose(np.asarray(res.scores[:, 0]), 1.0, atol=1e-5)
+
+
+def test_store_miss_below_threshold():
+    st = init_store(capacity=8, dim=16)
+    a = jnp.asarray(_unit(rng.standard_normal((1, 16)).astype(np.float32)))
+    b = jnp.asarray(_unit(rng.standard_normal((1, 16)).astype(np.float32)))
+    st = insert(st, a[0], jnp.asarray(0))
+    res = query(st, b, threshold=0.95, k=1)
+    assert not bool(res.hit[0])
+
+
+def test_store_lru_eviction():
+    st = init_store(capacity=3, dim=4)
+    e = jnp.asarray(_unit(np.eye(4, dtype=np.float32)))
+    st = insert_batch(st, e[:3], jnp.arange(3))
+    # touch slot of key 1 and 2 (make key 0 the LRU)
+    res = query(st, e[1:3], threshold=0.9)
+    st = touch(st, res.slots[:, 0], res.hit)
+    st = insert(st, e[3], jnp.asarray(3))  # must evict key 0
+    res0 = query(st, e[0:1], threshold=0.9)
+    assert not bool(res0.hit[0])
+    res3 = query(st, e[3:4], threshold=0.9)
+    assert bool(res3.hit[0])
+
+
+def test_store_ttl_eviction():
+    st = init_store(capacity=8, dim=4)
+    e = jnp.asarray(_unit(np.eye(4, dtype=np.float32)))
+    st = insert_batch(st, e, jnp.arange(4))
+    st = evict_older_than(st, max_age=2)  # clock=4; ages 3,2,1,0
+    assert float(occupancy(st)) == pytest.approx(3 / 8)
+
+
+def test_semantic_cache_end_to_end():
+    cache = SemanticCache(capacity=32, dim=16, threshold=0.9)
+    e = _unit(rng.standard_normal((4, 16)).astype(np.float32))
+    hits, scores, values = cache.lookup(e)
+    assert not hits.any()
+    cache.insert(e[:2], ["resp-a", "resp-b"])
+    hits, scores, values = cache.lookup(e)
+    assert list(hits) == [True, True, False, False]
+    assert values[0] == "resp-a" and values[1] == "resp-b"
+    assert len(cache) == 2
+    # near-duplicate (small perturbation) still hits
+    e_near = _unit(e[:1] + 0.01 * rng.standard_normal((1, 16)))
+    hits, scores, values = cache.lookup(e_near)
+    assert hits[0] and values[0] == "resp-a"
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def test_online_loss_focuses_on_hard_pairs():
+    # construct: 1 easy positive (identical), 1 hard positive (far),
+    # 1 easy negative (orthogonal), 1 hard negative (close)
+    d = 32
+    base = _unit(rng.standard_normal((1, d)).astype(np.float32))
+    orth = _unit(rng.standard_normal((1, d)).astype(np.float32))
+    e1 = jnp.asarray(np.concatenate([base, base, base, base]))
+    e2 = jnp.asarray(np.concatenate([
+        base,                         # pos, dist 0 (easy)
+        _unit(base + 2.0 * orth),     # pos, far  (hard)
+        orth,                         # neg, far  (easy)
+        _unit(base + 0.1 * orth),     # neg, close (hard)
+    ]))
+    lab = jnp.asarray([1, 1, 0, 0])
+    loss = online_contrastive_loss(e1, e2, lab)
+    # removing the two easy pairs must not change the (unnormalised) loss
+    loss_hard_only = online_contrastive_loss(
+        e1[jnp.asarray([1, 3])], e2[jnp.asarray([1, 3])],
+        jnp.asarray([1, 0]))
+    np.testing.assert_allclose(float(loss) * 4, float(loss_hard_only) * 2,
+                               rtol=1e-5)
+
+
+def test_online_loss_gradients_finite():
+    e1 = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    e2 = jnp.asarray(rng.standard_normal((16, 8)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 2, 16))
+    g = jax.grad(lambda a: online_contrastive_loss(a, e2, lab))(e1)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_plain_contrastive_uses_all_pairs():
+    e1 = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    e2 = jnp.asarray(rng.standard_normal((8, 4)), jnp.float32)
+    lab = jnp.ones(8, jnp.int32)
+    assert float(contrastive_loss(e1, e2, lab)) > 0
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+def test_metrics_perfect_separation():
+    scores = np.concatenate([np.full(50, 0.9), np.full(50, 0.1)])
+    labels = np.concatenate([np.ones(50, np.int32), np.zeros(50, np.int32)])
+    m = pair_classification_metrics(scores, labels)
+    assert m["precision"] == 1.0 and m["recall"] == 1.0
+    assert m["ap"] == 1.0 and m["accuracy"] == 1.0
+    assert 0.1 < m["f1_threshold"] < 0.9
+
+
+def test_metrics_random_scores_ap_near_half():
+    scores = rng.random(2000)
+    labels = rng.integers(0, 2, 2000).astype(np.int32)
+    m = pair_classification_metrics(scores, labels)
+    assert 0.4 < m["ap"] < 0.6
+
+
+def test_metrics_at_threshold():
+    scores = np.asarray([0.9, 0.8, 0.3, 0.2])
+    labels = np.asarray([1, 0, 1, 0], np.int32)
+    m = metrics_at_threshold(scores, labels, 0.5)
+    assert m["precision"] == 0.5 and m["recall"] == 0.5

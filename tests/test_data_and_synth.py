@@ -1,0 +1,85 @@
+"""Data pipeline (tokenizer, corpora, batching) + synthetic pipeline."""
+import numpy as np
+import pytest
+
+from repro.core.synth import (
+    TemplateGenerator, export_jsonl, generate_synthetic_pairs, import_jsonl,
+    records_to_dataset,
+)
+from repro.data import (
+    HashTokenizer, PAD, BOS, EOS, iter_batches, make_pair_dataset,
+    make_query_stream, sample_query, tokenize_pairs,
+)
+
+
+def test_tokenizer_deterministic_and_bounded():
+    tok = HashTokenizer(vocab_size=1024)
+    a1, m1 = tok.encode("What are the symptoms of diabetes?", 16)
+    a2, m2 = tok.encode("What are the symptoms of diabetes?", 16)
+    np.testing.assert_array_equal(a1, a2)
+    assert a1[0] == BOS and a1[m1.sum() - 1] == EOS
+    assert a1.max() < 1024 and (a1[~m1] == PAD).all()
+
+
+def test_tokenizer_distinguishes_words():
+    tok = HashTokenizer(vocab_size=50368)
+    a, _ = tok.encode("treat heart attack", 8)
+    b, _ = tok.encode("diagnose heart attack", 8)
+    assert not np.array_equal(a, b)
+
+
+@pytest.mark.parametrize("domain", ["medical", "quora"])
+def test_pair_dataset_structure(domain):
+    ds = make_pair_dataset(domain, 400, seed=1)
+    assert len(ds) == 400
+    pos_frac = ds.labels.mean()
+    assert 0.4 < pos_frac < 0.6
+    # positives share entity+aspect wording structure but differ textually
+    dup_same = sum(1 for q1, q2, l in zip(ds.q1, ds.q2, ds.labels)
+                   if l == 1 and q1 == q2)
+    assert dup_same / max(ds.labels.sum(), 1) < 0.2  # mostly paraphrased
+    tr, ev = ds.split(0.2, seed=0)
+    assert len(tr) + len(ev) == 400 and len(ev) == 80
+
+
+def test_query_stream_has_repeats():
+    stream = make_query_stream("medical", 300, seed=0, repeat_frac=0.33)
+    keys = [(q.entity, q.aspect) for q in stream]
+    n_repeat = len(keys) - len(set(keys))
+    assert n_repeat > 30  # ~33% repetition structure
+
+
+def test_batching_shapes():
+    ds = make_pair_dataset("quora", 100, seed=2)
+    tok = HashTokenizer(vocab_size=2048)
+    arrays = tokenize_pairs(ds, tok, max_len=24)
+    batches = list(iter_batches(arrays, 16, epochs=2))
+    assert len(batches) == 2 * (100 // 16)
+    b = batches[0]
+    assert b["tok1"].shape == (16, 24) and b["label"].shape == (16,)
+
+
+def test_synth_pipeline_dual_labeling():
+    rng = np.random.default_rng(0)
+    unlabeled = [sample_query(rng, "medical") for _ in range(20)]
+    gen = TemplateGenerator(seed=1)
+    records = generate_synthetic_pairs(unlabeled, gen, n_pos=2, n_neg=2)
+    assert len(records) == 80
+    pos = [r for r in records if r.is_duplicate == 1]
+    neg = [r for r in records if r.is_duplicate == 0]
+    assert len(pos) == len(neg) == 40
+    # paraphrases differ in surface form from the original
+    assert all(r.question1 != r.question2 for r in pos)
+    ds = records_to_dataset(records)
+    assert len(ds) == 80 and ds.labels.sum() == 40
+
+
+def test_synth_jsonl_roundtrip(tmp_path):
+    rng = np.random.default_rng(3)
+    unlabeled = [sample_query(rng, "quora") for _ in range(5)]
+    records = generate_synthetic_pairs(unlabeled, TemplateGenerator(0))
+    p = str(tmp_path / "synth.jsonl")
+    export_jsonl(records, p)
+    back = import_jsonl(p)
+    assert [r.question1 for r in back] == [r.question1 for r in records]
+    assert [r.is_duplicate for r in back] == [r.is_duplicate for r in records]

@@ -1,0 +1,152 @@
+"""IVF index, threshold calibration, and the continuous batcher."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.calibration import (
+    calibrate_for_false_hit_budget, calibrate_for_precision,
+)
+from repro.core.ivf import build_ivf, ivf_occupancy, ivf_query
+from repro.core.store import init_store, insert_batch, query
+from repro.models import init_lm, split
+from repro.serving.scheduler import ContinuousBatcher, Request
+
+rng = np.random.default_rng(21)
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def _clustered_keys(n_clusters=16, per=32, d=32, spread=0.15):
+    cents = _unit(rng.standard_normal((n_clusters, d)).astype(np.float32))
+    keys = np.repeat(cents, per, axis=0)
+    keys = _unit(keys + spread * rng.standard_normal(keys.shape
+                                                     ).astype(np.float32))
+    return keys
+
+
+# ---------------------------------------------------------------------------
+# IVF
+# ---------------------------------------------------------------------------
+
+def test_ivf_recall_on_clustered_keys():
+    keys = _clustered_keys()
+    N = len(keys)
+    valid = jnp.ones(N, bool)
+    vids = jnp.arange(N)
+    state = build_ivf(jnp.asarray(keys), valid, vids, n_clusters=16,
+                      bucket=64)
+    assert float(ivf_occupancy(state)) > 0.99
+    # query with slightly perturbed members: exact match must be found
+    q_idx = rng.choice(N, 32, replace=False)
+    q = jnp.asarray(_unit(keys[q_idx] + 0.01 * rng.standard_normal(
+        (32, keys.shape[1])).astype(np.float32)))
+    s, slots, v, hit = ivf_query(state, q, threshold=0.9, k=1, n_probe=4)
+    exact_s, exact_i = None, None
+    flat = init_store(N, keys.shape[1])
+    flat = insert_batch(flat, jnp.asarray(keys), vids)
+    res = query(flat, q, threshold=0.9, k=1)
+    agreement = np.mean(np.asarray(v[:, 0]) == np.asarray(
+        res.value_ids[:, 0]))
+    assert agreement > 0.9, agreement     # >90% top-1 recall vs exact
+    assert bool(jnp.all(hit == res.hit)) or agreement > 0.9
+
+
+def test_ivf_respects_validity():
+    keys = _clustered_keys(4, 16)
+    N = len(keys)
+    valid = jnp.asarray(np.arange(N) % 2 == 0)
+    state = build_ivf(jnp.asarray(keys), valid, jnp.arange(N),
+                      n_clusters=4, bucket=32)
+    q = jnp.asarray(keys[1:2])  # an INVALID row's key
+    s, slots, v, hit = ivf_query(state, q, threshold=0.999, k=1, n_probe=4)
+    assert int(v[0, 0]) != 1  # must not return the invalid row
+
+
+def test_ivf_query_jits():
+    keys = _clustered_keys(8, 16)
+    state = build_ivf(jnp.asarray(keys), jnp.ones(len(keys), bool),
+                      jnp.arange(len(keys)), n_clusters=8, bucket=32)
+    f = jax.jit(lambda st, q: ivf_query(st, q, 0.9, 2, 2))
+    s, slots, v, hit = f(state, jnp.asarray(keys[:4]))
+    assert s.shape == (4, 2)
+
+
+# ---------------------------------------------------------------------------
+# calibration
+# ---------------------------------------------------------------------------
+
+def _scored_pairs(n=2000, sep=1.0):
+    labels = rng.integers(0, 2, n).astype(np.int32)
+    scores = rng.normal(labels * sep, 0.5)
+    return scores, labels
+
+
+def test_calibrate_for_precision():
+    scores, labels = _scored_pairs()
+    cal = calibrate_for_precision(scores, labels, min_precision=0.95)
+    assert cal.expected_precision >= 0.95
+    pred = scores >= cal.threshold
+    emp_prec = (pred & (labels == 1)).sum() / max(pred.sum(), 1)
+    assert emp_prec >= 0.93
+
+
+def test_calibrate_for_false_hit_budget():
+    scores, labels = _scored_pairs()
+    cal = calibrate_for_false_hit_budget(scores, labels,
+                                         max_false_hit_rate=0.02)
+    assert cal.false_hit_rate <= 0.02 + 1e-9
+    neg = scores[labels == 0]
+    assert (neg >= cal.threshold).mean() <= 0.025
+
+
+# ---------------------------------------------------------------------------
+# continuous batcher
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def batcher_setup():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    pv, _ = split(init_lm(cfg, jax.random.PRNGKey(0)))
+    return cfg, pv
+
+
+def test_continuous_batching_completes_all(batcher_setup):
+    cfg, pv = batcher_setup
+    b = ContinuousBatcher(cfg, pv, n_slots=3, max_len=64, prompt_len=8)
+    reqs = [Request(uid=i,
+                    prompt=rng.integers(4, cfg.vocab_size, 6).astype(
+                        np.int32),
+                    max_new_tokens=4 + (i % 3))
+            for i in range(7)]
+    for r in reqs:
+        b.submit(r)
+    done = b.run(max_ticks=200)
+    assert sorted(done) == list(range(7))
+    for r in done.values():
+        assert 1 <= len(r.generated) <= r.max_new_tokens
+        assert all(0 <= t < cfg.vocab_size for t in r.generated)
+
+
+def test_continuous_batching_matches_sequential(batcher_setup):
+    """Tokens produced in the slot pool must equal a lone generation
+    (slot isolation: no cross-request state leakage)."""
+    cfg, pv = batcher_setup
+    prompt = rng.integers(4, cfg.vocab_size, 6).astype(np.int32)
+
+    lone = ContinuousBatcher(cfg, pv, n_slots=1, max_len=64, prompt_len=8)
+    lone.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+    ref = lone.run()[0].generated
+
+    crowd = ContinuousBatcher(cfg, pv, n_slots=3, max_len=64, prompt_len=8)
+    crowd.submit(Request(uid=0, prompt=prompt, max_new_tokens=5))
+    for i in range(1, 5):
+        crowd.submit(Request(uid=i,
+                             prompt=rng.integers(4, cfg.vocab_size, 6
+                                                 ).astype(np.int32),
+                             max_new_tokens=5))
+    out = crowd.run()[0].generated
+    assert out == ref, (out, ref)

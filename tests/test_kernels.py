@@ -1,0 +1,173 @@
+"""Per-kernel validation: interpret-mode Pallas vs pure-jnp oracle,
+swept over shapes/dtypes (assignment: assert_allclose against ref)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.cosine_topk import kernel as ctk_kernel, ref as ctk_ref
+from repro.kernels.decode_attention import kernel as da_kernel, ref as da_ref
+from repro.kernels.flash_attention import kernel as fa_kernel, ref as fa_ref
+from repro.kernels.contrastive import kernel as cl_kernel, ref as cl_ref
+from repro.kernels.contrastive.ops import online_contrastive_loss as ocl_op
+from repro.core.losses import online_contrastive_loss as ocl_ref
+
+rng = np.random.default_rng(42)
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# cosine_topk
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("Q,N,D,k,block_n", [
+    (4, 64, 32, 1, 32),
+    (8, 1000, 64, 3, 256),    # non-divisible N -> padding path
+    (16, 512, 128, 4, 128),
+    (1, 2048, 256, 2, 512),
+])
+def test_cosine_topk_matches_ref(Q, N, D, k, block_n):
+    q = _unit(rng.standard_normal((Q, D)).astype(np.float32))
+    keys = _unit(rng.standard_normal((N, D)).astype(np.float32))
+    valid = rng.random(N) > 0.25
+    s_ref, i_ref = ctk_ref.cosine_topk(jnp.asarray(q), jnp.asarray(keys),
+                                       jnp.asarray(valid), k)
+    s_k, i_k = ctk_kernel.cosine_topk(jnp.asarray(q), jnp.asarray(keys),
+                                      jnp.asarray(valid), k,
+                                      block_n=block_n, interpret=True)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_k), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(i_ref), np.asarray(i_k))
+
+
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_cosine_topk_dtypes(dtype):
+    q = jnp.asarray(_unit(rng.standard_normal((4, 64)).astype(np.float32)),
+                    dtype)
+    keys = jnp.asarray(_unit(rng.standard_normal((128, 64)).astype(
+        np.float32)), dtype)
+    valid = jnp.ones(128, bool)
+    s_ref, i_ref = ctk_ref.cosine_topk(q, keys, valid, 2)
+    s_k, i_k = ctk_kernel.cosine_topk(q, keys, valid, 2, block_n=64,
+                                      interpret=True)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_k), atol=2e-2)
+
+
+def test_cosine_topk_all_invalid():
+    q = jnp.asarray(_unit(rng.standard_normal((2, 32)).astype(np.float32)))
+    keys = jnp.asarray(_unit(rng.standard_normal((64, 32)).astype(np.float32)))
+    valid = jnp.zeros(64, bool)
+    s, i = ctk_kernel.cosine_topk(q, keys, valid, 1, block_n=32,
+                                  interpret=True)
+    assert float(jnp.max(s)) < -1e20  # nothing can "hit"
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,Sq,hd,causal,window,bq,bkv", [
+    (2, 4, 2, 128, 64, True, 0, 64, 64),
+    (1, 4, 4, 100, 32, True, 0, 32, 32),     # ragged seq -> padding
+    (2, 8, 2, 64, 32, False, 0, 32, 32),     # encoder (bidirectional)
+    (1, 4, 2, 128, 32, True, 48, 32, 32),    # sliding window
+    (1, 2, 1, 96, 128, True, 0, 48, 24),     # MQA + uneven blocks
+])
+def test_flash_attention_matches_ref(B, H, KV, Sq, hd, causal, window,
+                                     bq, bkv):
+    q = jnp.asarray(rng.standard_normal((B, H, Sq, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, KV, Sq, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, KV, Sq, hd)), jnp.float32)
+    o_ref = fa_ref.flash_attention(q, k, v, causal=causal, window=window)
+    o_k = fa_kernel.flash_attention(q, k, v, causal=causal, window=window,
+                                    block_q=bq, block_kv=bkv, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_k),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(rng.standard_normal((1, 4, 64, 32)), jnp.bfloat16)
+    k = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.bfloat16)
+    v = jnp.asarray(rng.standard_normal((1, 2, 64, 32)), jnp.bfloat16)
+    o_ref = fa_ref.flash_attention(q, k, v, causal=True)
+    o_k = fa_kernel.flash_attention(q, k, v, causal=True, block_q=32,
+                                    block_kv=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref, np.float32),
+                               np.asarray(o_k, np.float32), atol=3e-2)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,H,KV,L,hd,bl", [
+    (2, 4, 2, 300, 64, 128),
+    (1, 8, 1, 1000, 32, 256),   # MQA long cache
+    (3, 4, 4, 128, 128, 64),
+])
+def test_decode_attention_matches_ref(B, H, KV, L, hd, bl):
+    q = jnp.asarray(rng.standard_normal((B, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, L, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, L, KV, hd)), jnp.float32)
+    valid = jnp.asarray(rng.random((B, L)) > 0.2)
+    o_ref = da_ref.decode_attention(q, k, v, valid)
+    o_k = da_kernel.decode_attention(q, k, v, valid, block_l=bl,
+                                     interpret=True)
+    np.testing.assert_allclose(np.asarray(o_ref), np.asarray(o_k),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_decode_attention_matches_model_path():
+    """Kernel agrees with the model's own decode attention math."""
+    from repro.models.attention import gqa_attention
+    B, H, KV, L, hd = 2, 4, 2, 64, 32
+    q4 = jnp.asarray(rng.standard_normal((B, 1, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, L, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, L, KV, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    o_model = gqa_attention(q4, k, v, q_pos=jnp.asarray([L - 1]),
+                            kv_pos=pos, causal=True, window=0,
+                            kv_valid=jnp.ones((B, L), bool), chunked=False)
+    o_kernel = da_kernel.decode_attention(q4[:, 0], k, v,
+                                          jnp.ones((B, L), bool),
+                                          block_l=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(o_model[:, 0]),
+                               np.asarray(o_kernel), atol=2e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# contrastive
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,D,bb", [(16, 64, 8), (100, 128, 32),
+                                    (256, 768, 128)])
+def test_contrastive_components_match(B, D, bb):
+    e1 = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    e2 = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 2, B), jnp.int32)
+    ref = cl_ref.contrastive_components(e1, e2, lab)
+    ker = cl_kernel.contrastive_components(e1, e2, lab, block_b=bb,
+                                           interpret=True)
+    for a, b in zip(ref, ker):
+        np.testing.assert_allclose(float(a), float(b), atol=1e-5, rtol=1e-5)
+
+
+def test_contrastive_op_equals_core_loss():
+    for B in (16, 64):
+        e1 = jnp.asarray(rng.standard_normal((B, 32)), jnp.float32)
+        e2 = jnp.asarray(rng.standard_normal((B, 32)), jnp.float32)
+        lab = jnp.asarray(rng.integers(0, 2, B), jnp.int32)
+        a = float(ocl_ref(e1, e2, lab))
+        b = float(ocl_op(e1, e2, lab, use_kernel=True))
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_contrastive_single_class_fallback():
+    e1 = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    e2 = jnp.asarray(rng.standard_normal((8, 16)), jnp.float32)
+    all_pos = jnp.ones(8, jnp.int32)
+    a = float(ocl_ref(e1, e2, all_pos))
+    b = float(ocl_op(e1, e2, all_pos, use_kernel=True))
+    np.testing.assert_allclose(a, b, atol=1e-6)

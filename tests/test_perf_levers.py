@@ -1,0 +1,67 @@
+"""§Perf levers must not change semantics: chunked loss is exact,
+bf16 attention is close, shard_map lookup matches the GSPMD reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.store import init_store, insert_batch, query, query_sharded
+from repro.launch.mesh import make_host_mesh
+from repro.models import init_lm, lm_loss, split
+
+rng = np.random.default_rng(11)
+
+
+@pytest.fixture(scope="module")
+def phi3_setup():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    pv, _ = split(init_lm(cfg, jax.random.PRNGKey(0)))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 33), 0,
+                              cfg.vocab_size)
+    return cfg, pv, toks
+
+
+def test_loss_chunk_exact(phi3_setup):
+    cfg, pv, toks = phi3_setup
+    l0, _ = lm_loss(pv, cfg, toks)
+    for chunk in (1, 8, 17, 32):
+        l1, _ = lm_loss(pv, cfg.replace(loss_chunk=chunk), toks)
+        np.testing.assert_allclose(float(l0), float(l1), atol=2e-5)
+
+
+def test_attn_bf16_close(phi3_setup):
+    cfg, pv, toks = phi3_setup
+    l0, _ = lm_loss(pv, cfg, toks)
+    l1, _ = lm_loss(pv, cfg.replace(attn_f32=False), toks)
+    assert abs(float(l0) - float(l1)) < 0.05
+
+
+def test_attn_bf16_grads_finite(phi3_setup):
+    cfg, pv, toks = phi3_setup
+    cfg2 = cfg.replace(attn_f32=False, loss_chunk=8)
+    g = jax.grad(lambda p: lm_loss(p, cfg2, toks)[0])(pv)
+    assert all(bool(jnp.all(jnp.isfinite(l)))
+               for l in jax.tree_util.tree_leaves(g))
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def test_query_sharded_matches_reference():
+    mesh = make_host_mesh(1, 1)  # 'model' axis of size 1 on CPU
+    st = init_store(capacity=128, dim=16)
+    embs = jnp.asarray(_unit(rng.standard_normal((50, 16)).astype(
+        np.float32)))
+    st = insert_batch(st, embs, jnp.arange(50))
+    q = jnp.asarray(_unit(rng.standard_normal((8, 16)).astype(np.float32)))
+    ref = query(st, q, threshold=0.8, k=2)
+    with mesh:
+        out = jax.jit(lambda s, qq: query_sharded(
+            s, qq, threshold=0.8, k=2, mesh=mesh))(st, q)
+    np.testing.assert_allclose(np.asarray(ref.scores),
+                               np.asarray(out.scores), atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ref.value_ids),
+                                  np.asarray(out.value_ids))
+    np.testing.assert_array_equal(np.asarray(ref.hit), np.asarray(out.hit))

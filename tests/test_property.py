@@ -1,0 +1,152 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.losses import cosine_distance, online_contrastive_loss
+from repro.core.metrics import average_precision, pair_classification_metrics
+from repro.core.store import init_store, insert, insert_batch, query
+from repro.data.tokenizer import HashTokenizer
+from repro.kernels.cosine_topk import kernel as ctk_kernel, ref as ctk_ref
+from repro.launch.sharding import TRAIN_RULES, resolve_pspec
+from repro.launch.mesh import make_host_mesh
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs oracle under random shapes
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 12), st.integers(8, 300), st.integers(4, 96),
+       st.integers(1, 4), st.integers(0, 10**6))
+def test_cosine_topk_property(Q, N, D, k, seed):
+    rng = np.random.default_rng(seed)
+    k = min(k, N)
+    q = jnp.asarray(_unit(rng.standard_normal((Q, D)).astype(np.float32)))
+    keys = jnp.asarray(_unit(rng.standard_normal((N, D)).astype(np.float32)))
+    valid = jnp.asarray(rng.random(N) > 0.2)
+    s_ref, i_ref = ctk_ref.cosine_topk(q, keys, valid, k)
+    s_k, i_k = ctk_kernel.cosine_topk(q, keys, valid, k, block_n=64,
+                                      interpret=True)
+    np.testing.assert_allclose(np.asarray(s_ref), np.asarray(s_k), atol=1e-5)
+    # scores sorted desc
+    assert bool(jnp.all(s_k[:, :-1] >= s_k[:, 1:] - 1e-6))
+
+
+# ---------------------------------------------------------------------------
+# loss invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(0, 10**6))
+def test_online_loss_nonneg_finite(B, D, seed):
+    rng = np.random.default_rng(seed)
+    e1 = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    e2 = jnp.asarray(rng.standard_normal((B, D)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 2, B), jnp.int32)
+    loss = float(online_contrastive_loss(e1, e2, lab))
+    assert np.isfinite(loss) and loss >= 0.0
+
+
+@settings(**SETTINGS)
+@given(st.integers(2, 32), st.integers(0, 10**6))
+def test_cosine_distance_range(B, seed):
+    rng = np.random.default_rng(seed)
+    e1 = jnp.asarray(rng.standard_normal((B, 16)), jnp.float32)
+    e2 = jnp.asarray(rng.standard_normal((B, 16)), jnp.float32)
+    d = np.asarray(cosine_distance(e1, e2))
+    assert (d >= -1e-5).all() and (d <= 2 + 1e-5).all()
+    # identical inputs -> distance 0
+    d0 = np.asarray(cosine_distance(e1, e1))
+    np.testing.assert_allclose(d0, 0.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# metric invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(10, 300), st.integers(0, 10**6))
+def test_metric_ranges(n, seed):
+    rng = np.random.default_rng(seed)
+    scores = rng.random(n)
+    labels = rng.integers(0, 2, n).astype(np.int32)
+    if labels.sum() in (0, n):
+        labels[0] = 1 - labels[0]
+    m = pair_classification_metrics(scores, labels)
+    for k in ("precision", "recall", "f1", "accuracy", "ap"):
+        assert 0.0 <= m[k] <= 1.0, (k, m[k])
+    # AP of a perfect ranking is 1
+    perfect = np.concatenate([np.ones(labels.sum()),
+                              np.zeros(n - labels.sum())])
+    srt = np.concatenate([np.linspace(1, 0.6, labels.sum()),
+                          np.linspace(0.4, 0, n - labels.sum())])
+    assert average_precision(srt, perfect.astype(np.int32)) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# store invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.integers(1, 16), st.integers(1, 30), st.integers(0, 10**6))
+def test_store_never_exceeds_capacity(cap, n_ins, seed):
+    rng = np.random.default_rng(seed)
+    st_ = init_store(cap, 8)
+    embs = jnp.asarray(_unit(rng.standard_normal((n_ins, 8)).astype(
+        np.float32)))
+    st_ = insert_batch(st_, embs, jnp.arange(n_ins))
+    assert int(np.asarray(st_.valid).sum()) == min(cap, n_ins)
+    # most recent insert is always findable
+    res = query(st_, embs[-1:], threshold=0.999)
+    assert bool(res.hit[0])
+
+
+# ---------------------------------------------------------------------------
+# tokenizer invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.text(min_size=0, max_size=200), st.integers(8, 64))
+def test_tokenizer_total(text, max_len):
+    tok = HashTokenizer(vocab_size=4096)
+    ids, mask = tok.encode(text, max_len)
+    assert ids.shape == (max_len,) and mask.shape == (max_len,)
+    assert ids.min() >= 0 and ids.max() < 4096
+    # deterministic
+    ids2, _ = tok.encode(text, max_len)
+    np.testing.assert_array_equal(ids, ids2)
+
+
+# ---------------------------------------------------------------------------
+# sharding resolution invariants
+# ---------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(st.lists(st.sampled_from([1, 2, 3, 5, 8, 16, 40, 48, 128, 1536]),
+                min_size=1, max_size=4),
+       st.integers(0, 10**6))
+def test_resolve_pspec_total(dims, seed):
+    rng = np.random.default_rng(seed)
+    mesh = make_host_mesh(1, 1)
+    names = ["batch", "embed", "heads", "mlp", "vocab", "experts", "cache",
+             "."]
+    axes = ",".join(names[int(rng.integers(len(names)))] for _ in dims)
+    spec = resolve_pspec(tuple(dims), axes, mesh, TRAIN_RULES)
+    # every mesh axis used at most once
+    used = [a for part in spec if part
+            for a in (part if isinstance(part, tuple) else (part,))]
+    assert len(used) == len(set(used))
+    # divisibility always holds
+    for dim, part in zip(dims, tuple(spec) + (None,) * len(dims)):
+        if part:
+            parts = part if isinstance(part, tuple) else (part,)
+            total = int(np.prod([mesh.shape[a] for a in parts]))
+            assert dim % total == 0

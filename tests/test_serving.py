@@ -1,0 +1,67 @@
+"""Serving engine + the cache-fronted LLM service (end-to-end path)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import SemanticCache
+from repro.core.embedders import HashNgramEmbedder
+from repro.data import HashTokenizer, make_query_stream
+from repro.models import init_lm, split
+from repro.serving import CachedLLMService, ServeEngine
+
+
+@pytest.fixture(scope="module")
+def tiny_engine():
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    pv, _ = split(init_lm(cfg, jax.random.PRNGKey(0)))
+    return cfg, ServeEngine(cfg, pv, max_len=64)
+
+
+def test_generate_batched(tiny_engine):
+    cfg, engine = tiny_engine
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (4, 12)).astype(np.int32)
+    res = engine.generate(prompts, max_new_tokens=8)
+    assert res.tokens.shape == (4, 8)
+    assert (res.tokens >= 0).all() and (res.tokens < cfg.vocab_size).all()
+
+
+def test_generate_deterministic_greedy(tiny_engine):
+    cfg, engine = tiny_engine
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 10)).astype(np.int32)
+    a = engine.generate(prompts, 6).tokens
+    b = engine.generate(prompts, 6).tokens
+    np.testing.assert_array_equal(a, b)
+
+
+def test_cached_service_hit_rate():
+    """The paper's deployment loop: repeated paraphrased queries should
+    produce cache hits and skip the LLM."""
+    emb = HashNgramEmbedder(dim=256)
+    cache = SemanticCache(capacity=512, dim=256, threshold=0.80)
+    svc = CachedLLMService(emb.embed, cache, engine=None,
+                           tokenizer=HashTokenizer())
+    stream = [q.text for q in make_query_stream("medical", 120, seed=0,
+                                                repeat_frac=0.4)]
+    for i in range(0, len(stream), 8):
+        out = svc.handle(stream[i:i + 8])
+        assert all(r.response is not None for r in out)
+    assert svc.stats["hits"] > 8, svc.stats
+    assert svc.stats["hits"] + svc.stats["misses"] == 120
+    # every hit's response must be a previously generated response
+    assert svc.hit_rate > 0.05
+
+
+def test_cached_service_identical_query_always_hits():
+    emb = HashNgramEmbedder(dim=128)
+    cache = SemanticCache(capacity=64, dim=128, threshold=0.95)
+    svc = CachedLLMService(emb.embed, cache, engine=None,
+                           tokenizer=HashTokenizer())
+    q = ["What are the symptoms of early stage diabetes?"]
+    first = svc.handle(q)[0]
+    assert not first.cache_hit
+    second = svc.handle(q)[0]
+    assert second.cache_hit
+    assert second.response == first.response
