@@ -15,6 +15,7 @@ def _registry():
         bench_table1_synthetic,
     )
     from benchmarks.kernel_benches import bench_kernels
+    from benchmarks.bench_tiered_cache import bench_tiered_cache
     return {
         "fig1": bench_fig1_quora,
         "fig2": bench_fig2_medical,
@@ -24,6 +25,7 @@ def _registry():
         "cache": bench_cache_hit_rate,
         "ablation": bench_ablation_loss,
         "kernels": bench_kernels,
+        "tiered": bench_tiered_cache,
     }
 
 

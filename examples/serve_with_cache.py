@@ -9,6 +9,11 @@ engine -> decoder backbone).
 Any assigned decoder arch works via --arch (reduced variant on CPU).
 Prints the hit/miss trace and the cost accounting the paper's Figure 4
 motivates (LLM forward passes saved by the cache).
+
+By default the serving path runs the tiered multi-tenant CacheService
+(hot exact tier + warm IVF tier, demotion, admission, response GC);
+pass --flat for the paper's bare SemanticCache, --tenants N to
+round-robin batches over N isolated logical caches.
 """
 import argparse
 import time
@@ -16,6 +21,7 @@ import time
 import jax
 import numpy as np
 
+from repro.cache_service import CacheService
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core import EmbedderTrainer, FinetuneConfig, SemanticCache
 from repro.data import HashTokenizer, make_pair_dataset, make_query_stream
@@ -32,6 +38,12 @@ def main():
     ap.add_argument("--threshold", type=float, default=0.93)
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--no-finetune", action="store_true")
+    ap.add_argument("--flat", action="store_true",
+                    help="use the paper's flat SemanticCache instead of "
+                         "the tiered CacheService")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="round-robin request batches over N logical "
+                         "tenants (tiered cache only)")
     args = ap.parse_args()
 
     # --- LLM backend (reduced variant of the assigned arch) -----------
@@ -49,8 +61,14 @@ def main():
         print("fine-tuning embedder (online contrastive, clip 0.5)...")
         trainer.fit(make_pair_dataset("medical", 1024, seed=0), tok)
 
-    cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
-                          threshold=args.threshold)
+    if args.flat:
+        cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
+                              threshold=args.threshold)
+    else:
+        cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
+                             warm_capacity=4096, n_clusters=32, bucket=256,
+                             n_probe=4, threshold=args.threshold,
+                             admission_margin=0.02, flush_size=128)
     svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
                            max_new_tokens=args.max_new_tokens)
 
@@ -62,8 +80,10 @@ def main():
     llm_time = 0.0
     for i in range(0, len(texts), args.batch):
         batch = texts[i:i + args.batch]
+        tenant = (i // args.batch) % max(args.tenants, 1)
         t1 = time.perf_counter()
-        results = svc.handle(batch)
+        results = svc.handle(batch, tenant=tenant) if not args.flat \
+            else svc.handle(batch)
         dt = time.perf_counter() - t1
         n_hit = sum(r.cache_hit for r in results)
         if i // args.batch < 5:
@@ -81,6 +101,14 @@ def main():
     print(f"LLM forward passes saved: {svc.stats['hits']} "
           f"({svc.stats['hits'] * args.max_new_tokens} decode steps)")
     print(f"wall time: {total:.1f}s  cache occupancy: {cache.occupancy:.1%}")
+    if not args.flat:
+        cs = cache.stats
+        print(f"tiers: hot hits {cs['hot_hits']}  warm hits "
+              f"{cs['warm_hits']}  demotions {cs['demotions']}  "
+              f"rebuilds {cs['rebuilds']}")
+        print(f"admission skips: {cs['admission_skips']}  "
+              f"responses GC'd: {cs['evictions']}  live: "
+              f"{len(cache.responses)}")
 
 
 if __name__ == "__main__":

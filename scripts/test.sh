@@ -1,0 +1,6 @@
+#!/usr/bin/env bash
+# Tier-1 verify: run the test suite with the src layout on PYTHONPATH.
+# Usage: scripts/test.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

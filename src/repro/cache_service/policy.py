@@ -1,0 +1,72 @@
+"""Per-tenant operating policy: thresholds and admission.
+
+The paper evaluates one global best-F1 threshold; a multi-tenant
+deployment runs one *operating point per tenant* (a medical tenant
+tolerates far fewer false hits than a chit-chat tenant).  Policies are
+plain host-side records resolved to per-query arrays at lookup time —
+the device functions only ever see traced (Q,) float thresholds, so a
+mixed-tenant batch costs zero recompiles.
+
+Admission: caching every miss fills the store with near-duplicates
+(paraphrase clusters collapse onto one representative anyway).  The
+score-margin rule skips inserting a miss whose best same-tenant score
+already sits within ``admission_margin`` of the hit threshold — the
+next paraphrase of that query would have hit the *existing* entry.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core.calibration import (
+    Calibration, calibrate_for_false_hit_budget,
+)
+
+
+@dataclass(frozen=True)
+class TenantPolicy:
+    threshold: float = 0.85        # hit operating point
+    admission_margin: float = 0.0  # skip insert if score >= thr - margin
+    calibration: Optional[Calibration] = None
+
+
+class PolicyTable:
+    """tenant id -> TenantPolicy, with a default for unknown tenants."""
+
+    def __init__(self, default: TenantPolicy):
+        self.default = default
+        self._by_tenant: Dict[int, TenantPolicy] = {}
+
+    def get(self, tenant: int) -> TenantPolicy:
+        return self._by_tenant.get(int(tenant), self.default)
+
+    def set(self, tenant: int, policy: TenantPolicy) -> None:
+        self._by_tenant[int(tenant)] = policy
+
+    def calibrate(self, tenant: int, scores, labels,
+                  max_false_hit_rate: float = 0.01) -> Calibration:
+        """Fit this tenant's threshold to a false-hit budget from its
+        own scored eval pairs (repro.core.calibration)."""
+        cal = calibrate_for_false_hit_budget(scores, labels,
+                                             max_false_hit_rate)
+        cur = self.get(tenant)
+        self.set(tenant, replace(cur, threshold=cal.threshold,
+                                 calibration=cal))
+        return cal
+
+    # ----- vectorised resolution for a query batch ---------------------
+    def thresholds_for(self, tenants: np.ndarray) -> np.ndarray:
+        return np.asarray([self.get(t).threshold for t in tenants],
+                          np.float32)
+
+    def admit_mask(self, tenants: np.ndarray,
+                   scores: Optional[np.ndarray]) -> np.ndarray:
+        """Admission decision per miss: True -> cache it."""
+        if scores is None:
+            return np.ones(len(tenants), bool)
+        thr = self.thresholds_for(tenants)
+        margin = np.asarray([self.get(t).admission_margin for t in tenants],
+                            np.float32)
+        return np.asarray(scores, np.float32) < thr - margin

@@ -1,0 +1,215 @@
+"""CacheService — the serving-path facade over the tiered store.
+
+Replaces bare ``SemanticCache`` in front of the LLM engine.  The host
+half owns response strings (a dict keyed by value id, garbage-collected
+from the eviction reports every device op returns) and the per-tenant
+policy table; the device half is `tiers`: a hot exact store, a warm IVF
+ring, and a single jitted cascaded lookup.
+
+Lifecycle of an entry:
+
+  insert (admitted miss) -> hot tier -> [cold] demotion flush -> warm
+  ring -> [ring wraps or tenant evicted] -> value id reported back ->
+  host frees the response string.
+
+The hot tier flushes its ``flush_size`` coldest rows to the warm ring
+whenever occupancy crosses ``flush_watermark``; every
+``rebuild_every``-th flush re-clusters the warm IVF (jittable k-means).
+Between rebuilds the warm lookup scans a fixed tail window sized to
+cover everything appended since the last rebuild, so recall does not
+dip while the index is stale.
+
+Drop-in surface: ``lookup(embs) / insert(embs, responses)`` match
+``SemanticCache``; the tenant-aware surface adds ``tenant=`` (scalar or
+per-row array) and ``scores=`` (admission) keywords.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache_service import tiers
+from repro.cache_service.policy import PolicyTable, TenantPolicy
+from repro.core.calibration import Calibration
+
+TenantArg = Union[int, Sequence[int], np.ndarray]
+
+
+class CacheService:
+    supports_tenants = True
+
+    def __init__(self, dim: int, *, hot_capacity: int = 1024,
+                 warm_capacity: int = 16384, n_clusters: int = 64,
+                 bucket: int = 256, n_probe: int = 8, topk: int = 1,
+                 threshold: float = 0.85, admission_margin: float = 0.0,
+                 flush_watermark: float = 0.85,
+                 flush_size: Optional[int] = None, rebuild_every: int = 1,
+                 kmeans_iters: int = 4, seed: int = 0):
+        if flush_size is None:
+            flush_size = max(hot_capacity // 4, 1)
+        flush_size = min(flush_size, hot_capacity, warm_capacity)
+        rebuild_every = max(rebuild_every, 1)
+        # every row appended since the last rebuild lies in this window
+        tail = min(flush_size * rebuild_every, warm_capacity)
+
+        self.dim = dim
+        self.hot_capacity = hot_capacity
+        self.warm_capacity = warm_capacity
+        self.flush_size = flush_size
+        self.flush_watermark = flush_watermark
+        self.rebuild_every = rebuild_every
+        self.topk = topk
+
+        self.hot = tiers.init_hot(hot_capacity, dim)
+        self.warm = tiers.init_warm(warm_capacity, dim, n_clusters, bucket)
+        self.policies = PolicyTable(TenantPolicy(threshold, admission_margin))
+        self.responses: Dict[int, str] = {}
+        self._next_vid = 0
+        self._tail = tail
+        self.stats = {"lookups": 0, "hot_hits": 0, "warm_hits": 0,
+                      "inserts": 0, "admission_skips": 0, "demotions": 0,
+                      "rebuilds": 0, "evictions": 0}
+
+        self._lookup = jax.jit(partial(tiers.cascade_lookup, k=topk,
+                                       n_probe=n_probe, tail=tail))
+        self._insert = jax.jit(tiers.hot_insert_batch)
+        self._touch = jax.jit(tiers.hot_touch)
+        self._demote = jax.jit(partial(tiers.demote_coldest, m=flush_size))
+        self._append = jax.jit(tiers.warm_append)
+        self._rebuild = jax.jit(partial(tiers.warm_rebuild, iters=kmeans_iters,
+                                        seed=seed))
+        self._evict_tenant = jax.jit(tiers.evict_tenant)
+
+    # ------------------------------------------------------------------
+    # tenant policy surface
+    # ------------------------------------------------------------------
+    def set_tenant_policy(self, tenant: int, threshold: float,
+                          admission_margin: float = 0.0) -> None:
+        self.policies.set(tenant, TenantPolicy(threshold, admission_margin))
+
+    def calibrate_tenant(self, tenant: int, scores, labels,
+                         max_false_hit_rate: float = 0.01) -> Calibration:
+        """Set this tenant's threshold from its own eval pairs under a
+        false-hit budget."""
+        return self.policies.calibrate(tenant, scores, labels,
+                                       max_false_hit_rate)
+
+    # ------------------------------------------------------------------
+    # serving surface
+    # ------------------------------------------------------------------
+    def _tenant_row(self, tenant: TenantArg, n: int) -> np.ndarray:
+        t = np.asarray(tenant, np.int32)
+        if t.ndim == 0:
+            t = np.full(n, int(t), np.int32)
+        assert t.shape == (n,), (t.shape, n)
+        return t
+
+    def lookup(self, embs, tenant: TenantArg = 0
+               ) -> Tuple[np.ndarray, np.ndarray, List[Optional[str]]]:
+        """embs: (B, D).  Returns (hit (B,) bool, score (B,), values)."""
+        embs = jnp.asarray(embs)
+        qt = self._tenant_row(tenant, embs.shape[0])
+        thr = self.policies.thresholds_for(qt)
+        res = self._lookup(self.hot, self.warm, embs, jnp.asarray(qt),
+                           jnp.asarray(thr))
+        self.hot = self._touch(self.hot, res.hot_slots, res.hot_hit)
+        hit = np.asarray(res.hit)
+        scores = np.asarray(res.scores[:, 0])
+        vids = np.asarray(res.value_ids[:, 0])
+        hot_hit = np.asarray(res.hot_hit)
+        self.stats["lookups"] += len(hit)
+        self.stats["hot_hits"] += int(hot_hit.sum())
+        self.stats["warm_hits"] += int((hit & ~hot_hit).sum())
+        values = [self.responses.get(int(v)) if h else None
+                  for h, v in zip(hit, vids)]
+        return hit, scores, values
+
+    def insert(self, embs, responses: Sequence[str], tenant: TenantArg = 0,
+               scores: Optional[np.ndarray] = None) -> int:
+        """Cache miss results.  ``scores`` (the best same-tenant score
+        each query saw at lookup) enables the admission rule; without it
+        every entry is admitted.  Returns the number admitted."""
+        embs = np.asarray(embs)
+        assert embs.shape[0] == len(responses)
+        qt = self._tenant_row(tenant, len(responses))
+        admit = self.policies.admit_mask(qt, scores)
+        vids = np.full(len(responses), -1, np.int64)
+        for i in np.nonzero(admit)[0]:
+            vids[i] = self._next_vid
+            self.responses[self._next_vid] = responses[i]
+            self._next_vid += 1
+        self.stats["inserts"] += int(admit.sum())
+        self.stats["admission_skips"] += int((~admit).sum())
+        self.hot, evicted = self._insert(
+            self.hot, jnp.asarray(embs),
+            jnp.asarray(vids, dtype=jnp.int32), jnp.asarray(qt))
+        self._gc(evicted)
+        self._maybe_flush()
+        return int(admit.sum())
+
+    def evict_tenant(self, tenant: int) -> int:
+        """Drop every entry of one tenant from both tiers; frees the
+        host strings.  Returns the number of entries evicted."""
+        self.hot, self.warm, h_ev, w_ev = self._evict_tenant(
+            self.hot, self.warm, jnp.asarray(tenant, jnp.int32))
+        return self._gc(h_ev) + self._gc(w_ev)
+
+    # ------------------------------------------------------------------
+    # internals
+    # ------------------------------------------------------------------
+    def _gc(self, evicted) -> int:
+        """Free response strings whose ids a device op reported evicted."""
+        ids = np.asarray(evicted)
+        n = 0
+        for v in ids[ids >= 0]:
+            if self.responses.pop(int(v), None) is not None:
+                n += 1
+        self.stats["evictions"] += n
+        return n
+
+    def _do_flush(self, rebuild: bool) -> None:
+        self.hot, dem = self._demote(self.hot)
+        self.warm, evicted = self._append(self.warm, dem)
+        self._gc(evicted)
+        self.stats["demotions"] += int(np.asarray(dem.mask).sum())
+        # the tail window only covers the last `tail` ring writes; a
+        # rebuild is forced before the unindexed backlog outgrows it,
+        # else demoted rows would silently fall out of reach
+        backlog = int(np.asarray(self.warm.total - self.warm.indexed_total))
+        if rebuild or backlog + self.flush_size > self._tail:
+            self.warm = self._rebuild(self.warm)
+            self.stats["rebuilds"] += 1
+
+    def _maybe_flush(self) -> None:
+        n_valid = int(np.asarray(self.hot.valid).sum())
+        if n_valid >= self.flush_watermark * self.hot_capacity:
+            self._do_flush(rebuild=False)
+
+    def flush(self, rebuild: bool = True) -> None:
+        """Force one demotion flush now.  ``rebuild=False`` still
+        rebuilds if skipping would leave rows beyond the tail window."""
+        self._do_flush(rebuild)
+
+    # ------------------------------------------------------------------
+    @property
+    def hot_occupancy(self) -> float:
+        return float(np.asarray(self.hot.valid).mean())
+
+    @property
+    def warm_occupancy(self) -> float:
+        return float(np.asarray(self.warm.valid).mean())
+
+    @property
+    def occupancy(self) -> float:
+        """Drop-in parity with SemanticCache (fraction of total rows)."""
+        n = int(np.asarray(self.hot.valid).sum()) \
+            + int(np.asarray(self.warm.valid).sum())
+        return n / (self.hot_capacity + self.warm_capacity)
+
+    def __len__(self) -> int:
+        return int(np.asarray(self.hot.valid).sum()) \
+            + int(np.asarray(self.warm.valid).sum())

@@ -1,0 +1,345 @@
+"""Pure-JAX device half of the tiered multi-tenant cache.
+
+Two tiers share one geometry (unit-norm cosine keys) and one id space
+(host-side ``value_ids``):
+
+  * HOT  — a small flat store that absorbs every admitted insert and
+    answers with exact brute-force top-k.  Rows carry a tenant-id
+    column; lookups mask on it, so one set of device arrays serves any
+    number of logical caches with zero per-tenant recompiles.
+  * WARM — a large ring buffer indexed by an IVF (centroids + fixed
+    bucket inverted lists).  Cold hot-tier rows are *demoted* here in
+    fixed-size flushes; the IVF is rebuilt periodically (jittable
+    k-means), and rows appended since the last rebuild stay reachable
+    through a fixed-size brute-force *tail* window, so recall does not
+    degrade between rebuilds.
+
+Every operation is a pure function over NamedTuple pytrees with static
+shapes — insert, demote, append, rebuild and the cascaded lookup all
+jit once per shape and shard like the flat store (rows over `model`).
+
+Cascade semantics: one jitted call scores both tiers and returns the
+best of the two top-k sets, plus provenance (``hot_hit``) so the host
+only bumps hot-tier LRU clocks.  Scores are cosine in both tiers, so
+"hot first, warm fallback" and "max over tiers" pick the same answers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ivf as ivf_lib
+
+NEG = -1e30
+
+
+class HotState(NamedTuple):
+    keys: jax.Array        # (N, D) float32, unit-norm rows
+    valid: jax.Array       # (N,)  bool
+    tenants: jax.Array     # (N,)  int32, -1 when invalid
+    last_used: jax.Array   # (N,)  int32 lamport clock
+    inserted_at: jax.Array  # (N,) int32
+    value_ids: jax.Array   # (N,)  int32 host-side response index
+    clock: jax.Array       # ()    int32
+
+
+class WarmState(NamedTuple):
+    keys: jax.Array        # (Nw, D) float32 unit-norm
+    valid: jax.Array       # (Nw,) bool
+    tenants: jax.Array     # (Nw,) int32
+    value_ids: jax.Array   # (Nw,) int32
+    write_seq: jax.Array   # (Nw,) int32 1-based global write sequence
+    cursor: jax.Array      # ()    int32 next ring position
+    total: jax.Array       # ()    int32 total rows ever appended
+    centroids: jax.Array   # (K, D)
+    members: jax.Array     # (K, bucket) int32 row ids, -1 empty
+    sizes: jax.Array       # (K,) int32
+    indexed_total: jax.Array  # () int32: `total` at the last rebuild
+
+
+class Demoted(NamedTuple):
+    keys: jax.Array        # (m, D)
+    value_ids: jax.Array   # (m,)
+    tenants: jax.Array     # (m,)
+    mask: jax.Array        # (m,) bool — False rows are padding
+
+
+class CascadeResult(NamedTuple):
+    scores: jax.Array      # (Q, k) best-of-both-tiers cosine, desc
+    value_ids: jax.Array   # (Q, k) -1 where no candidate
+    hot_slots: jax.Array   # (Q,)   hot-tier row of the hot top-1
+    hot_hit: jax.Array     # (Q,)   hit answered by the hot tier
+    hit: jax.Array         # (Q,)   best score >= per-query threshold
+
+
+# one cosine geometry everywhere: share the flat/IVF normalizer
+_unit = ivf_lib._unit
+
+
+# ---------------------------------------------------------------------------
+# hot tier
+# ---------------------------------------------------------------------------
+
+def init_hot(capacity: int, dim: int) -> HotState:
+    return HotState(
+        keys=jnp.zeros((capacity, dim), jnp.float32),
+        valid=jnp.zeros((capacity,), bool),
+        tenants=jnp.full((capacity,), -1, jnp.int32),
+        last_used=jnp.zeros((capacity,), jnp.int32),
+        inserted_at=jnp.zeros((capacity,), jnp.int32),
+        value_ids=jnp.full((capacity,), -1, jnp.int32),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+def hot_axes() -> HotState:
+    """Logical sharding axes (encoded strings) for the hot pytree."""
+    return HotState(keys="corpus,.", valid="corpus", tenants="corpus",
+                    last_used="corpus", inserted_at="corpus",
+                    value_ids="corpus", clock="")
+
+
+def _choose_slot(state: HotState) -> jax.Array:
+    has_free = jnp.any(~state.valid)
+    first_free = jnp.argmax(~state.valid)
+    lru = jnp.argmin(jnp.where(state.valid, state.last_used,
+                               jnp.iinfo(jnp.int32).max))
+    return jnp.where(has_free, first_free, lru).astype(jnp.int32)
+
+
+def hot_insert(state: HotState, emb: jax.Array, value_id: jax.Array,
+               tenant: jax.Array) -> Tuple[HotState, jax.Array]:
+    """Insert one embedding; ``value_id < 0`` is an admission skip (no-op).
+
+    Returns (state, evicted_value_id) — the response id of an
+    overwritten valid slot (else -1) so the host can free its string.
+    """
+    emb = _unit(emb.astype(jnp.float32))
+    slot = _choose_slot(state)
+    clock = state.clock + 1
+    skip = value_id < 0
+    evicted = jnp.where(~skip & state.valid[slot], state.value_ids[slot], -1)
+    new = HotState(
+        keys=state.keys.at[slot].set(emb),
+        valid=state.valid.at[slot].set(True),
+        tenants=state.tenants.at[slot].set(tenant.astype(jnp.int32)),
+        last_used=state.last_used.at[slot].set(clock),
+        inserted_at=state.inserted_at.at[slot].set(clock),
+        value_ids=state.value_ids.at[slot].set(value_id.astype(jnp.int32)),
+        clock=clock,
+    )
+    state = jax.tree_util.tree_map(
+        lambda old, upd: jnp.where(skip, old, upd), state, new)
+    return state, evicted.astype(jnp.int32)
+
+
+def hot_insert_batch(state: HotState, embs: jax.Array, value_ids: jax.Array,
+                     tenants: jax.Array) -> Tuple[HotState, jax.Array]:
+    """Sequential batch insert.  Returns (state, evicted (M,) int32)."""
+
+    def body(s, xs):
+        e, vid, t = xs
+        s, ev = hot_insert(s, e, vid, t)
+        return s, ev
+
+    state, evicted = jax.lax.scan(body, state, (embs, value_ids, tenants))
+    return state, evicted
+
+
+def hot_touch(state: HotState, slots: jax.Array, hit: jax.Array) -> HotState:
+    """LRU bump for hit slots (slots: (Q,), hit: (Q,))."""
+    clock = state.clock + 1
+    safe = jnp.where(hit, slots, 0)
+    new_last = state.last_used.at[safe].max(
+        jnp.where(hit, clock, jnp.zeros_like(clock)))
+    return state._replace(last_used=new_last, clock=clock)
+
+
+def hot_query(state: HotState, q: jax.Array, q_tenants: jax.Array,
+              k: int = 1) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Exact tenant-masked top-k.  q: (Q, D), q_tenants: (Q,) int32."""
+    qn = _unit(q.astype(jnp.float32))
+    scores = qn @ state.keys.T                                    # (Q, N)
+    ok = state.valid[None, :] & (state.tenants[None, :]
+                                 == q_tenants[:, None])
+    scores = jnp.where(ok, scores, NEG)
+    s, slots = jax.lax.top_k(scores, k)
+    vids = jnp.where(s > NEG / 2, state.value_ids[slots], -1)
+    return s, slots, vids
+
+
+def demote_coldest(state: HotState, m: int) -> Tuple[HotState, Demoted]:
+    """Pop the m least-recently-used valid rows for warm-tier flush.
+
+    Returned ``mask`` is False on padding rows (fewer than m valid).
+    """
+    sentinel = jnp.iinfo(jnp.int32).min
+    # int32 throughout: a float32 cast would blur LRU ordering once the
+    # clock passes 2^24 (valid rows have last_used >= 1, so -last_used
+    # never collides with the sentinel)
+    coldness = jnp.where(state.valid, -state.last_used, sentinel)
+    top, idx = jax.lax.top_k(coldness, m)                         # coldest
+    mask = top > sentinel
+    new_valid = state.valid.at[idx].set(
+        jnp.where(mask, False, state.valid[idx]))
+    dem = Demoted(keys=state.keys[idx], value_ids=state.value_ids[idx],
+                  tenants=state.tenants[idx], mask=mask)
+    return state._replace(valid=new_valid), dem
+
+
+# ---------------------------------------------------------------------------
+# warm tier
+# ---------------------------------------------------------------------------
+
+def init_warm(capacity: int, dim: int, n_clusters: int,
+              bucket: int) -> WarmState:
+    return WarmState(
+        keys=jnp.zeros((capacity, dim), jnp.float32),
+        valid=jnp.zeros((capacity,), bool),
+        tenants=jnp.full((capacity,), -1, jnp.int32),
+        value_ids=jnp.full((capacity,), -1, jnp.int32),
+        write_seq=jnp.zeros((capacity,), jnp.int32),
+        cursor=jnp.zeros((), jnp.int32),
+        total=jnp.zeros((), jnp.int32),
+        centroids=jnp.zeros((n_clusters, dim), jnp.float32),
+        members=jnp.full((n_clusters, bucket), -1, jnp.int32),
+        sizes=jnp.zeros((n_clusters,), jnp.int32),
+        indexed_total=jnp.zeros((), jnp.int32),
+    )
+
+
+def warm_append(state: WarmState, dem: Demoted) -> Tuple[WarmState, jax.Array]:
+    """Ring-buffer append of a demoted batch (m <= warm capacity).
+
+    Returns (state, evicted (m,) int32) — response ids of overwritten
+    ring slots, -1 padding.  Appended rows are unindexed until the next
+    rebuild; `warm_query`'s tail window keeps them reachable.
+    """
+    cap = state.keys.shape[0]
+    offs = jnp.cumsum(dem.mask.astype(jnp.int32)) - 1              # (m,)
+    pos = (state.cursor + offs) % cap
+    dest = jnp.where(dem.mask, pos, cap)                           # cap=drop
+    safe = jnp.clip(dest, 0, cap - 1)
+    evicted = jnp.where(dem.mask & state.valid[safe],
+                        state.value_ids[safe], -1).astype(jnp.int32)
+    n = dem.mask.sum().astype(jnp.int32)
+    seqs = state.total + 1 + offs
+    return state._replace(
+        keys=state.keys.at[dest].set(_unit(dem.keys.astype(jnp.float32)),
+                                     mode="drop"),
+        valid=state.valid.at[dest].set(True, mode="drop"),
+        tenants=state.tenants.at[dest].set(dem.tenants, mode="drop"),
+        value_ids=state.value_ids.at[dest].set(dem.value_ids, mode="drop"),
+        write_seq=state.write_seq.at[dest].set(seqs, mode="drop"),
+        cursor=(state.cursor + n) % cap,
+        total=state.total + n,
+    ), evicted
+
+
+def warm_rebuild(state: WarmState, iters: int = 8,
+                 seed: int = 0) -> WarmState:
+    """Re-cluster the warm corpus and refill the inverted lists
+    (jittable: spherical k-means + the same static list fill as
+    `build_ivf`)."""
+    n_clusters, bucket = state.members.shape
+    cent = ivf_lib.kmeans(state.keys, state.valid, n_clusters, iters, seed)
+    members, sizes = ivf_lib.build_lists(state.keys, state.valid, cent,
+                                         bucket)
+    return state._replace(centroids=cent, members=members, sizes=sizes,
+                          indexed_total=state.total)
+
+
+def warm_query(state: WarmState, q: jax.Array, q_tenants: jax.Array,
+               k: int = 1, n_probe: int = 8, tail: int = 0
+               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """IVF probe + unindexed-tail scan, tenant-masked.
+
+    Candidates are the members of the ``n_probe`` nearest clusters plus
+    the last ``tail`` ring positions filtered to rows written after the
+    last rebuild.  With tail >= flush_size * rebuild_every, every live
+    row is reachable, so recall matches a full brute-force scan of the
+    probed clusters.
+    """
+    qn = _unit(q.astype(jnp.float32))
+    Q = qn.shape[0]
+    cap = state.keys.shape[0]
+    n_clusters, bucket = state.members.shape
+    n_probe = min(n_probe, n_clusters)
+
+    csims = qn @ state.centroids.T                                 # (Q, K)
+    _, probes = jax.lax.top_k(csims, n_probe)
+    cand = state.members[probes].reshape(Q, n_probe * bucket)
+    # partition candidates by write epoch so a slot overwritten after
+    # the rebuild (stale member entry + tail member) never appears
+    # twice: IVF side serves rows indexed at the last rebuild, the
+    # tail serves rows written after it.
+    is_tail = jnp.zeros(cand.shape, bool)
+    if tail:
+        tail_idx = (state.cursor - 1 - jnp.arange(tail, dtype=jnp.int32)) \
+            % cap
+        unindexed = state.write_seq[tail_idx] > state.indexed_total
+        tail_cand = jnp.where(unindexed, tail_idx, -1)
+        cand = jnp.concatenate(
+            [cand, jnp.broadcast_to(tail_cand[None, :], (Q, tail))], axis=1)
+        is_tail = jnp.concatenate(
+            [is_tail, jnp.ones((Q, tail), bool)], axis=1)
+
+    safe = jnp.clip(cand, 0, cap - 1)
+    ok = (cand >= 0) & state.valid[safe] \
+        & (state.tenants[safe] == q_tenants[:, None]) \
+        & (is_tail | (state.write_seq[safe] <= state.indexed_total))
+    scores = jnp.einsum("qd,qnd->qn", qn, state.keys[safe])
+    scores = jnp.where(ok, scores, NEG)
+    top_s, top_i = jax.lax.top_k(scores, k)
+    rows = jnp.arange(Q)[:, None]
+    slots = safe[rows, top_i]
+    vids = jnp.where(top_s > NEG / 2, state.value_ids[slots], -1)
+    return top_s, slots, vids
+
+
+def warm_occupancy(state: WarmState) -> jax.Array:
+    return jnp.mean(state.valid.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# cascade + tenant eviction
+# ---------------------------------------------------------------------------
+
+def cascade_lookup(hot: HotState, warm: WarmState, q: jax.Array,
+                   q_tenants: jax.Array, thresholds: jax.Array,
+                   k: int = 1, n_probe: int = 8,
+                   tail: int = 0) -> CascadeResult:
+    """One jitted lookup over both tiers.
+
+    thresholds: (Q,) per-query operating points (host-resolved from the
+    per-tenant policy table — a traced array, so mixed-tenant batches
+    never retrace).
+    """
+    hs, hslots, hvids = hot_query(hot, q, q_tenants, k)
+    ws, _, wvids = warm_query(warm, q, q_tenants, k, n_probe, tail)
+    all_s = jnp.concatenate([hs, ws], axis=1)                      # (Q, 2k)
+    all_v = jnp.concatenate([hvids, wvids], axis=1)
+    s, i = jax.lax.top_k(all_s, k)
+    rows = jnp.arange(s.shape[0])[:, None]
+    vids = all_v[rows, i]
+    hit = s[:, 0] >= thresholds
+    hot_hit = hit & (i[:, 0] < k)
+    return CascadeResult(scores=s, value_ids=vids, hot_slots=hslots[:, 0],
+                         hot_hit=hot_hit, hit=hit)
+
+
+def evict_tenant(hot: HotState, warm: WarmState, tenant: jax.Array
+                 ) -> Tuple[HotState, WarmState, jax.Array, jax.Array]:
+    """Invalidate every row of one tenant in both tiers.
+
+    Returns (hot, warm, hot_evicted, warm_evicted) where the evicted
+    arrays are capacity-sized value-id lists (-1 padding) for host GC.
+    """
+    h_kill = hot.valid & (hot.tenants == tenant)
+    w_kill = warm.valid & (warm.tenants == tenant)
+    h_ev = jnp.where(h_kill, hot.value_ids, -1)
+    w_ev = jnp.where(w_kill, warm.value_ids, -1)
+    return (hot._replace(valid=hot.valid & ~h_kill),
+            warm._replace(valid=warm.valid & ~w_kill), h_ev, w_ev)

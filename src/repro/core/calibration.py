@@ -55,17 +55,22 @@ def calibrate_for_false_hit_budget(scores, labels, max_false_hit_rate: float
     scores = np.asarray(scores, np.float64)
     labels = np.asarray(labels, np.int32)
     neg = np.sort(scores[labels == 0])
-    n_neg = max(len(neg), 1)
-    # threshold just above the (1-budget) negative quantile
-    idx = int(np.ceil((1.0 - max_false_hit_rate) * n_neg))
-    thr = float(neg[min(idx, n_neg - 1)] + 1e-9) if n_neg else 1.0
+    n_neg = len(neg)
     pos = scores[labels == 1]
+    if n_neg == 0:
+        # no negatives observed: any threshold satisfies the budget, so
+        # take the loosest one that still hits every positive
+        thr = float(pos.min()) if len(pos) else 1.0
+    else:
+        # threshold just above the (1-budget) negative quantile
+        idx = int(np.ceil((1.0 - max_false_hit_rate) * n_neg))
+        thr = float(neg[min(idx, n_neg - 1)] + 1e-9)
     tp = float((pos >= thr).sum())
-    fp = float((scores[labels == 0] >= thr).sum())
+    fp = float((neg >= thr).sum())
     return Calibration(
         threshold=thr,
         expected_precision=tp / max(tp + fp, 1.0),
         expected_recall=tp / max(len(pos), 1),
-        false_hit_rate=fp / n_neg,
+        false_hit_rate=fp / max(n_neg, 1),
         true_hit_rate=tp / max(len(pos), 1),
     )

@@ -38,11 +38,36 @@ def _unit(x, axis=-1):
     return x / jnp.maximum(jnp.linalg.norm(x, axis=axis, keepdims=True), 1e-9)
 
 
+def _farthest_first_init(keys, valid, k: int, key):
+    """Greedy farthest-point seeding (deterministic k-means++ flavour).
+
+    Uniform random seeding can drop two seeds into one paraphrase
+    cluster and none into another; the unseeded cluster then merges
+    into a neighbour and overflows its bucket.  Farthest-first picks
+    one seed per well-separated cluster by construction.  Jittable:
+    a k-step scan carrying the max-similarity-to-chosen vector.
+    """
+    n = keys.shape[0]
+    p = valid.astype(jnp.float32)
+    p = jnp.where(p.sum() > 0, p, jnp.ones_like(p))    # empty store: uniform
+    p = p / p.sum()
+    first = jax.random.choice(key, n, p=p)
+    nearest = keys @ keys[first]                       # sim to chosen set
+
+    def pick(nearest, _):
+        nxt = jnp.argmin(jnp.where(valid, nearest, jnp.inf))
+        nearest = jnp.maximum(nearest, keys @ keys[nxt])
+        return nearest, nxt
+
+    _, rest = jax.lax.scan(pick, nearest, None, length=k - 1)
+    return jnp.concatenate([first[None], rest])
+
+
 def kmeans(keys, valid, k: int, iters: int = 8, seed: int = 0):
     """Spherical k-means over the valid rows (cosine geometry)."""
     N, D = keys.shape
     key = jax.random.PRNGKey(seed)
-    idx = jax.random.choice(key, N, (k,), replace=False)
+    idx = _farthest_first_init(keys, valid, k, key)
     cent = _unit(keys[idx])
 
     def step(cent, _):
@@ -60,16 +85,14 @@ def kmeans(keys, valid, k: int, iters: int = 8, seed: int = 0):
     return cent
 
 
-def build_ivf(keys, valid, value_ids, *, n_clusters: int = 64,
-              bucket: int = 256, kmeans_iters: int = 8,
-              seed: int = 0) -> IVFState:
-    """Cluster the store and fill fixed-capacity inverted lists.
-    Overflowing members are dropped from the lists (they can still be
-    found by a periodic rebuild with a larger bucket — occupancy is
-    reported so callers can monitor)."""
-    keys = _unit(keys.astype(jnp.float32))
-    cent = kmeans(keys, valid, n_clusters, kmeans_iters, seed)
-    sims = keys @ cent.T
+def build_lists(keys, valid, centroids, bucket: int):
+    """Assign valid rows to their nearest centroid and fill the
+    fixed-capacity inverted lists.  Returns (members (K, bucket) int32
+    with -1 padding, sizes (K,) int32).  Jittable with static shapes —
+    the tiered cache's periodic warm-tier rebuild reuses this directly.
+    """
+    n_clusters = centroids.shape[0]
+    sims = keys @ centroids.T
     sims = jnp.where(valid[:, None], sims, -jnp.inf)
     assign = jnp.argmax(sims, axis=1)                      # (N,)
     assign = jnp.where(valid, assign, n_clusters)          # invalid -> drop
@@ -85,6 +108,19 @@ def build_ivf(keys, valid, value_ids, *, n_clusters: int = 64,
         order.astype(jnp.int32), mode="drop").reshape(n_clusters, bucket)
     sizes = jnp.minimum(
         jax.nn.one_hot(assign, n_clusters, dtype=jnp.int32).sum(0), bucket)
+    return members, sizes
+
+
+def build_ivf(keys, valid, value_ids, *, n_clusters: int = 64,
+              bucket: int = 256, kmeans_iters: int = 8,
+              seed: int = 0) -> IVFState:
+    """Cluster the store and fill fixed-capacity inverted lists.
+    Overflowing members are dropped from the lists (they can still be
+    found by a periodic rebuild with a larger bucket — occupancy is
+    reported so callers can monitor)."""
+    keys = _unit(keys.astype(jnp.float32))
+    cent = kmeans(keys, valid, n_clusters, kmeans_iters, seed)
+    members, sizes = build_lists(keys, valid, cent, bucket)
     return IVFState(centroids=cent, members=members, keys=keys,
                     valid=valid, value_ids=value_ids.astype(jnp.int32),
                     sizes=sizes)

@@ -90,12 +90,14 @@ class CachedLLMService:
                  tokenizer: HashTokenizer, max_query_len: int = 32,
                  max_new_tokens: int = 16):
         self.embed_fn = embed_fn          # list[str] -> (B, D) unit vectors
-        self.cache = cache                # repro.core.cache.SemanticCache
+        # SemanticCache or the tiered multi-tenant CacheService facade
+        self.cache = cache
         self.engine = engine
         self.tok = tokenizer
         self.max_query_len = max_query_len
         self.max_new_tokens = max_new_tokens
         self.stats = {"hits": 0, "misses": 0}
+        self._tenant_aware = getattr(cache, "supports_tenants", False)
 
     def _llm_answer(self, queries: List[str]) -> List[str]:
         if self.engine is None:  # degenerate echo backend for tests
@@ -104,9 +106,18 @@ class CachedLLMService:
         res = self.engine.generate(ids, self.max_new_tokens)
         return [" ".join(map(str, row)) for row in res.tokens]
 
-    def handle(self, queries: List[str]) -> List[ServedRequest]:
+    def handle(self, queries: List[str],
+               tenant: int = 0) -> List[ServedRequest]:
         embs = self.embed_fn(queries)
-        hits, scores, values = self.cache.lookup(embs)
+        if self._tenant_aware:
+            hits, scores, values = self.cache.lookup(embs, tenant=tenant)
+        else:
+            if tenant != 0:
+                raise ValueError(
+                    f"cache backend {type(self.cache).__name__} is not "
+                    "tenant-aware; serving tenant "
+                    f"{tenant} through it would break isolation")
+            hits, scores, values = self.cache.lookup(embs)
         out: List[Optional[ServedRequest]] = [None] * len(queries)
         miss_idx = [i for i, h in enumerate(hits) if not h]
         for i, q in enumerate(queries):
@@ -115,7 +126,14 @@ class CachedLLMService:
                 out[i] = ServedRequest(q, values[i], True, float(scores[i]))
         if miss_idx:
             answers = self._llm_answer([queries[i] for i in miss_idx])
-            self.cache.insert(embs[np.asarray(miss_idx)], answers)
+            sel = np.asarray(miss_idx)
+            if self._tenant_aware:
+                # pass the observed scores so the admission policy can
+                # skip misses already well-covered by a cached neighbour
+                self.cache.insert(embs[sel], answers, tenant=tenant,
+                                  scores=scores[sel])
+            else:
+                self.cache.insert(embs[sel], answers)
             for i, a in zip(miss_idx, answers):
                 self.stats["misses"] += 1
                 out[i] = ServedRequest(queries[i], a, False)

@@ -89,7 +89,7 @@ class ContinuousBatcher:
                 n = min(len(req.prompt), self.prompt_len)
                 toks[0, :n] = req.prompt[:n]
                 logits, st = self._prefill1(self.params, jnp.asarray(toks))
-                self.pool = _write_slot(self.pool, st, slot)
+                self.pool = self._write(self.pool, st, slot=slot)
                 self.slot_req[slot] = req
                 first = int(jnp.argmax(logits[0]))
                 self._next_tok[slot, 0] = first
