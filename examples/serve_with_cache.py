@@ -44,7 +44,12 @@ def main():
     ap.add_argument("--tenants", type=int, default=1,
                     help="round-robin request batches over N logical "
                          "tenants (tiered cache only)")
+    ap.add_argument("--fused", action="store_true",
+                    help="run the cascade through the fused Pallas "
+                         "lookup kernel (TPU; four-op fallback on CPU)")
     args = ap.parse_args()
+    if args.fused and args.flat:
+        ap.error("--fused requires the tiered CacheService (drop --flat)")
 
     # --- LLM backend (reduced variant of the assigned arch) -----------
     dec_cfg = get_config(args.arch).reduced()
@@ -68,7 +73,10 @@ def main():
         cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
                              warm_capacity=4096, n_clusters=32, bucket=256,
                              n_probe=4, threshold=args.threshold,
-                             admission_margin=0.02, flush_size=128)
+                             admission_margin=0.02, flush_size=128,
+                             fused=args.fused)
+        print(f"cascade path: {'fused kernel' if cache.fused else 'four-op'}"
+              f" (backend {jax.default_backend()})")
     svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
                            max_new_tokens=args.max_new_tokens)
 

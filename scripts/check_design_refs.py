@@ -1,0 +1,71 @@
+#!/usr/bin/env python3
+"""Doc lint: every ``DESIGN.md §N`` reference must resolve to a real
+section heading in DESIGN.md.
+
+Scans Python sources under src/, benchmarks/, examples/, tests/ and
+scripts/ for references of the form ``DESIGN.md §3``, ``DESIGN.md
+§5-6`` (numeric ranges expand) or ``DESIGN.md §Arch-applicability``,
+including references wrapped across a line break, and checks DESIGN.md
+contains a heading whose anchor is ``§<id>``.  Exits non-zero listing
+every dangling reference (CI runs this on every push).
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks", "examples", "tests", "scripts")
+# \s* spans newlines, so "DESIGN.md\n§3" in a wrapped docstring matches
+REF = re.compile(r"DESIGN\.md\s*§([A-Za-z0-9][A-Za-z0-9_-]*)")
+HEADING = re.compile(r"^#{1,6}\s*§([A-Za-z0-9][A-Za-z0-9_-]*)\b",
+                     re.MULTILINE)
+
+
+def expand(ref: str) -> list[str]:
+    """'5-6' -> ['5', '6']; anything else passes through."""
+    m = re.fullmatch(r"(\d+)-(\d+)", ref)
+    if m:
+        lo, hi = int(m.group(1)), int(m.group(2))
+        if lo <= hi:
+            return [str(n) for n in range(lo, hi + 1)]
+    return [ref]
+
+
+def main() -> int:
+    design = ROOT / "DESIGN.md"
+    if not design.exists():
+        print("FAIL: DESIGN.md does not exist but the tree cites it")
+        return 1
+    sections = set(HEADING.findall(design.read_text()))
+    # a numeric heading like '§3' also anchors dotted subsections (§3.1)
+    dangling = []
+    n_refs = 0
+    self_path = pathlib.Path(__file__).resolve()
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            if path.resolve() == self_path:  # §N placeholders above
+                continue
+            text = path.read_text()
+            for m in REF.finditer(text):
+                for sec in expand(m.group(1)):
+                    n_refs += 1
+                    if sec not in sections:
+                        line = text.count("\n", 0, m.start()) + 1
+                        dangling.append(
+                            f"{path.relative_to(ROOT)}:{line}: "
+                            f"DESIGN.md §{sec} has no matching heading")
+    if dangling:
+        print(f"FAIL: {len(dangling)} dangling DESIGN.md reference(s):")
+        print("\n".join(dangling))
+        print(f"\nheadings present: "
+              f"{', '.join(sorted(sections, key=str))}")
+        return 1
+    print(f"OK: {n_refs} DESIGN.md §-references resolve against "
+          f"{len(sections)} section headings")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

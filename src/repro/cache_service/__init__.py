@@ -9,15 +9,15 @@ from repro.cache_service.policy import PolicyTable, TenantPolicy
 from repro.cache_service.service import CacheService
 from repro.cache_service.tiers import (
     CascadeResult, Demoted, HotState, WarmState, cascade_lookup,
-    demote_coldest, evict_tenant, hot_insert, hot_insert_batch, hot_query,
-    hot_touch, init_hot, init_warm, warm_append, warm_occupancy, warm_query,
-    warm_rebuild,
+    cascade_query, demote_coldest, evict_tenant, hot_insert,
+    hot_insert_batch, hot_query, hot_touch, init_hot, init_warm,
+    warm_append, warm_occupancy, warm_query, warm_rebuild,
 )
 
 __all__ = [
     "CacheService", "PolicyTable", "TenantPolicy",
     "CascadeResult", "Demoted", "HotState", "WarmState", "cascade_lookup",
-    "demote_coldest", "evict_tenant", "hot_insert", "hot_insert_batch",
-    "hot_query", "hot_touch", "init_hot", "init_warm", "warm_append",
-    "warm_occupancy", "warm_query", "warm_rebuild",
+    "cascade_query", "demote_coldest", "evict_tenant", "hot_insert",
+    "hot_insert_batch", "hot_query", "hot_touch", "init_hot", "init_warm",
+    "warm_append", "warm_occupancy", "warm_query", "warm_rebuild",
 ]

@@ -25,6 +25,7 @@ per-row array) and ``scores=`` (admission) keywords.
 """
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -48,12 +49,42 @@ class CacheService:
                  threshold: float = 0.85, admission_margin: float = 0.0,
                  flush_watermark: float = 0.85,
                  flush_size: Optional[int] = None, rebuild_every: int = 1,
-                 kmeans_iters: int = 4, seed: int = 0):
+                 kmeans_iters: int = 4, seed: int = 0,
+                 fused: bool = False):
+        """Build the tiered service.
+
+        Tail invariant (see ``tiers.warm_query``): rows demoted into the
+        warm ring stay unindexed until the next IVF rebuild and are only
+        reachable through the brute-force tail window over the last
+        ``tail`` ring writes.  The window is sized
+        ``tail = flush_size * rebuild_every`` so that every row
+        appended between rebuilds is covered — that product therefore
+        must not exceed ``warm_capacity``.  When it does, the window is
+        clamped to ``warm_capacity`` and ``_do_flush`` forces rebuilds
+        earlier than ``rebuild_every`` would suggest (correct, but the
+        configured cadence is unattainable); a warning is emitted at
+        construction instead of silently accepting the config.
+
+        ``fused=True`` routes the cascade through the fused Pallas
+        lookup kernel (`kernels/cascade_lookup`) on TPU — subject to
+        the kernel's VMEM budget: the warm slice must fit on-chip
+        (DESIGN.md §3.1).  On CPU the flag falls back to the same
+        four-op math, so it never changes results or CPU latency.
+        """
         if flush_size is None:
             flush_size = max(hot_capacity // 4, 1)
         flush_size = min(flush_size, hot_capacity, warm_capacity)
         rebuild_every = max(rebuild_every, 1)
         # every row appended since the last rebuild lies in this window
+        if flush_size * rebuild_every > warm_capacity:
+            warnings.warn(
+                f"tail window flush_size*rebuild_every ("
+                f"{flush_size}*{rebuild_every}="
+                f"{flush_size * rebuild_every}) exceeds warm_capacity "
+                f"{warm_capacity}; clamping to warm_capacity and forcing "
+                "IVF rebuilds before the unindexed backlog outgrows the "
+                "window (the configured rebuild cadence will not be "
+                "honored)", stacklevel=2)
         tail = min(flush_size * rebuild_every, warm_capacity)
 
         self.dim = dim
@@ -70,12 +101,12 @@ class CacheService:
         self.responses: Dict[int, str] = {}
         self._next_vid = 0
         self._tail = tail
+        self._n_probe = n_probe
         self.stats = {"lookups": 0, "hot_hits": 0, "warm_hits": 0,
                       "inserts": 0, "admission_skips": 0, "demotions": 0,
                       "rebuilds": 0, "evictions": 0}
 
-        self._lookup = jax.jit(partial(tiers.cascade_lookup, k=topk,
-                                       n_probe=n_probe, tail=tail))
+        self.set_fused(fused)
         self._insert = jax.jit(tiers.hot_insert_batch)
         self._touch = jax.jit(tiers.hot_touch)
         self._demote = jax.jit(partial(tiers.demote_coldest, m=flush_size))
@@ -83,6 +114,14 @@ class CacheService:
         self._rebuild = jax.jit(partial(tiers.warm_rebuild, iters=kmeans_iters,
                                         seed=seed))
         self._evict_tenant = jax.jit(tiers.evict_tenant)
+
+    def set_fused(self, fused: bool) -> None:
+        """Select the cascade execution path (four-op vs fused kernel);
+        re-jits the lookup, so flipping it mid-serve costs one trace."""
+        self.fused = bool(fused)
+        self._lookup = jax.jit(partial(
+            tiers.cascade_query, k=self.topk, n_probe=self._n_probe,
+            tail=self._tail, fused=self.fused))
 
     # ------------------------------------------------------------------
     # tenant policy surface

@@ -22,6 +22,9 @@ Cascade semantics: one jitted call scores both tiers and returns the
 best of the two top-k sets, plus provenance (``hot_hit``) so the host
 only bumps hot-tier LRU clocks.  Scores are cosine in both tiers, so
 "hot first, warm fallback" and "max over tiers" pick the same answers.
+`cascade_query` selects between the four-op XLA composition and the
+fused Pallas kernel (`kernels/cascade_lookup`, DESIGN.md §3) — same
+results, one kernel launch.
 """
 from __future__ import annotations
 
@@ -327,6 +330,39 @@ def cascade_lookup(hot: HotState, warm: WarmState, q: jax.Array,
     hit = s[:, 0] >= thresholds
     hot_hit = hit & (i[:, 0] < k)
     return CascadeResult(scores=s, value_ids=vids, hot_slots=hslots[:, 0],
+                         hot_hit=hot_hit, hit=hit)
+
+
+def cascade_query(hot: HotState, warm: WarmState, q: jax.Array,
+                  q_tenants: jax.Array, thresholds: jax.Array,
+                  k: int = 1, n_probe: int = 8, tail: int = 0,
+                  fused: bool = False,
+                  use_kernel: bool | None = None) -> CascadeResult:
+    """Cascade lookup with a selectable execution path.
+
+    ``fused=False`` runs the original four-op XLA composition
+    (`cascade_lookup`), the parity reference.  ``fused=True`` routes
+    through `kernels/cascade_lookup` — one fused Pallas kernel on TPU
+    (candidate panels stay in VMEM; the bucket-gather round-trip
+    through HBM disappears) and the same four-op math as a single jnp
+    oracle on CPU / interpret mode.  Both paths return bit-identical
+    ``CascadeResult``s, including tenant masking, invalid slots and the
+    tail window; ``use_kernel`` forces the Pallas path (interpret mode
+    off-TPU) for parity tests.
+    """
+    if not fused:
+        return cascade_lookup(hot, warm, q, q_tenants, thresholds, k=k,
+                              n_probe=n_probe, tail=tail)
+    from repro.kernels.cascade_lookup import ops as _casc_ops
+    qn = _unit(q.astype(jnp.float32))
+    s, vids, hslots, hot_hit, hit = _casc_ops.cascade_lookup(
+        qn, q_tenants.astype(jnp.int32), thresholds,
+        hot.keys, hot.valid, hot.tenants, hot.value_ids,
+        warm.keys, warm.valid, warm.tenants, warm.value_ids,
+        warm.write_seq, warm.centroids, warm.members,
+        warm.cursor, warm.indexed_total,
+        k=k, n_probe=n_probe, tail=tail, use_kernel=use_kernel)
+    return CascadeResult(scores=s, value_ids=vids, hot_slots=hslots,
                          hot_hit=hot_hit, hit=hit)
 
 

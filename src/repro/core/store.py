@@ -1,7 +1,7 @@
 """Functional JAX vector store — the cache's TPU-resident index.
 
 The paper uses Redis vector search; the TPU-native analogue (DESIGN.md
-§6) is a fixed-capacity store whose state is a pytree of device arrays,
+§3) is a fixed-capacity store whose state is a pytree of device arrays,
 so insert/query/evict are pure jittable functions and the whole store
 shards under pjit (corpus rows over the `model` axis — each shard
 computes a local top-k that a tiny merge resolves).

@@ -1,0 +1,6 @@
+"""Fused cascade lookup: the tiered cache's whole query path as one
+kernel (hot matmul + centroid matmul + IVF bucket gather + tail scan +
+tenant-masked top-k).  See DESIGN.md §3 for the dataflow."""
+from repro.kernels.cascade_lookup.ops import cascade_lookup
+
+__all__ = ["cascade_lookup"]

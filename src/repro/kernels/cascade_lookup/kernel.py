@@ -1,0 +1,249 @@
+"""Pallas TPU kernel: the tiered cache's cascade lookup, fused.
+
+The unfused cascade (DESIGN.md §3) is four XLA ops — hot-tier matmul,
+warm centroid matmul, IVF bucket gather, masked top-k — and the gather
+round-trips its (Q × n_probe·bucket × D) candidate panel through HBM,
+which dominates warm-tier latency.  This kernel extends
+`kernels/cosine_topk`'s streaming running-top-k to the whole cascade in
+one `pallas_call`:
+
+  * grid steps 0..nb-1 stream the HOT tier through VMEM in
+    (BLOCK_N × D) tiles, carrying a tenant-masked running top-k in
+    scratch exactly like `cosine_topk`;
+  * the last grid step runs the WARM side entirely in VMEM: centroid
+    matmul, per-query probe selection (masked-argmax rounds), the IVF
+    bucket gather done as in-kernel index arithmetic over the inverted
+    lists (`members[probe]` row ids -> key gather -> (Q, bucket) score
+    panel, one probe at a time so only one panel is ever live), the
+    unindexed-tail scan (ring positions derived from `cursor` in
+    SMEM-style meta), and the best-of-tiers merge — so neither the
+    (Q × candidates) score matrix nor the gathered key panels ever
+    materialize in HBM.
+
+Candidate ordering matches `jax.lax.top_k` tie-breaking (lowest panel
+index wins): within a panel, masked argmax picks the first occurrence;
+across panels, the accumulator (earlier candidates) is concatenated
+first.  That makes the kernel bit-compatible with the four-op path —
+`ref.py` — including tenant masking, invalid slots and the tail window.
+
+VMEM budget: the warm corpus, centroids and inverted lists are held as
+single VMEM-resident blocks.  At ~16 MB VMEM/core that caps the warm
+slice around a few tens of thousands of rows at D=64 (keys alone are
+cap·D·4 bytes, plus one (Q, bucket, D) panel), so production
+deployment assumes the sharded lookup splits the corpus across the
+`model` axis first (DESIGN.md §3) and each core fuses over its shard;
+larger single-core tiers need the warm keys streamed blockwise like
+the hot tier, which this kernel does not do yet.  Valid masks travel
+as int32 and the hit flags return as int32 (bool VMEM refs are a
+Mosaic lowering hazard); `interpret=True` runs the same dataflow as
+pure XLA ops for CPU tests — the only mode exercised in this repo's
+CPU CI, as with the other kernel packages.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+DEFAULT_BLOCK_N = 512
+
+
+def _select_topk(scores, idx, k):
+    """scores: (Q, M) candidates with payload idx (Q, M) -> (Q, k) best
+    by k rounds of masked argmax (unrolled, k small).  argmax picks the
+    first occurrence, matching lax.top_k's lowest-index tie-break."""
+    out_s, out_i = [], []
+    for _ in range(k):
+        best = jnp.argmax(scores, axis=-1)                       # (Q,)
+        rows = jnp.arange(scores.shape[0])
+        out_s.append(scores[rows, best])
+        out_i.append(idx[rows, best])
+        scores = scores.at[rows, best].set(NEG_INF)
+    return jnp.stack(out_s, -1), jnp.stack(out_i, -1)
+
+
+def _merge(acc_s, acc_i, blk_s, blk_i, k):
+    """Running top-k merge; accumulator first so earlier candidates win
+    ties (panel order)."""
+    cand_s = jnp.concatenate([acc_s, blk_s], axis=-1)
+    cand_i = jnp.concatenate([acc_i, blk_i], axis=-1)
+    return _select_topk(cand_s, cand_i, k)
+
+
+def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
+            wk_ref, wv_ref, wt_ref, wvid_ref, wseq_ref, cent_ref, mem_ref,
+            meta_ref, out_s_ref, out_v_ref, out_hslot_ref, out_flag_ref,
+            acc_s, acc_i, *, k: int, block_n: int, n_hot: int,
+            n_probe: int, tail: int):
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s[...] = jnp.full_like(acc_s, NEG_INF)
+        acc_i[...] = jnp.zeros_like(acc_i)
+
+    q = q_ref[...].astype(jnp.float32)                 # (Q, D)
+    qt = qt_ref[...]                                   # (Q,)
+
+    # ---- hot tier: streamed block, tenant-masked running top-k ------
+    kblk = hk_ref[...].astype(jnp.float32)             # (BN, D)
+    s = jax.lax.dot_general(q, kblk, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, BN)
+    col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    ok = (hv_ref[...] != 0)[None, :] & (ht_ref[...][None, :] == qt[:, None]) \
+        & (col < n_hot)
+    s = jnp.where(ok, s, NEG_INF)
+    blk_s, blk_i = _select_topk(s, col, k)
+    new_s, new_i = _merge(acc_s[...], acc_i[...], blk_s, blk_i, k)
+    acc_s[...] = new_s
+    acc_i[...] = new_i
+
+    # ---- warm tier + merge: once, after the last hot block ----------
+    @pl.when(j == nb - 1)
+    def _finish():
+        Q = q.shape[0]
+        cap = wk_ref.shape[0]
+        bucket = mem_ref.shape[1]
+        cursor = meta_ref[0]
+        indexed_total = meta_ref[1]
+        wk = wk_ref[...].astype(jnp.float32)           # (cap, D) VMEM
+        wv = wv_ref[...] != 0
+        wt = wt_ref[...]
+        wseq = wseq_ref[...]
+        rows = jnp.arange(Q)[:, None]
+
+        # probe selection: centroid matmul + n_probe argmax rounds
+        csims = jax.lax.dot_general(
+            q, cent_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (Q, K)
+        pcol = jax.lax.broadcasted_iota(jnp.int32, csims.shape, 1)
+        _, probes = _select_topk(csims, pcol, n_probe)  # (Q, n_probe)
+
+        # IVF gather: one (Q, bucket) candidate panel per probe, index
+        # arithmetic over the inverted lists, never leaving VMEM
+        mem = mem_ref[...]                             # (K, bucket)
+        ws_acc = jnp.full((Q, k), NEG_INF, jnp.float32)
+        wi_acc = jnp.zeros((Q, k), jnp.int32)
+        for p in range(n_probe):
+            cand = mem[probes[:, p]]                   # (Q, bucket)
+            safe = jnp.clip(cand, 0, cap - 1)
+            panel = wk[safe]                           # (Q, bucket, D)
+            sc = jnp.einsum("qd,qbd->qb", q, panel)
+            okp = (cand >= 0) & wv[safe] & (wt[safe] == qt[:, None]) \
+                & (wseq[safe] <= indexed_total)
+            sc = jnp.where(okp, sc, NEG_INF)
+            pb_s, pb_i = _select_topk(sc, safe, k)
+            ws_acc, wi_acc = _merge(ws_acc, wi_acc, pb_s, pb_i, k)
+
+        # unindexed-tail scan: last `tail` ring writes, newest first
+        if tail:
+            offs = jax.lax.broadcasted_iota(jnp.int32, (1, tail), 1)
+            pos = (cursor - 1 - offs) % cap            # (1, tail)
+            unindexed = wseq[pos] > indexed_total
+            tcand = jnp.broadcast_to(jnp.where(unindexed, pos, -1),
+                                     (Q, tail))
+            tsafe = jnp.clip(tcand, 0, cap - 1)
+            sc = jnp.einsum("qd,qtd->qt", q, wk[tsafe])
+            okt = (tcand >= 0) & wv[tsafe] & (wt[tsafe] == qt[:, None])
+            sc = jnp.where(okt, sc, NEG_INF)
+            tb_s, tb_i = _select_topk(sc, tsafe, k)
+            ws_acc, wi_acc = _merge(ws_acc, wi_acc, tb_s, tb_i, k)
+
+        # best-of-tiers merge; hot candidates first so ties stay hot
+        hs, hi = acc_s[...], acc_i[...]
+        hvids = jnp.where(hs > NEG_INF / 2, hvid_ref[...][hi], -1)
+        wvids = jnp.where(ws_acc > NEG_INF / 2, wvid_ref[...][wi_acc], -1)
+        cand_s = jnp.concatenate([hs, ws_acc], axis=-1)     # (Q, 2k)
+        cand_v = jnp.concatenate([hvids, wvids], axis=-1)
+        ppos = jax.lax.broadcasted_iota(jnp.int32, cand_s.shape, 1)
+        out_s, out_p = _select_topk(cand_s, ppos, k)
+        out_s_ref[...] = out_s
+        out_v_ref[...] = cand_v[rows, out_p]
+        out_hslot_ref[...] = hi[:, :1]
+        hit = out_s[:, 0] >= thr_ref[...]
+        out_flag_ref[...] = jnp.stack(
+            [hit, hit & (out_p[:, 0] < k)], -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_probe", "tail",
+                                             "block_n", "interpret"))
+def cascade_lookup(q, q_tenants, thresholds,
+                   hot_keys, hot_valid, hot_tenants, hot_value_ids,
+                   warm_keys, warm_valid, warm_tenants, warm_value_ids,
+                   warm_write_seq, centroids, members, cursor, indexed_total,
+                   k: int = 1, n_probe: int = 8, tail: int = 0, *,
+                   block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+    """Array-level fused cascade; signature/semantics of `ref.py`.
+
+    q: (Q, D) unit-norm.  Returns (scores (Q, k), value_ids (Q, k),
+    hot_slots (Q,), hot_hit (Q,), hit (Q,)).
+    """
+    q = q.astype(jnp.float32)
+    q_tenants = q_tenants.astype(jnp.int32)
+    Q, D = q.shape
+    n_hot = hot_keys.shape[0]
+    n_clusters = centroids.shape[0]
+    n_probe = min(n_probe, n_clusters)
+
+    bn = min(block_n, n_hot)
+    n_blocks = -(-n_hot // bn)
+    pad = n_blocks * bn - n_hot
+    # bool VMEM refs are a Mosaic lowering hazard: masks travel as int32
+    hot_valid = hot_valid.astype(jnp.int32)
+    warm_valid = warm_valid.astype(jnp.int32)
+    if pad:
+        hot_keys = jnp.pad(hot_keys, ((0, pad), (0, 0)))
+        hot_valid = jnp.pad(hot_valid, (0, pad))
+        hot_tenants = jnp.pad(hot_tenants, (0, pad), constant_values=-1)
+        hot_value_ids = jnp.pad(hot_value_ids, (0, pad), constant_values=-1)
+    meta = jnp.stack([jnp.asarray(cursor, jnp.int32),
+                      jnp.asarray(indexed_total, jnp.int32)])
+
+    cap = warm_keys.shape[0]
+    bucket = members.shape[1]
+    grid = (n_blocks,)
+    whole = lambda shape: pl.BlockSpec(shape, lambda j: (0,) * len(shape))
+    out_shape = (jax.ShapeDtypeStruct((Q, k), jnp.float32),
+                 jax.ShapeDtypeStruct((Q, k), jnp.int32),
+                 jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((Q, 2), jnp.int32))
+    fn = pl.pallas_call(
+        functools.partial(_kernel, k=k, block_n=bn, n_hot=n_hot,
+                          n_probe=n_probe, tail=tail),
+        grid=grid,
+        in_specs=[
+            whole((Q, D)),                                # q
+            whole((Q,)),                                  # q_tenants
+            whole((Q,)),                                  # thresholds
+            pl.BlockSpec((bn, D), lambda j: (j, 0)),      # hot keys stream
+            pl.BlockSpec((bn,), lambda j: (j,)),          # hot valid
+            pl.BlockSpec((bn,), lambda j: (j,)),          # hot tenants
+            whole((n_blocks * bn,)),                      # hot value ids
+            whole((cap, D)),                              # warm keys
+            whole((cap,)),                                # warm valid
+            whole((cap,)),                                # warm tenants
+            whole((cap,)),                                # warm value ids
+            whole((cap,)),                                # warm write seq
+            whole((n_clusters, D)),                       # centroids
+            whole((n_clusters, bucket)),                  # inverted lists
+            whole((2,)),                                  # cursor/indexed
+        ],
+        out_specs=(whole((Q, k)), whole((Q, k)), whole((Q, 1)),
+                   whole((Q, 2))),
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((Q, k), jnp.float32),
+            pltpu.VMEM((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    out_s, out_v, hslot, flags = fn(
+        q, q_tenants, thresholds.astype(jnp.float32), hot_keys, hot_valid,
+        hot_tenants, hot_value_ids, warm_keys, warm_valid, warm_tenants,
+        warm_value_ids, warm_write_seq, centroids, members, meta)
+    return out_s, out_v, hslot[:, 0], flags[:, 1] != 0, flags[:, 0] != 0

@@ -1,0 +1,49 @@
+"""jit'd dispatch wrapper for the fused cascade lookup.
+
+Chooses the Pallas kernel on TPU (or interpret mode when asked) and the
+four-op jnp oracle otherwise — the oracle IS the original unfused
+cascade math, so the CPU fallback costs nothing over the four-op path.
+Both share the exact signature, so `tiers.cascade_query` is agnostic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.cascade_lookup import kernel as _kernel
+from repro.kernels.cascade_lookup import ref as _ref
+
+
+@functools.lru_cache(maxsize=1)
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def cascade_lookup(q, q_tenants, thresholds,
+                   hot_keys, hot_valid, hot_tenants, hot_value_ids,
+                   warm_keys, warm_valid, warm_tenants, warm_value_ids,
+                   warm_write_seq, centroids, members, cursor, indexed_total,
+                   k: int = 1, n_probe: int = 8, tail: int = 0, *,
+                   use_kernel: bool | None = None,
+                   block_n: int = _kernel.DEFAULT_BLOCK_N):
+    """q: (Q, D) unit-norm -> (scores, value_ids, hot_slots, hot_hit,
+    hit); see `ref.cascade_lookup`.
+
+    use_kernel: None -> kernel on TPU, oracle elsewhere (interpret-mode
+    kernels are for correctness tests, not the CPU hot path).
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return _kernel.cascade_lookup(
+            q, q_tenants, thresholds, hot_keys, hot_valid, hot_tenants,
+            hot_value_ids, warm_keys, warm_valid, warm_tenants,
+            warm_value_ids, warm_write_seq, centroids, members, cursor,
+            indexed_total, k, n_probe, tail, block_n=block_n,
+            interpret=not _on_tpu())
+    return _ref.cascade_lookup(
+        q, q_tenants, thresholds, hot_keys, hot_valid, hot_tenants,
+        hot_value_ids, warm_keys, warm_valid, warm_tenants, warm_value_ids,
+        warm_write_seq, centroids, members, cursor, indexed_total,
+        k, n_probe, tail)

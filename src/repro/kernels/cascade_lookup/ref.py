@@ -1,0 +1,83 @@
+"""Pure-jnp oracle for the fused cascade lookup.
+
+This is the tiered cache's original four-op path (hot exact top-k, warm
+centroid probe, IVF bucket gather + unindexed-tail scan, best-of-tiers
+merge — `cache_service/tiers.py`) expressed over plain arrays, so the
+Pallas kernel and the NamedTuple-based cascade can both be checked
+against one reference.  Candidate ordering matches `jax.lax.top_k`
+tie-breaking (lowest index wins) everywhere, which is what the kernel's
+masked-argmax rounds reproduce.
+
+Queries are expected unit-norm float32 (the caller normalizes once; the
+unfused tiers path normalizes per tier, but `_unit` is idempotent up to
+bit-identity on already-unit rows, so parity holds).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def cascade_lookup(q, q_tenants, thresholds,
+                   hot_keys, hot_valid, hot_tenants, hot_value_ids,
+                   warm_keys, warm_valid, warm_tenants, warm_value_ids,
+                   warm_write_seq, centroids, members, cursor, indexed_total,
+                   k: int = 1, n_probe: int = 8, tail: int = 0
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                              jax.Array]:
+    """q: (Q, D) unit-norm; q_tenants/thresholds: (Q,).
+
+    Returns (scores (Q, k), value_ids (Q, k), hot_slots (Q,),
+    hot_hit (Q,), hit (Q,)) — the field order of
+    ``tiers.CascadeResult``.
+    """
+    q = q.astype(jnp.float32)
+    q_tenants = q_tenants.astype(jnp.int32)
+    Q = q.shape[0]
+    rows = jnp.arange(Q)[:, None]
+
+    # hot tier: exact tenant-masked top-k
+    hs_all = q @ hot_keys.T                                        # (Q, Nh)
+    ok = hot_valid[None, :] & (hot_tenants[None, :] == q_tenants[:, None])
+    hs_all = jnp.where(ok, hs_all, NEG)
+    hs, hslots = jax.lax.top_k(hs_all, k)
+    hvids = jnp.where(hs > NEG / 2, hot_value_ids[hslots], -1)
+
+    # warm tier: IVF probe + unindexed tail
+    cap = warm_keys.shape[0]
+    n_clusters, bucket = members.shape
+    n_probe = min(n_probe, n_clusters)
+    csims = q @ centroids.T                                        # (Q, K)
+    _, probes = jax.lax.top_k(csims, n_probe)
+    cand = members[probes].reshape(Q, n_probe * bucket)
+    is_tail = jnp.zeros(cand.shape, bool)
+    if tail:
+        tail_idx = (cursor - 1 - jnp.arange(tail, dtype=jnp.int32)) % cap
+        unindexed = warm_write_seq[tail_idx] > indexed_total
+        tail_cand = jnp.where(unindexed, tail_idx, -1)
+        cand = jnp.concatenate(
+            [cand, jnp.broadcast_to(tail_cand[None, :], (Q, tail))], axis=1)
+        is_tail = jnp.concatenate(
+            [is_tail, jnp.ones((Q, tail), bool)], axis=1)
+    safe = jnp.clip(cand, 0, cap - 1)
+    ok = (cand >= 0) & warm_valid[safe] \
+        & (warm_tenants[safe] == q_tenants[:, None]) \
+        & (is_tail | (warm_write_seq[safe] <= indexed_total))
+    wscores = jnp.einsum("qd,qnd->qn", q, warm_keys[safe])
+    wscores = jnp.where(ok, wscores, NEG)
+    ws, wi = jax.lax.top_k(wscores, k)
+    wslots = safe[rows, wi]
+    wvids = jnp.where(ws > NEG / 2, warm_value_ids[wslots], -1)
+
+    # best-of-tiers merge (hot side first, so ties resolve hot)
+    all_s = jnp.concatenate([hs, ws], axis=1)                      # (Q, 2k)
+    all_v = jnp.concatenate([hvids, wvids], axis=1)
+    s, i = jax.lax.top_k(all_s, k)
+    vids = all_v[rows, i]
+    hit = s[:, 0] >= thresholds
+    hot_hit = hit & (i[:, 0] < k)
+    return s, vids, hslots[:, 0], hot_hit, hit

@@ -88,7 +88,11 @@ class CachedLLMService:
 
     def __init__(self, embed_fn, cache, engine: Optional[ServeEngine],
                  tokenizer: HashTokenizer, max_query_len: int = 32,
-                 max_new_tokens: int = 16):
+                 max_new_tokens: int = 16, fused: Optional[bool] = None):
+        """``fused`` (None = leave the backend's choice) selects the
+        cache's cascade execution path — the fused Pallas lookup kernel
+        vs the four-op composition — when the backend supports it
+        (`CacheService.set_fused`); ignored for flat caches."""
         self.embed_fn = embed_fn          # list[str] -> (B, D) unit vectors
         # SemanticCache or the tiered multi-tenant CacheService facade
         self.cache = cache
@@ -98,6 +102,13 @@ class CachedLLMService:
         self.max_new_tokens = max_new_tokens
         self.stats = {"hits": 0, "misses": 0}
         self._tenant_aware = getattr(cache, "supports_tenants", False)
+        if fused is not None:
+            if hasattr(cache, "set_fused"):
+                cache.set_fused(fused)
+            elif fused:
+                raise ValueError(
+                    f"cache backend {type(cache).__name__} has no fused "
+                    "cascade path; use CacheService or drop fused=True")
 
     def _llm_answer(self, queries: List[str]) -> List[str]:
         if self.engine is None:  # degenerate echo backend for tests
