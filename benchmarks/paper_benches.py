@@ -165,23 +165,24 @@ def bench_cache_hit_rate():
         for threshold in (round(thr0, 4), round(thr0 + 0.1, 4),
                           round(thr0 + 0.2, 4)):
             def run():
+                from repro.cache_service import CacheRequest
                 cache = SemanticCache(capacity=2048,
                                       dim=embedder_cfg().d_model,
                                       threshold=threshold)
                 inserted = {}
                 th = fh = miss = 0
                 for q, e in zip(stream, embs):
-                    hit, score, val = cache.lookup(e[None])
+                    plan = cache.plan(CacheRequest.build(e[None]))
                     key = (q.entity, q.aspect)
-                    if hit[0]:
-                        if inserted.get(val[0]) == key:
+                    if plan.hit[0]:
+                        if inserted.get(plan.responses[0]) == key:
                             th += 1
                         else:
                             fh += 1
                     else:
                         rid = f"r{miss}"
                         inserted[rid] = key
-                        cache.insert(e[None], [rid])
+                        cache.commit(plan, [rid])
                         miss += 1
                 return th, fh, miss
             (th, fh, miss), us = timed(run, repeats=1)

@@ -1,12 +1,12 @@
 """Quickstart: a semantic cache in 40 lines.
 
 Builds the compact encoder, embeds a few queries, and shows the
-hit/miss/threshold mechanics of the cache.
+hit/miss/threshold mechanics of the cache through the typed
+plan/commit lifecycle (DESIGN.md §7).
 
     PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
+from repro.cache_service import CacheRequest
 from repro.configs import get_config
 from repro.core import EmbedderTrainer, FinetuneConfig, SemanticCache
 from repro.data import HashTokenizer, make_pair_dataset
@@ -35,10 +35,12 @@ queries = [
     "What are the symptoms of early-stage diabetes?",
     "How is hypertension treated?",
 ]
-hits, scores, _ = cache.lookup(embed(queries))
-print("first lookup (cold):", list(hits))
-cache.insert(embed(queries), ["<llm answer about diabetes symptoms>",
-                              "<llm answer about hypertension treatment>"])
+# plan: per-row hit/miss verdicts (all cold misses here)...
+plan = cache.plan(CacheRequest.build(embed(queries)))
+print("first lookup (cold):", list(plan.hit))
+# ...then commit the generated answers for the planned misses
+cache.commit(plan, ["<llm answer about diabetes symptoms>",
+                    "<llm answer about hypertension treatment>"])
 
 paraphrases = [
     # same intent, different surface form -> should HIT
@@ -46,8 +48,9 @@ paraphrases = [
     # topically related but semantically distinct -> must MISS
     "What diet helps with early-stage diabetes?",
 ]
-hits, scores, values = cache.lookup(embed(paraphrases))
-for q, h, s, v in zip(paraphrases, hits, scores, values):
+plan = cache.plan(CacheRequest.build(embed(paraphrases)))
+for q, h, s, v in zip(paraphrases, plan.hit, plan.scores, plan.responses):
     print(f"  {'HIT ' if h else 'MISS'} score={s:.3f}  {q!r}"
           + (f" -> {v!r}" if h else ""))
-print(f"cache occupancy: {cache.occupancy:.1%}")
+print(f"cache occupancy: {cache.occupancy:.1%}  "
+      f"stats: {cache.stats()}")

@@ -13,7 +13,11 @@ motivates (LLM forward passes saved by the cache).
 By default the serving path runs the tiered multi-tenant CacheService
 (hot exact tier + warm IVF tier, demotion, admission, response GC);
 pass --flat for the paper's bare SemanticCache, --tenants N to
-round-robin batches over N isolated logical caches.
+round-robin batches over N isolated logical caches,
+--background-rebuild to double-buffer the warm IVF re-cluster off the
+hot path (DESIGN.md §7).  Requests flow through the typed plan/commit
+lifecycle (near-identical misses in a batch share one generation) and
+the summary prints the protocol's unified stats() snapshot.
 """
 import argparse
 import time
@@ -47,9 +51,14 @@ def main():
     ap.add_argument("--fused", action="store_true",
                     help="run the cascade through the fused Pallas "
                          "lookup kernel (TPU; four-op fallback on CPU)")
+    ap.add_argument("--background-rebuild", action="store_true",
+                    help="double-buffer the warm IVF rebuild: k-means "
+                         "runs on a shadow index off the hot path and "
+                         "maintenance() publishes it between batches")
     args = ap.parse_args()
-    if args.fused and args.flat:
-        ap.error("--fused requires the tiered CacheService (drop --flat)")
+    if args.flat and (args.fused or args.background_rebuild):
+        ap.error("--fused/--background-rebuild require the tiered "
+                 "CacheService (drop --flat)")
 
     # --- LLM backend (reduced variant of the assigned arch) -----------
     dec_cfg = get_config(args.arch).reduced()
@@ -74,7 +83,8 @@ def main():
                              warm_capacity=4096, n_clusters=32, bucket=256,
                              n_probe=4, threshold=args.threshold,
                              admission_margin=0.02, flush_size=128,
-                             fused=args.fused)
+                             fused=args.fused,
+                             background_rebuild=args.background_rebuild)
         print(f"cascade path: {'fused kernel' if cache.fused else 'four-op'}"
               f" (backend {jax.default_backend()})")
     svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
@@ -102,21 +112,28 @@ def main():
               f"({dt*1e3:.0f} ms)")
     total = time.perf_counter() - t0
 
+    # one unified snapshot: serving counters + backend tiers/admission
+    # counters + rebuild accounting, all from the protocol's stats()
+    st = svc.stats()
     print(f"\n=== serving summary ===")
     print(f"queries: {args.queries}  batches of {args.batch}")
-    print(f"cache hits: {svc.stats['hits']}  misses: {svc.stats['misses']}  "
-          f"hit rate: {svc.hit_rate:.1%}")
-    print(f"LLM forward passes saved: {svc.stats['hits']} "
-          f"({svc.stats['hits'] * args.max_new_tokens} decode steps)")
+    print(f"cache hits: {st['hits']}  misses: {st['misses']}  "
+          f"hit rate: {st['hit_rate']:.1%}")
+    print(f"LLM generations: {st['generations']} "
+          f"(coalesced duplicate misses: {st['coalesced_misses']})")
+    print(f"LLM forward passes saved: {st['hits']} "
+          f"({st['hits'] * args.max_new_tokens} decode steps)")
     print(f"wall time: {total:.1f}s  cache occupancy: {cache.occupancy:.1%}")
     if not args.flat:
-        cs = cache.stats
-        print(f"tiers: hot hits {cs['hot_hits']}  warm hits "
-              f"{cs['warm_hits']}  demotions {cs['demotions']}  "
-              f"rebuilds {cs['rebuilds']}")
-        print(f"admission skips: {cs['admission_skips']}  "
-              f"responses GC'd: {cs['evictions']}  live: "
-              f"{len(cache.responses)}")
+        print(f"tiers: hot hits {st['hot_hits']}  warm hits "
+              f"{st['warm_hits']}  demotions {st['demotions']}  "
+              f"rebuilds {st['rebuilds']} "
+              f"(background: {st['bg_rebuilds']}, last "
+              f"{st['last_rebuild_s'] * 1e3:.0f} ms, total "
+              f"{st['rebuild_total_s'] * 1e3:.0f} ms)")
+        print(f"admission skips: {st['admission_skips']}  "
+              f"responses GC'd: {st['evictions']}  live: "
+              f"{st['live_responses']}")
 
 
 if __name__ == "__main__":

@@ -1,23 +1,34 @@
 """Tiered multi-tenant cache service (beyond-paper subsystem).
 
 A `CacheService` facade composes a hot exact tier, a warm IVF tier with
-demotion + periodic rebuild, per-tenant thresholds/admission, and
-host-side response GC — the production serving layer between the store
-primitives (repro.core) and the LLM engine (repro.serving).
+demotion + double-buffered rebuild, per-tenant thresholds/admission,
+and host-side response GC — the production serving layer between the
+store primitives (repro.core) and the LLM engine (repro.serving).  The
+serving pipeline drives any backend through the typed ``CacheBackend``
+protocol (plan/commit lifecycle, DESIGN.md §7).
 """
 from repro.cache_service.policy import PolicyTable, TenantPolicy
+from repro.cache_service.protocol import (
+    CacheBackend, CacheCapabilities, CachePlan, CacheRequest,
+    CommitReceipt, MaintenanceReport, coalesce_misses, ungrouped_misses,
+)
 from repro.cache_service.service import CacheService
 from repro.cache_service.tiers import (
     CascadeResult, Demoted, HotState, WarmState, cascade_lookup,
     cascade_query, demote_coldest, evict_tenant, hot_insert,
     hot_insert_batch, hot_query, hot_touch, init_hot, init_warm,
-    warm_append, warm_occupancy, warm_query, warm_rebuild,
+    warm_append, warm_occupancy, warm_publish_index, warm_query,
+    warm_rebuild,
 )
 
 __all__ = [
     "CacheService", "PolicyTable", "TenantPolicy",
+    "CacheBackend", "CacheCapabilities", "CachePlan", "CacheRequest",
+    "CommitReceipt", "MaintenanceReport", "coalesce_misses",
+    "ungrouped_misses",
     "CascadeResult", "Demoted", "HotState", "WarmState", "cascade_lookup",
     "cascade_query", "demote_coldest", "evict_tenant", "hot_insert",
     "hot_insert_batch", "hot_query", "hot_touch", "init_hot", "init_warm",
-    "warm_append", "warm_occupancy", "warm_query", "warm_rebuild",
+    "warm_append", "warm_occupancy", "warm_publish_index", "warm_query",
+    "warm_rebuild",
 ]

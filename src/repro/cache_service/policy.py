@@ -70,3 +70,11 @@ class PolicyTable:
         margin = np.asarray([self.get(t).admission_margin for t in tenants],
                             np.float32)
         return np.asarray(scores, np.float32) < thr - margin
+
+    def pre_decision(self, tenants: np.ndarray, scores: np.ndarray,
+                     hit: np.ndarray) -> np.ndarray:
+        """Plan-time admission pre-decision (DESIGN.md §7): False on hit
+        rows; on miss rows the score-margin rule over the observed
+        neighbour scores.  Carried inside the ``CachePlan`` so commit
+        honors the decision taken when the scores were observed."""
+        return ~np.asarray(hit, bool) & self.admit_mask(tenants, scores)

@@ -1,0 +1,232 @@
+"""Typed cache serving protocol: ``CacheBackend`` + plan/commit lifecycle.
+
+The serving pipeline used to capability-sniff its cache with
+``hasattr(cache, "set_fused")`` / ``supports_tenants`` and drive it
+through two untyped calls (``lookup`` then ``insert``).  This module is
+the typed replacement (DESIGN.md §7):
+
+  * ``CacheCapabilities`` — a static descriptor every backend returns
+    from ``capabilities()``; the pipeline branches on fields, never on
+    ``hasattr``.
+  * ``CacheRequest``  — one embedded batch: embeddings, the per-row
+    tenant column, a trace id.
+  * ``CachePlan``     — the backend's read-side verdict per row: hit
+    flag, best same-tenant score, value id, the response string
+    (resolved at plan time, so a later eviction cannot invalidate a
+    response already promised to a request), the admission
+    pre-decision carrying the observed neighbour scores, and the
+    miss-coalescing map (near-identical misses grouped so one
+    generation serves the whole group).
+  * ``CommitReceipt`` — the write-side outcome: rows admitted/skipped,
+    host strings freed, and maintenance obligations (``rebuild_due``)
+    the pipeline discharges by calling ``maintenance()`` between
+    batches — the hook behind the double-buffered warm-IVF rebuild.
+
+Lifecycle invariants every backend must honor:
+
+  * ``plan`` performs all read-side effects (LRU touch, TTL sweep) and
+    resolves hit responses immediately; ``commit`` performs all
+    write-side effects and never re-reads plan-time device state.
+  * ``commit`` assigns **fresh** value ids to admitted rows — a plan
+    can never resurrect a value id freed (e.g. by ``evict_tenant``)
+    between plan and commit.
+  * ``commit`` accepts a plan from an older backend epoch; it must
+    stay safe (at worst admitting rows the current policy would now
+    skip), never corrupt (dangling value ids, leaked host strings).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import (
+    Dict, List, Optional, Protocol, Sequence, Union, runtime_checkable,
+)
+
+import numpy as np
+
+TenantArg = Union[int, Sequence[int], np.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# capability descriptor
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CacheCapabilities:
+    """Static feature descriptor; replaces hasattr capability sniffing.
+
+    ``fused_lookup=True`` additionally guarantees the backend exposes
+    ``set_fused(bool)`` (the cascade execution-path switch).
+    """
+    tenants: bool = False            # isolates per-tenant id spaces
+    fused_lookup: bool = False       # has set_fused() / Pallas cascade
+    admission: bool = False          # plan carries a real admit decision
+    background_rebuild: bool = False  # maintenance() can double-buffer
+    tiered: bool = False             # hot/warm cascade vs flat store
+
+
+# ---------------------------------------------------------------------------
+# request lifecycle dataclasses
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CacheRequest:
+    """One embedded query batch entering the cache."""
+    embeddings: np.ndarray           # (B, D) float32, unit-norm rows
+    tenants: np.ndarray              # (B,)  int32 tenant per row
+    trace_id: int = 0
+
+    @classmethod
+    def build(cls, embeddings, tenant: TenantArg = 0,
+              trace_id: int = 0) -> "CacheRequest":
+        """Normalize a scalar-or-array tenant argument to a (B,) row."""
+        embs = np.asarray(embeddings)
+        t = np.asarray(tenant, np.int32)
+        if t.ndim == 0:
+            t = np.full(embs.shape[0], int(t), np.int32)
+        if t.shape != (embs.shape[0],):
+            raise ValueError(f"tenant row {t.shape} != batch "
+                             f"({embs.shape[0]},)")
+        return cls(embeddings=embs, tenants=t, trace_id=trace_id)
+
+    def __len__(self) -> int:
+        return int(self.embeddings.shape[0])
+
+
+@dataclass
+class CachePlan:
+    """Read-side verdict for every row of one request.
+
+    ``miss_leader`` encodes the miss-coalescing groups: -1 on hit rows;
+    on miss rows, the index of the earliest near-identical same-tenant
+    miss (its *leader* — ``miss_leader[i] == i`` for leaders).  One
+    generation per leader serves its whole group.
+
+    ``admit`` is the admission pre-decision taken at plan time from the
+    observed neighbour scores (False on hit rows); ``commit`` honors it
+    instead of re-deciding.
+    """
+    request: CacheRequest
+    hit: np.ndarray                  # (B,) bool
+    scores: np.ndarray               # (B,) best same-tenant score
+    value_ids: np.ndarray            # (B,) int64, -1 on miss rows
+    responses: List[Optional[str]]   # hit responses, resolved at plan time
+    admit: np.ndarray                # (B,) bool admission pre-decision
+    miss_leader: np.ndarray          # (B,) int64 coalescing map
+    epoch: int = 0                   # backend epoch at plan time
+
+    def miss_rows(self) -> np.ndarray:
+        return np.nonzero(~self.hit)[0]
+
+    def leader_rows(self) -> List[int]:
+        """Miss rows needing a generation, in row order."""
+        return [int(i) for i in self.miss_rows()
+                if int(self.miss_leader[i]) == int(i)]
+
+    @property
+    def n_coalesced(self) -> int:
+        """Miss rows served by another row's generation."""
+        return int(sum(int(self.miss_leader[i]) != int(i)
+                       for i in self.miss_rows()))
+
+    @classmethod
+    def for_insert(cls, request: CacheRequest, admit: np.ndarray,
+                   scores: Optional[np.ndarray] = None,
+                   epoch: int = 0) -> "CachePlan":
+        """Plan equivalent of a legacy ``insert`` call: every row is an
+        ungrouped miss, admission as given."""
+        n = len(request)
+        if scores is None:
+            scores = np.zeros(n, np.float32)
+        return cls(request=request, hit=np.zeros(n, bool),
+                   scores=np.asarray(scores, np.float32),
+                   value_ids=np.full(n, -1, np.int64),
+                   responses=[None] * n,
+                   admit=np.asarray(admit, bool),
+                   miss_leader=np.arange(n, dtype=np.int64), epoch=epoch)
+
+
+@dataclass(frozen=True)
+class MaintenanceReport:
+    """What one ``maintenance()`` call did."""
+    rebuild_started: bool = False    # a shadow rebuild was kicked off
+    rebuild_published: bool = False  # a finished shadow index was swapped
+    rebuild_in_flight: bool = False  # a shadow rebuild is still running
+    rebuild_wall_s: float = 0.0      # wall time of the published rebuild
+
+
+@dataclass(frozen=True)
+class CommitReceipt:
+    """Write-side outcome of one commit."""
+    admitted: int                    # rows cached
+    skipped: int                     # rows the admission rule dropped
+    evicted: int                     # host strings freed by this commit
+    rebuild_due: bool = False        # obligation: call maintenance() soon
+    maintenance: MaintenanceReport = field(default_factory=MaintenanceReport)
+
+
+# ---------------------------------------------------------------------------
+# the backend protocol
+# ---------------------------------------------------------------------------
+
+@runtime_checkable
+class CacheBackend(Protocol):
+    """What the serving pipeline requires of a semantic cache.
+
+    Implemented by ``SemanticCache`` (flat) and ``CacheService``
+    (tiered, multi-tenant); see DESIGN.md §7 for the lifecycle diagram.
+    """
+
+    def capabilities(self) -> CacheCapabilities: ...
+
+    def plan(self, request: CacheRequest, *,
+             coalesce: bool = True) -> CachePlan: ...
+
+    def commit(self, plan: CachePlan,
+               responses: Sequence[Optional[str]]) -> CommitReceipt: ...
+
+    def maintenance(self, block: bool = False) -> MaintenanceReport: ...
+
+    def stats(self) -> Dict[str, object]: ...
+
+
+# ---------------------------------------------------------------------------
+# miss coalescing (shared by both backends' plan())
+# ---------------------------------------------------------------------------
+
+def ungrouped_misses(hit: np.ndarray) -> np.ndarray:
+    """The no-coalescing miss_leader map: every miss leads itself."""
+    hit = np.asarray(hit, bool)
+    return np.where(hit, -1, np.arange(len(hit), dtype=np.int64))
+
+
+def coalesce_misses(embeddings: np.ndarray, hit: np.ndarray,
+                    tenants: np.ndarray,
+                    thresholds: np.ndarray) -> np.ndarray:
+    """Group near-identical misses within one batch.
+
+    Returns the ``miss_leader`` map: -1 on hit rows; on miss rows the
+    index of the earliest same-tenant miss whose cosine similarity
+    reaches the *member's* hit threshold (so serving the leader's
+    response to the member is exactly as sound as a cache hit at the
+    member's operating point).  Members only attach to leaders, never
+    to other members, so groups cannot chain-drift below threshold.
+    """
+    hit = np.asarray(hit, bool)
+    leader = np.full(len(hit), -1, np.int64)
+    miss = np.nonzero(~hit)[0]
+    if len(miss) == 0:
+        return leader
+    em = np.asarray(embeddings, np.float32)[miss]
+    em = em / np.maximum(np.linalg.norm(em, axis=-1, keepdims=True), 1e-9)
+    sims = em @ em.T                     # one matmul; the scan below is
+    tnt = np.asarray(tenants)[miss]      # O(misses) with vector inners
+    thr = np.asarray(thresholds)[miss]
+    is_leader = np.zeros(len(miss), bool)
+    for a in range(len(miss)):
+        ok = is_leader[:a] & (tnt[:a] == tnt[a]) & (sims[a, :a] >= thr[a])
+        if ok.any():
+            leader[miss[a]] = miss[int(np.argmax(ok))]   # earliest leader
+        else:
+            leader[miss[a]] = miss[a]
+            is_leader[a] = True
+    return leader

@@ -19,15 +19,26 @@ Between rebuilds the warm lookup scans a fixed tail window sized to
 cover everything appended since the last rebuild, so recall does not
 dip while the index is stale.
 
-Drop-in surface: ``lookup(embs) / insert(embs, responses)`` match
-``SemanticCache``; the tenant-aware surface adds ``tenant=`` (scalar or
-per-row array) and ``scores=`` (admission) keywords.
+Serving surface (DESIGN.md §7): the typed ``CacheBackend`` lifecycle —
+``plan(CacheRequest) -> CachePlan`` (read side: cascade verdicts, hit
+responses, admission pre-decision, miss coalescing) then
+``commit(plan, responses) -> CommitReceipt`` (write side: admissions,
+demotion flush, GC, maintenance obligations).  With
+``background_rebuild=True`` the warm IVF re-clusters double-buffered:
+a shadow index builds on a host thread from a snapshot while lookups
+keep reading the published index, and ``maintenance()`` performs the
+atomic publish; the tail window covers every row appended since the
+*snapshot*, so recall never dips during the overlap.  The legacy
+``lookup(embs) / insert(embs, responses)`` calls remain as deprecated
+shims delegating to plan/commit.
 """
 from __future__ import annotations
 
+import threading
+import time
 import warnings
 from functools import partial
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,13 +46,15 @@ import numpy as np
 
 from repro.cache_service import tiers
 from repro.cache_service.policy import PolicyTable, TenantPolicy
+from repro.cache_service.protocol import (
+    CacheCapabilities, CachePlan, CacheRequest, CommitReceipt,
+    MaintenanceReport, TenantArg, coalesce_misses, ungrouped_misses,
+)
 from repro.core.calibration import Calibration
-
-TenantArg = Union[int, Sequence[int], np.ndarray]
 
 
 class CacheService:
-    supports_tenants = True
+    supports_tenants = True          # legacy sniffing hook; see DESIGN.md §7
 
     def __init__(self, dim: int, *, hot_capacity: int = 1024,
                  warm_capacity: int = 16384, n_clusters: int = 64,
@@ -50,7 +63,7 @@ class CacheService:
                  flush_watermark: float = 0.85,
                  flush_size: Optional[int] = None, rebuild_every: int = 1,
                  kmeans_iters: int = 4, seed: int = 0,
-                 fused: bool = False):
+                 fused: bool = False, background_rebuild: bool = False):
         """Build the tiered service.
 
         Tail invariant (see ``tiers.warm_query``): rows demoted into the
@@ -70,6 +83,15 @@ class CacheService:
         the kernel's VMEM budget: the warm slice must fit on-chip
         (DESIGN.md §3.1).  On CPU the flag falls back to the same
         four-op math, so it never changes results or CPU latency.
+
+        ``background_rebuild=True`` double-buffers the IVF rebuild
+        (DESIGN.md §7): flushes that would have re-clustered inline
+        instead start a shadow build on a host thread; lookups keep
+        reading the published index and ``maintenance()`` swaps the
+        finished shadow in.  A flush that would push the unindexed
+        backlog past the tail window first joins the in-flight build
+        (or re-clusters inline if none is running), so no row is ever
+        stranded out of reach.
         """
         if flush_size is None:
             flush_size = max(hot_capacity // 4, 1)
@@ -94,6 +116,7 @@ class CacheService:
         self.flush_watermark = flush_watermark
         self.rebuild_every = rebuild_every
         self.topk = topk
+        self.background_rebuild = bool(background_rebuild)
 
         self.hot = tiers.init_hot(hot_capacity, dim)
         self.warm = tiers.init_warm(warm_capacity, dim, n_clusters, bucket)
@@ -102,9 +125,21 @@ class CacheService:
         self._next_vid = 0
         self._tail = tail
         self._n_probe = n_probe
-        self.stats = {"lookups": 0, "hot_hits": 0, "warm_hits": 0,
-                      "inserts": 0, "admission_skips": 0, "demotions": 0,
-                      "rebuilds": 0, "evictions": 0}
+        self._epoch = 0              # bumped by evict_tenant (plan staleness)
+        self._counters = {
+            "lookups": 0, "hot_hits": 0, "warm_hits": 0, "inserts": 0,
+            "admission_skips": 0, "demotions": 0, "rebuilds": 0,
+            "bg_rebuilds": 0, "evictions": 0, "plans": 0, "commits": 0,
+            "stale_commits": 0,
+        }
+        self._last_rebuild_s = 0.0
+        self._rebuild_total_s = 0.0
+
+        # double-buffer state: the shadow thread re-clusters a snapshot;
+        # the host publishes (atomic _replace of the index leaves) from
+        # _publish_shadow only — lookups always read self.warm
+        self._shadow_thread: Optional[threading.Thread] = None
+        self._shadow_box: Dict[str, object] = {}
 
         self.set_fused(fused)
         self._insert = jax.jit(tiers.hot_insert_batch)
@@ -138,61 +173,151 @@ class CacheService:
                                        max_false_hit_rate)
 
     # ------------------------------------------------------------------
-    # serving surface
+    # CacheBackend protocol: plan / commit / maintenance / stats
     # ------------------------------------------------------------------
-    def _tenant_row(self, tenant: TenantArg, n: int) -> np.ndarray:
-        t = np.asarray(tenant, np.int32)
-        if t.ndim == 0:
-            t = np.full(n, int(t), np.int32)
-        assert t.shape == (n,), (t.shape, n)
-        return t
+    def capabilities(self) -> CacheCapabilities:
+        return CacheCapabilities(tenants=True, fused_lookup=True,
+                                 admission=True,
+                                 background_rebuild=self.background_rebuild,
+                                 tiered=True)
 
-    def lookup(self, embs, tenant: TenantArg = 0
-               ) -> Tuple[np.ndarray, np.ndarray, List[Optional[str]]]:
-        """embs: (B, D).  Returns (hit (B,) bool, score (B,), values)."""
-        embs = jnp.asarray(embs)
-        qt = self._tenant_row(tenant, embs.shape[0])
+    def plan(self, request: CacheRequest, *,
+             coalesce: bool = True) -> CachePlan:
+        """Read side: one jitted cascade over both tiers, LRU touch,
+        response resolution, admission pre-decision, miss coalescing
+        (``coalesce=False`` skips the O(misses²) grouping when the
+        caller won't use it — the legacy lookup shim does)."""
+        embs = jnp.asarray(request.embeddings)
+        qt = request.tenants
         thr = self.policies.thresholds_for(qt)
         res = self._lookup(self.hot, self.warm, embs, jnp.asarray(qt),
                            jnp.asarray(thr))
         self.hot = self._touch(self.hot, res.hot_slots, res.hot_hit)
         hit = np.asarray(res.hit)
         scores = np.asarray(res.scores[:, 0])
-        vids = np.asarray(res.value_ids[:, 0])
+        vids = np.asarray(res.value_ids[:, 0]).astype(np.int64)
         hot_hit = np.asarray(res.hot_hit)
-        self.stats["lookups"] += len(hit)
-        self.stats["hot_hits"] += int(hot_hit.sum())
-        self.stats["warm_hits"] += int((hit & ~hot_hit).sum())
-        values = [self.responses.get(int(v)) if h else None
-                  for h, v in zip(hit, vids)]
-        return hit, scores, values
+        self._counters["plans"] += 1
+        self._counters["lookups"] += len(hit)
+        self._counters["hot_hits"] += int(hot_hit.sum())
+        self._counters["warm_hits"] += int((hit & ~hot_hit).sum())
+        responses = [self.responses.get(int(v)) if h else None
+                     for h, v in zip(hit, vids)]
+        admit = self.policies.pre_decision(qt, scores, hit)
+        return CachePlan(
+            request=request, hit=hit, scores=scores,
+            value_ids=np.where(hit, vids, -1), responses=responses,
+            admit=admit,
+            miss_leader=coalesce_misses(request.embeddings, hit, qt, thr)
+            if coalesce else ungrouped_misses(hit),
+            epoch=self._epoch)
+
+    def commit(self, plan: CachePlan,
+               responses: Sequence[Optional[str]]) -> CommitReceipt:
+        """Write side: admit planned misses (fresh value ids — a stale
+        plan can never resurrect an id freed since plan time), flush if
+        over the watermark, GC reported evictions."""
+        self._counters["commits"] += 1
+        if plan.epoch != self._epoch:
+            # an evict_tenant landed between plan and commit; admission
+            # stays safe because ids are fresh and strings are only
+            # freed off device eviction reports
+            self._counters["stale_commits"] += 1
+        rows = plan.miss_rows()
+        admit = plan.admit[rows]
+        texts: List[Optional[str]] = [responses[i] for i in rows]
+        for pos in np.nonzero(admit)[0]:
+            if texts[pos] is None:
+                raise ValueError(
+                    f"admitted row {int(rows[pos])} has no response")
+        vids = np.full(len(rows), -1, np.int64)
+        for pos in np.nonzero(admit)[0]:
+            vids[pos] = self._next_vid
+            self.responses[self._next_vid] = texts[pos]
+            self._next_vid += 1
+        n_admit = int(admit.sum())
+        self._counters["inserts"] += n_admit
+        self._counters["admission_skips"] += int((~admit).sum())
+        evicted_before = self._counters["evictions"]
+        if len(rows):
+            self.hot, evicted = self._insert(
+                self.hot, jnp.asarray(plan.request.embeddings[rows]),
+                jnp.asarray(vids, dtype=jnp.int32),
+                jnp.asarray(plan.request.tenants[rows]))
+            self._gc(evicted)
+            self._maybe_flush()
+        return CommitReceipt(
+            admitted=n_admit, skipped=int((~admit).sum()),
+            evicted=self._counters["evictions"] - evicted_before,
+            rebuild_due=self._rebuild_due())
+
+    def maintenance(self, block: bool = False) -> MaintenanceReport:
+        """Drive the double-buffered rebuild: publish a finished shadow
+        index (atomic swap), start one if the backlog calls for it.
+        ``block=True`` quiesces: it joins an in-flight build and never
+        starts a new one, so the service returns with no rebuild
+        running."""
+        published = started = False
+        wall = 0.0
+        if self._shadow_thread is not None and (
+                block or not self._shadow_thread.is_alive()):
+            wall = self._publish_shadow()
+            published = True
+        if (not block and self.background_rebuild
+                and self._shadow_thread is None and self._tail_pressure()):
+            self._start_shadow()
+            started = True
+        return MaintenanceReport(
+            rebuild_started=started, rebuild_published=published,
+            rebuild_in_flight=self._shadow_thread is not None,
+            rebuild_wall_s=wall)
+
+    def stats(self) -> Dict[str, object]:
+        """One unified snapshot: lookup/hit/admission counters plus
+        rebuild accounting (count, in-flight flag, wall times)."""
+        return {
+            **self._counters,
+            "hot_occupancy": self.hot_occupancy,
+            "warm_occupancy": self.warm_occupancy,
+            "live_responses": len(self.responses),
+            "rebuild_in_flight": self._shadow_thread is not None,
+            "last_rebuild_s": self._last_rebuild_s,
+            "rebuild_total_s": self._rebuild_total_s,
+        }
+
+    # ------------------------------------------------------------------
+    # legacy serving surface (deprecated shims over plan/commit)
+    # ------------------------------------------------------------------
+    def lookup(self, embs, tenant: TenantArg = 0
+               ) -> Tuple[np.ndarray, np.ndarray, List[Optional[str]]]:
+        """Deprecated: use ``plan``.  embs: (B, D).  Returns
+        (hit (B,) bool, score (B,), values)."""
+        warnings.warn("CacheService.lookup is deprecated; use "
+                      "plan(CacheRequest)", DeprecationWarning, stacklevel=2)
+        plan = self.plan(CacheRequest.build(np.asarray(embs), tenant),
+                         coalesce=False)
+        return plan.hit, plan.scores, plan.responses
 
     def insert(self, embs, responses: Sequence[str], tenant: TenantArg = 0,
                scores: Optional[np.ndarray] = None) -> int:
-        """Cache miss results.  ``scores`` (the best same-tenant score
-        each query saw at lookup) enables the admission rule; without it
-        every entry is admitted.  Returns the number admitted."""
+        """Deprecated: use ``commit`` on a plan.  Caches miss results;
+        ``scores`` (the best same-tenant score each query saw at lookup)
+        enables the admission rule; without it every entry is admitted.
+        Returns the number admitted."""
+        warnings.warn("CacheService.insert is deprecated; use "
+                      "commit(plan, responses)", DeprecationWarning,
+                      stacklevel=2)
         embs = np.asarray(embs)
         assert embs.shape[0] == len(responses)
-        qt = self._tenant_row(tenant, len(responses))
-        admit = self.policies.admit_mask(qt, scores)
-        vids = np.full(len(responses), -1, np.int64)
-        for i in np.nonzero(admit)[0]:
-            vids[i] = self._next_vid
-            self.responses[self._next_vid] = responses[i]
-            self._next_vid += 1
-        self.stats["inserts"] += int(admit.sum())
-        self.stats["admission_skips"] += int((~admit).sum())
-        self.hot, evicted = self._insert(
-            self.hot, jnp.asarray(embs),
-            jnp.asarray(vids, dtype=jnp.int32), jnp.asarray(qt))
-        self._gc(evicted)
-        self._maybe_flush()
-        return int(admit.sum())
+        req = CacheRequest.build(embs, tenant)
+        admit = self.policies.admit_mask(req.tenants, scores)
+        plan = CachePlan.for_insert(req, admit, scores, epoch=self._epoch)
+        return self.commit(plan, list(responses)).admitted
 
     def evict_tenant(self, tenant: int) -> int:
         """Drop every entry of one tenant from both tiers; frees the
         host strings.  Returns the number of entries evicted."""
+        self._epoch += 1
         self.hot, self.warm, h_ev, w_ev = self._evict_tenant(
             self.hot, self.warm, jnp.asarray(tenant, jnp.int32))
         return self._gc(h_ev) + self._gc(w_ev)
@@ -207,21 +332,103 @@ class CacheService:
         for v in ids[ids >= 0]:
             if self.responses.pop(int(v), None) is not None:
                 n += 1
-        self.stats["evictions"] += n
+        self._counters["evictions"] += n
         return n
+
+    def _backlog(self) -> int:
+        """Rows appended since the *published* index was built."""
+        return int(np.asarray(self.warm.total - self.warm.indexed_total))
+
+    def _tail_pressure(self) -> bool:
+        """One more flush would push the unindexed backlog past the
+        tail window — the single rebuild-trigger predicate shared by
+        inline flushes, background starts and maintenance()."""
+        return self._backlog() + self.flush_size > self._tail
+
+    def _rebuild_due(self) -> bool:
+        """A maintenance() call now would publish or start a rebuild."""
+        if self._shadow_thread is not None:
+            return True
+        return self.background_rebuild and self._tail_pressure()
+
+    def _start_shadow(self) -> None:
+        """Kick off a shadow re-cluster of a snapshot of the warm tier.
+        The snapshot is an immutable pytree, so serving mutations keep
+        building fresh states while the thread reads the old one."""
+        snapshot = self.warm
+        self._shadow_box = box = {}
+        rebuild = self._rebuild
+
+        def run() -> None:
+            t0 = time.perf_counter()
+            try:
+                box["warm"] = jax.block_until_ready(rebuild(snapshot))
+            except BaseException as e:          # surfaced at publish time
+                box["error"] = e
+            # stamped in-thread: the build itself, not the idle wait
+            # for the next maintenance() tick to publish it
+            box["wall"] = time.perf_counter() - t0
+
+        self._shadow_thread = threading.Thread(
+            target=run, name="warm-ivf-rebuild", daemon=True)
+        self._shadow_thread.start()
+        self._counters["bg_rebuilds"] += 1
+
+    def _publish_shadow(self) -> float:
+        """Join the shadow thread and atomically swap its index in.
+
+        ``indexed_total`` becomes the snapshot's total, so every row
+        appended *after* the snapshot stays covered by the tail window
+        — recall never dips across the swap (`tiers.warm_query`'s
+        epoch partition keeps slots overwritten post-snapshot out of
+        the stale inverted lists).
+        """
+        assert self._shadow_thread is not None
+        self._shadow_thread.join()
+        self._shadow_thread = None
+        err = self._shadow_box.get("error")
+        if err is not None:
+            raise RuntimeError("background IVF rebuild failed") from err
+        shadow = self._shadow_box["warm"]
+        self.warm = tiers.warm_publish_index(self.warm, shadow)
+        wall = float(self._shadow_box["wall"])
+        self._last_rebuild_s = wall
+        self._rebuild_total_s += wall
+        self._counters["rebuilds"] += 1
+        return wall
+
+    def _rebuild_inline(self) -> None:
+        t0 = time.perf_counter()
+        self.warm = jax.block_until_ready(self._rebuild(self.warm))
+        self._last_rebuild_s = time.perf_counter() - t0
+        self._rebuild_total_s += self._last_rebuild_s
+        self._counters["rebuilds"] += 1
 
     def _do_flush(self, rebuild: bool) -> None:
         self.hot, dem = self._demote(self.hot)
         self.warm, evicted = self._append(self.warm, dem)
         self._gc(evicted)
-        self.stats["demotions"] += int(np.asarray(dem.mask).sum())
+        self._counters["demotions"] += int(np.asarray(dem.mask).sum())
         # the tail window only covers the last `tail` ring writes; a
         # rebuild is forced before the unindexed backlog outgrows it,
         # else demoted rows would silently fall out of reach
-        backlog = int(np.asarray(self.warm.total - self.warm.indexed_total))
-        if rebuild or backlog + self.flush_size > self._tail:
-            self.warm = self._rebuild(self.warm)
-            self.stats["rebuilds"] += 1
+        if not self.background_rebuild:
+            if rebuild or self._tail_pressure():
+                self._rebuild_inline()
+            return
+        # double-buffered: publish any finished shadow, then make sure
+        # the window still covers the backlog before serving resumes
+        if self._shadow_thread is not None \
+                and not self._shadow_thread.is_alive():
+            self._publish_shadow()
+        if self._backlog() > self._tail:
+            if self._shadow_thread is not None:
+                self._publish_shadow()          # blocks: join + swap
+            if self._backlog() > self._tail:
+                self._rebuild_inline()          # snapshot was too old
+        if (rebuild or self._tail_pressure()) \
+                and self._shadow_thread is None:
+            self._start_shadow()
 
     def _maybe_flush(self) -> None:
         n_valid = int(np.asarray(self.hot.valid).sum())
@@ -230,7 +437,9 @@ class CacheService:
 
     def flush(self, rebuild: bool = True) -> None:
         """Force one demotion flush now.  ``rebuild=False`` still
-        rebuilds if skipping would leave rows beyond the tail window."""
+        rebuilds if skipping would leave rows beyond the tail window.
+        With ``background_rebuild`` the re-cluster runs double-buffered
+        (shadow build + later publish) instead of inline."""
         self._do_flush(rebuild)
 
     # ------------------------------------------------------------------

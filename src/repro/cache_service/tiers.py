@@ -245,13 +245,36 @@ def warm_rebuild(state: WarmState, iters: int = 8,
                  seed: int = 0) -> WarmState:
     """Re-cluster the warm corpus and refill the inverted lists
     (jittable: spherical k-means + the same static list fill as
-    `build_ivf`)."""
+    `build_ivf`).
+
+    Double-buffering (DESIGN.md §7) runs this on a *snapshot* while
+    serving keeps reading the published index; `warm_publish_index`
+    then grafts the result onto the live state.
+    """
     n_clusters, bucket = state.members.shape
     cent = ivf_lib.kmeans(state.keys, state.valid, n_clusters, iters, seed)
     members, sizes = ivf_lib.build_lists(state.keys, state.valid, cent,
                                          bucket)
     return state._replace(centroids=cent, members=members, sizes=sizes,
                           indexed_total=state.total)
+
+
+def warm_publish_index(current: WarmState, shadow: WarmState) -> WarmState:
+    """Atomically swap a shadow-built IVF into the live warm state.
+
+    Only the index leaves move (centroids, inverted lists,
+    ``indexed_total``); keys/valid/cursor/total stay the *current*
+    ring, which may have advanced past the shadow's snapshot.  Because
+    ``indexed_total`` becomes the snapshot's total, every row appended
+    after the snapshot still satisfies ``write_seq > indexed_total``
+    and is served by `warm_query`'s tail window, while ring slots
+    overwritten post-snapshot are excluded from the (stale) inverted
+    lists by the same epoch partition — so the swap can never create a
+    recall dip or a duplicate candidate.
+    """
+    return current._replace(centroids=shadow.centroids,
+                            members=shadow.members, sizes=shadow.sizes,
+                            indexed_total=shadow.indexed_total)
 
 
 def warm_query(state: WarmState, q: jax.Array, q_tenants: jax.Array,

@@ -5,20 +5,34 @@ policy.  The device half (store state, query/insert/touch) is pure JAX;
 this class is the thin host orchestration that also owns the response
 strings (which never live on device).
 
-Usage (see examples/serve_with_cache.py):
+Serving surface: the typed ``CacheBackend`` lifecycle (DESIGN.md §7) —
+``plan(CacheRequest)`` answers the batch (read side: TTL sweep, exact
+query, LRU touch, response resolution, miss coalescing) and
+``commit(plan, responses)`` caches the generated misses.  The legacy
+two-call surface remains as deprecated shims:
 
     cache = SemanticCache(capacity=4096, dim=768, threshold=0.85)
     hits, scores, values = cache.lookup(embeddings)     # (B, D)
     cache.insert(miss_embeddings, miss_responses)
+
+This backend is single-tenant (capabilities().tenants is False) and
+admits every miss (no admission policy); see
+``repro.cache_service.CacheService`` for the tiered multi-tenant
+backend behind the same protocol.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence, Tuple
+import warnings
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache_service.protocol import (
+    CacheCapabilities, CachePlan, CacheRequest, CommitReceipt,
+    MaintenanceReport, coalesce_misses, ungrouped_misses,
+)
 from repro.core import store as store_lib
 
 
@@ -32,6 +46,8 @@ class SemanticCache:
         self.ttl = ttl
         self.state = store_lib.init_store(capacity, dim)
         self.responses: List[str] = []
+        self._counters = {"lookups": 0, "hits": 0, "inserts": 0,
+                          "plans": 0, "commits": 0}
         self._query = jax.jit(
             lambda st, q: store_lib.query(st, q, threshold, topk))
         self._insert = jax.jit(store_lib.insert_batch)
@@ -40,26 +56,95 @@ class SemanticCache:
                        if ttl else None)
 
     # ------------------------------------------------------------------
-    def lookup(self, embs) -> Tuple[np.ndarray, np.ndarray, List[Optional[str]]]:
-        """embs: (B, D).  Returns (hit (B,) bool, score (B,), values)."""
+    # CacheBackend protocol
+    # ------------------------------------------------------------------
+    def capabilities(self) -> CacheCapabilities:
+        return CacheCapabilities()   # flat, single-tenant, admit-all
+
+    def plan(self, request: CacheRequest, *,
+             coalesce: bool = True) -> CachePlan:
+        """Read side: TTL sweep, exact top-k, LRU touch; responses are
+        resolved here so later overwrites cannot invalidate them.
+        ``coalesce=False`` skips the miss-grouping work."""
+        if np.any(request.tenants != 0):
+            raise ValueError("SemanticCache is single-tenant; route "
+                             "multi-tenant traffic to CacheService")
         if self._evict is not None:
             self.state = self._evict(self.state)
-        res = self._query(self.state, jnp.asarray(embs))
+        res = self._query(self.state, jnp.asarray(request.embeddings))
         self.state = self._touch(self.state, res.slots[:, 0], res.hit)
         hit = np.asarray(res.hit)
         scores = np.asarray(res.scores[:, 0])
-        vids = np.asarray(res.value_ids[:, 0])
+        vids = np.asarray(res.value_ids[:, 0]).astype(np.int64)
         values = [self.responses[v] if h and 0 <= v < len(self.responses)
                   else None for h, v in zip(hit, vids)]
-        return hit, scores, values
+        self._counters["plans"] += 1
+        self._counters["lookups"] += len(hit)
+        self._counters["hits"] += int(hit.sum())
+        thr = np.full(len(hit), self.threshold, np.float32)
+        return CachePlan(
+            request=request, hit=hit, scores=scores,
+            value_ids=np.where(hit, vids, -1), responses=values,
+            admit=~hit,                       # no admission policy: cache
+            miss_leader=coalesce_misses(      # every generated miss
+                request.embeddings, hit, request.tenants, thr)
+            if coalesce else ungrouped_misses(hit),
+            epoch=0)
+
+    def commit(self, plan: CachePlan,
+               responses: Sequence[Optional[str]]) -> CommitReceipt:
+        """Write side: append admitted miss responses and insert their
+        embeddings (value ids are list positions, always fresh)."""
+        self._counters["commits"] += 1
+        rows = plan.miss_rows()
+        rows = rows[plan.admit[rows]]
+        texts = []
+        for i in rows:
+            if responses[i] is None:
+                raise ValueError(f"admitted row {int(i)} has no response")
+            texts.append(responses[i])
+        if len(rows):
+            base = len(self.responses)
+            self.responses.extend(texts)
+            vids = jnp.arange(base, base + len(rows), dtype=jnp.int32)
+            self.state = self._insert(
+                self.state, jnp.asarray(plan.request.embeddings[rows]), vids)
+        self._counters["inserts"] += len(rows)
+        return CommitReceipt(admitted=len(rows),
+                             skipped=int(len(plan.miss_rows()) - len(rows)),
+                             evicted=0)
+
+    def maintenance(self, block: bool = False) -> MaintenanceReport:
+        """Flat store: no background obligations (TTL sweeps run at
+        plan time)."""
+        return MaintenanceReport()
+
+    def stats(self) -> Dict[str, object]:
+        return {**self._counters, "occupancy": self.occupancy,
+                "live_responses": len(self.responses)}
+
+    # ------------------------------------------------------------------
+    # legacy surface (deprecated shims over plan/commit)
+    # ------------------------------------------------------------------
+    def lookup(self, embs) -> Tuple[np.ndarray, np.ndarray, List[Optional[str]]]:
+        """Deprecated: use ``plan``.  embs: (B, D).  Returns
+        (hit (B,) bool, score (B,), values)."""
+        warnings.warn("SemanticCache.lookup is deprecated; use "
+                      "plan(CacheRequest)", DeprecationWarning, stacklevel=2)
+        plan = self.plan(CacheRequest.build(np.asarray(embs)),
+                         coalesce=False)
+        return plan.hit, plan.scores, plan.responses
 
     def insert(self, embs, responses: Sequence[str]) -> None:
+        """Deprecated: use ``commit`` on a plan."""
+        warnings.warn("SemanticCache.insert is deprecated; use "
+                      "commit(plan, responses)", DeprecationWarning,
+                      stacklevel=2)
         embs = np.asarray(embs)
         assert embs.shape[0] == len(responses)
-        base = len(self.responses)
-        self.responses.extend(responses)
-        vids = jnp.arange(base, base + len(responses), dtype=jnp.int32)
-        self.state = self._insert(self.state, jnp.asarray(embs), vids)
+        req = CacheRequest.build(embs)
+        plan = CachePlan.for_insert(req, np.ones(len(req), bool))
+        self.commit(plan, list(responses))
 
     # ------------------------------------------------------------------
     @property

@@ -65,7 +65,7 @@ def main():
         svc.handle(stream[i:i + args.batch])
     print(f"{args.requests} requests in {time.perf_counter() - t0:.1f}s; "
           f"hit rate {svc.hit_rate:.1%} "
-          f"({svc.stats['hits']} LLM calls saved)")
+          f"({svc.stats()['hits']} LLM calls saved)")
 
 
 if __name__ == "__main__":

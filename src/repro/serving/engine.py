@@ -8,15 +8,17 @@ front of this engine, which is exactly the deployment the paper targets
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Optional
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache_service.protocol import CacheBackend, CacheRequest
 from repro.configs.base import ModelConfig
-from repro.data.tokenizer import EOS, HashTokenizer
+from repro.data.tokenizer import HashTokenizer
 from repro.models import decode_step, prefill
 from repro.serving.frontend import stub_frontend_embeds
 
@@ -80,31 +82,44 @@ class ServedRequest:
 class CachedLLMService:
     """The paper's deployment: a semantic cache in front of an LLM.
 
-    Queries are embedded with the (fine-tuned) compact encoder; on a
-    cache hit the stored response is returned without touching the
-    engine; on a miss the engine generates and the (embedding, response)
-    pair is inserted.
+    ``handle`` is a thin typed pipeline over any ``CacheBackend``
+    (DESIGN.md §7): embed -> ``plan`` (per-row hit/miss verdicts,
+    resolved responses, admission pre-decision, miss coalescing) ->
+    generate one answer per miss *group* leader -> ``commit`` -> drive
+    backend ``maintenance()`` between batches (this is what lets the
+    warm-IVF rebuild run double-buffered off the hot path).  Backend
+    features are discovered through ``capabilities()``, never hasattr.
     """
 
-    def __init__(self, embed_fn, cache, engine: Optional[ServeEngine],
-                 tokenizer: HashTokenizer, max_query_len: int = 32,
-                 max_new_tokens: int = 16, fused: Optional[bool] = None):
+    def __init__(self, embed_fn, cache: CacheBackend,
+                 engine: Optional[ServeEngine], tokenizer: HashTokenizer,
+                 max_query_len: int = 32, max_new_tokens: int = 16,
+                 fused: Optional[bool] = None, coalesce: bool = True):
         """``fused`` (None = leave the backend's choice) selects the
         cache's cascade execution path — the fused Pallas lookup kernel
-        vs the four-op composition — when the backend supports it
-        (`CacheService.set_fused`); ignored for flat caches."""
+        vs the four-op composition — when the backend's capabilities
+        advertise it; ``coalesce=False`` generates per miss row even
+        for near-identical queries (the legacy behaviour)."""
         self.embed_fn = embed_fn          # list[str] -> (B, D) unit vectors
-        # SemanticCache or the tiered multi-tenant CacheService facade
+        if not isinstance(cache, CacheBackend):
+            raise TypeError(
+                f"cache backend {type(cache).__name__} does not implement "
+                "the CacheBackend protocol (capabilities/plan/commit/"
+                "maintenance/stats); see repro.cache_service.protocol")
         self.cache = cache
+        self.caps = cache.capabilities()
         self.engine = engine
         self.tok = tokenizer
         self.max_query_len = max_query_len
         self.max_new_tokens = max_new_tokens
-        self.stats = {"hits": 0, "misses": 0}
-        self._tenant_aware = getattr(cache, "supports_tenants", False)
+        self.coalesce = coalesce
+        self._counters = {"requests": 0, "hits": 0, "misses": 0,
+                          "generations": 0, "coalesced_misses": 0,
+                          "maintenance_calls": 0}
+        self._trace = itertools.count()
         if fused is not None:
-            if hasattr(cache, "set_fused"):
-                cache.set_fused(fused)
+            if self.caps.fused_lookup:
+                self.cache.set_fused(fused)
             elif fused:
                 raise ValueError(
                     f"cache backend {type(cache).__name__} has no fused "
@@ -119,38 +134,57 @@ class CachedLLMService:
 
     def handle(self, queries: List[str],
                tenant: int = 0) -> List[ServedRequest]:
+        if not self.caps.tenants and np.any(np.asarray(tenant) != 0):
+            raise ValueError(
+                f"cache backend {type(self.cache).__name__} is not "
+                "tenant-aware; serving tenant "
+                f"{tenant} through it would break isolation")
         embs = self.embed_fn(queries)
-        if self._tenant_aware:
-            hits, scores, values = self.cache.lookup(embs, tenant=tenant)
-        else:
-            if tenant != 0:
-                raise ValueError(
-                    f"cache backend {type(self.cache).__name__} is not "
-                    "tenant-aware; serving tenant "
-                    f"{tenant} through it would break isolation")
-            hits, scores, values = self.cache.lookup(embs)
+        plan = self.cache.plan(
+            CacheRequest.build(embs, tenant, trace_id=next(self._trace)),
+            coalesce=self.coalesce)
+
+        # one generation per miss-group leader serves the whole group
+        # (with coalesce=False the plan's map degenerates to one group
+        # per miss row, so this needs no special-casing)
+        leaders = plan.leader_rows()
+        answers = dict(zip(leaders,
+                           self._llm_answer([queries[i] for i in leaders])
+                           if leaders else []))
+        responses: List[Optional[str]] = [None] * len(queries)
+        for i in plan.miss_rows():
+            responses[int(i)] = answers[int(plan.miss_leader[i])]
+
+        receipt = self.cache.commit(plan, responses)
+        self._counters["requests"] += len(queries)
+        self._counters["hits"] += int(plan.hit.sum())
+        self._counters["misses"] += int((~plan.hit).sum())
+        self._counters["generations"] += len(leaders)
+        self._counters["coalesced_misses"] += plan.n_coalesced
+        if receipt.rebuild_due:
+            # between-batch maintenance: publish/start the background
+            # IVF rebuild without stalling any request
+            self.cache.maintenance()
+            self._counters["maintenance_calls"] += 1
+
         out: List[Optional[ServedRequest]] = [None] * len(queries)
-        miss_idx = [i for i, h in enumerate(hits) if not h]
         for i, q in enumerate(queries):
-            if hits[i]:
-                self.stats["hits"] += 1
-                out[i] = ServedRequest(q, values[i], True, float(scores[i]))
-        if miss_idx:
-            answers = self._llm_answer([queries[i] for i in miss_idx])
-            sel = np.asarray(miss_idx)
-            if self._tenant_aware:
-                # pass the observed scores so the admission policy can
-                # skip misses already well-covered by a cached neighbour
-                self.cache.insert(embs[sel], answers, tenant=tenant,
-                                  scores=scores[sel])
+            if plan.hit[i]:
+                out[i] = ServedRequest(q, plan.responses[i], True,
+                                       float(plan.scores[i]))
             else:
-                self.cache.insert(embs[sel], answers)
-            for i, a in zip(miss_idx, answers):
-                self.stats["misses"] += 1
-                out[i] = ServedRequest(queries[i], a, False)
+                out[i] = ServedRequest(q, responses[i], False)
         return out  # type: ignore
+
+    def stats(self) -> Dict[str, object]:
+        """Unified telemetry snapshot: the backend's counters (lookups,
+        hit tiers, admissions, rebuild timings) overlaid with the
+        serving counters — serving keys win collisions (a flat
+        backend's plan-level "hits" must not shadow the pipeline's)."""
+        return {**self.cache.stats(), **self._counters,
+                "hit_rate": self.hit_rate}
 
     @property
     def hit_rate(self) -> float:
-        n = self.stats["hits"] + self.stats["misses"]
-        return self.stats["hits"] / n if n else 0.0
+        n = self._counters["hits"] + self._counters["misses"]
+        return self._counters["hits"] / n if n else 0.0

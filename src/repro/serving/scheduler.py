@@ -56,7 +56,13 @@ def _write_slot(pool_state, slot_state, slot: int):
 
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
-                 max_len: int = 256, prompt_len: int = 32):
+                 max_len: int = 256, prompt_len: int = 32,
+                 maintenance: Optional[Callable[[], object]] = None):
+        """``maintenance`` (e.g. a cache backend's bound
+        ``maintenance()``) is invoked once per engine tick, after
+        decode/retire — the queued-step way to drive background cache
+        work (double-buffered IVF publish) between batches without a
+        dedicated thread in the serving loop."""
         if cfg.is_encoder:
             raise ValueError("decoder configs only")
         self.cfg = cfg
@@ -64,6 +70,7 @@ class ContinuousBatcher:
         self.n_slots = n_slots
         self.max_len = max_len
         self.prompt_len = prompt_len
+        self.maintenance = maintenance
         self.pool = init_lm_state(cfg, n_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.pending: List[Request] = []
@@ -119,6 +126,8 @@ class ContinuousBatcher:
                 self._next_tok[slot, 0] = tok
                 self.slot_req[slot].generated.append(tok)
         self._retire()
+        if self.maintenance is not None:
+            self.maintenance()
         self.ticks += 1
         return len(active)
 

@@ -1,0 +1,165 @@
+"""Double-buffered warm-IVF rebuild: lookups issued mid-rebuild read
+the old *published* index and recall never dips — before the shadow
+build, during the overlap (including extra demotion flushes), across
+the atomic publish, and under sustained traffic.  Also covers the
+maintenance obligations surfaced by CommitReceipt and the pipeline."""
+import threading
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.cache_service import CacheRequest, CacheService
+from repro.core.embedders import HashNgramEmbedder
+from repro.data import HashTokenizer
+from repro.serving import CachedLLMService
+
+rng = np.random.default_rng(41)
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def _mk(background, **kw):
+    cfg = dict(dim=16, hot_capacity=16, warm_capacity=64, n_clusters=4,
+               bucket=32, n_probe=4, threshold=0.9, flush_size=8,
+               rebuild_every=2, background_rebuild=background)
+    cfg.update(kw)
+    return CacheService(**cfg)
+
+
+def _gate_first_rebuild(svc):
+    """Wrap svc._rebuild so the FIRST call blocks on an Event (the
+    shadow thread parks there); later calls run through."""
+    gate = threading.Event()
+    real = svc._rebuild
+    state = {"first": True}
+
+    def gated(warm):
+        if state["first"]:
+            state["first"] = False
+            assert gate.wait(timeout=60), "test gate never opened"
+        return real(warm)
+
+    svc._rebuild = gated
+    return gate
+
+
+def _lookup(svc, keys, tenant=0):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return svc.lookup(keys, tenant=tenant)
+
+
+def _insert(svc, keys, texts, tenant=0):
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        return svc.insert(keys, texts, tenant=tenant)
+
+
+def test_mid_rebuild_lookup_reads_old_published_index():
+    # tail = flush_size * rebuild_every = 24: wide enough that the two
+    # flushes below never force a (blocking) join of the gated shadow
+    svc = _mk(background=True, rebuild_every=3)
+    gate = _gate_first_rebuild(svc)
+    keys = _unit(rng.standard_normal((16, 16)).astype(np.float32))
+    _insert(svc, keys, [f"r{i}" for i in range(16)])
+
+    svc.flush(rebuild=True)                    # starts the gated shadow
+    st = svc.stats()
+    assert st["rebuild_in_flight"] and st["bg_rebuilds"] == 1
+    assert st["rebuilds"] == 0                 # nothing published yet
+    idx_before = int(np.asarray(svc.warm.indexed_total))
+
+    # mid-rebuild serving: the old (empty) index is still published, the
+    # tail window serves the freshly demoted rows — full recall
+    hit, _, vals = _lookup(svc, keys)
+    assert hit.all()
+    assert all(v is not None for v in vals)
+    assert int(np.asarray(svc.warm.indexed_total)) == idx_before
+
+    # demote MORE rows while the shadow is still building: the overlap
+    # must keep every row reachable (tail covers post-snapshot writes)
+    keys2 = _unit(rng.standard_normal((8, 16)).astype(np.float32))
+    _insert(svc, keys2, [f"s{i}" for i in range(8)])
+    svc.flush(rebuild=False)
+    hit, _, _ = _lookup(svc, np.concatenate([keys, keys2]))
+    assert hit.all()
+    assert svc.stats()["rebuild_in_flight"]    # still the same build
+
+    gate.set()
+    rep = svc.maintenance(block=True)
+    assert rep.rebuild_published and not rep.rebuild_in_flight
+    assert rep.rebuild_wall_s > 0
+    st = svc.stats()
+    assert st["rebuilds"] == 1 and not st["rebuild_in_flight"]
+    # the publish kept indexed_total at the SNAPSHOT's total: rows
+    # appended during the overlap stay in the tail window
+    assert int(np.asarray(svc.warm.indexed_total)) > idx_before
+    assert svc._backlog() > 0
+    hit, _, _ = _lookup(svc, np.concatenate([keys, keys2]))
+    assert hit.all()
+
+
+def test_background_mode_never_strands_rows_under_sustained_traffic():
+    """No gating: real threads racing real flushes.  After every batch,
+    every live entry must remain reachable, exactly as inline mode."""
+    bg, inline = _mk(True), _mk(False)
+    all_keys = []
+    for step in range(20):
+        e = _unit(rng.standard_normal((8, 16)).astype(np.float32))
+        all_keys.append(e)
+        texts = [f"b{step}-{i}" for i in range(8)]
+        _insert(bg, e, texts)
+        _insert(inline, e, texts)
+        keys = np.concatenate(all_keys)
+        hb, _, _ = _lookup(bg, keys)
+        hi, _, _ = _lookup(inline, keys)
+        # identical ring/demotion schedule => identical live sets; both
+        # modes must serve every live row whatever the index state
+        np.testing.assert_array_equal(hb, hi, err_msg=f"step {step}")
+        assert len(bg.responses) == len(inline.responses)
+    bg.maintenance(block=True)
+    st = bg.stats()
+    assert st["bg_rebuilds"] > 0
+    assert st["rebuilds"] + int(st["rebuild_in_flight"]) >= 1
+
+
+def test_commit_receipt_surfaces_maintenance_obligation():
+    svc = _mk(background=True, rebuild_every=1)
+    due = False
+    for step in range(6):
+        e = _unit(rng.standard_normal((8, 16)).astype(np.float32))
+        plan = svc.plan(CacheRequest.build(e, 0))
+        receipt = svc.commit(plan, [f"c{step}-{i}" for i in range(8)])
+        due = due or receipt.rebuild_due
+    assert due                                  # obligation surfaced
+    svc.maintenance(block=True)
+    assert svc.stats()["rebuilds"] > 0
+
+
+def test_pipeline_drives_maintenance_between_batches():
+    emb = HashNgramEmbedder(dim=64)
+    cache = CacheService(dim=64, hot_capacity=16, warm_capacity=128,
+                         n_clusters=4, bucket=64, threshold=0.95,
+                         flush_size=8, rebuild_every=2,
+                         background_rebuild=True)
+    svc = CachedLLMService(emb.embed, cache, engine=None,
+                           tokenizer=HashTokenizer())
+    for step in range(12):
+        out = svc.handle([f"question {step} variant {i}" for i in range(8)])
+        assert all(r.response is not None for r in out)
+    cache.maintenance(block=True)
+    st = svc.stats()
+    assert st["bg_rebuilds"] > 0, st
+    assert st["maintenance_calls"] > 0, st
+
+
+def test_background_flag_is_advertised():
+    assert _mk(True).capabilities().background_rebuild
+    assert not _mk(False).capabilities().background_rebuild
+    with pytest.raises(TypeError):
+        CachedLLMService(lambda t: np.zeros((len(t), 4), np.float32),
+                         cache=object(), engine=None,
+                         tokenizer=HashTokenizer())

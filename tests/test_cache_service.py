@@ -41,7 +41,7 @@ def test_cascade_recall_matches_flat_exact():
                        flush_size=32, rebuild_every=2, kmeans_iters=6)
     for i in range(0, N, 32):
         svc.insert(keys[i:i + 32], [f"r{j}" for j in range(i, i + 32)])
-    assert svc.stats["demotions"] > N // 2  # most entries live in warm
+    assert svc.stats()["demotions"] > N // 2  # most entries live in warm
 
     q = _unit(keys + 0.02 * rng.standard_normal(keys.shape
                                                 ).astype(np.float32))
@@ -105,6 +105,39 @@ def test_cross_tenant_queries_never_hit():
                     assert values[j].startswith(f"t{qt}-")
 
 
+def test_evict_tenant_between_plan_and_commit():
+    """The plan/commit race: a tenant eviction landing between the two
+    calls must neither resurrect freed value ids nor leak host response
+    strings; hit responses stay valid (resolved at plan time)."""
+    from repro.cache_service import CacheRequest
+
+    d = 16
+    svc = CacheService(dim=d, hot_capacity=32, warm_capacity=64,
+                       n_clusters=4, bucket=32, threshold=0.9)
+    e0 = _unit(rng.standard_normal((8, d)).astype(np.float32))
+    svc.insert(e0, [f"old{i}" for i in range(8)], tenant=0)
+
+    fresh = _unit(rng.standard_normal((4, d)).astype(np.float32))
+    q = np.concatenate([e0[:4], fresh])
+    plan = svc.plan(CacheRequest.build(q, 0))
+    assert plan.hit[:4].all() and not plan.hit[4:].any()
+    assert all(r is not None for r in plan.responses[:4])
+
+    assert svc.evict_tenant(0) == 8          # the race: plan is now stale
+    receipt = svc.commit(plan, [None] * 4 + [f"new{i}" for i in range(4)])
+    assert receipt.admitted == 4
+    assert svc.stats()["stale_commits"] == 1
+    # value ids 0..7 were freed; commit must have minted fresh ones only
+    assert svc.responses and min(svc.responses) >= 8
+    assert sorted(svc.responses.values()) == [f"new{i}" for i in range(4)]
+    assert len(svc.responses) == len(svc)    # no leaked host strings
+    # plan-time responses were already resolved, so the requests that
+    # were promised a hit still got a real string (asserted above); but
+    # the evicted keys themselves are gone from the device tiers
+    hit, _, _ = svc.lookup(e0, tenant=0)
+    assert not hit.any()
+
+
 def test_evict_tenant_only_touches_that_tenant():
     d = 16
     svc = CacheService(dim=d, hot_capacity=32, warm_capacity=64,
@@ -137,7 +170,7 @@ def test_admission_skips_well_covered_misses():
     assert not hit[0] and scores[0] > 0.75  # miss, but well-covered
     admitted = svc.insert(near, ["dup"], scores=scores)
     assert admitted == 0
-    assert svc.stats["admission_skips"] == 1
+    assert svc.stats()["admission_skips"] == 1
     assert len(svc.responses) == 1          # no string leaked for the skip
     far = _unit(rng.standard_normal((1, d)).astype(np.float32))
     hit, scores, _ = svc.lookup(far)
@@ -159,7 +192,7 @@ def test_response_gc_bounds_host_memory():
     assert total == 320
     assert len(svc.responses) <= hot_cap + warm_cap
     assert len(svc.responses) == len(svc)   # exactly the live entries
-    assert svc.stats["evictions"] == total - len(svc)
+    assert svc.stats()["evictions"] == total - len(svc)
 
 
 def test_manual_flushes_never_strand_entries_past_tail():
@@ -258,8 +291,9 @@ def test_cached_service_with_tiered_backend():
     for i in range(0, len(stream), 8):
         out = svc.handle(stream[i:i + 8])
         assert all(r.response is not None for r in out)
-    assert svc.stats["hits"] + svc.stats["misses"] == 120
-    assert svc.stats["hits"] > 8, svc.stats
+    st = svc.stats()
+    assert st["hits"] + st["misses"] == 120
+    assert st["hits"] > 8, st
 
 
 def test_cached_service_tenants_are_isolated_end_to_end():

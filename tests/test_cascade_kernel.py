@@ -148,7 +148,8 @@ def test_cascade_query_fused_matches_unfused_after_flush_rebuild():
         e = _unit(rng.standard_normal((8, d)).astype(np.float32))
         svc.insert(e, [f"s{step}-{i}" for i in range(8)],
                    tenant=step % 3)
-    assert svc.stats["demotions"] > 0 and svc.stats["rebuilds"] > 0
+    st = svc.stats()
+    assert st["demotions"] > 0 and st["rebuilds"] > 0
     # the warm ring now holds indexed rows AND a post-rebuild tail
     assert int(svc.warm.total - svc.warm.indexed_total) > 0
 

@@ -131,6 +131,21 @@ def test_continuous_batching_completes_all(batcher_setup):
         assert all(0 <= t < cfg.vocab_size for t in r.generated)
 
 
+def test_batcher_drives_maintenance_every_tick(batcher_setup):
+    """The queued-step maintenance hook: a cache backend's bound
+    maintenance() handed to the batcher runs once per engine tick."""
+    cfg, pv = batcher_setup
+    calls = []
+    b = ContinuousBatcher(cfg, pv, n_slots=2, max_len=64, prompt_len=8,
+                          maintenance=lambda: calls.append(1))
+    b.submit(Request(uid=0,
+                     prompt=rng.integers(4, cfg.vocab_size, 6).astype(
+                         np.int32),
+                     max_new_tokens=3))
+    b.run(max_ticks=50)
+    assert b.ticks > 0 and len(calls) == b.ticks
+
+
 def test_continuous_batching_matches_sequential(batcher_setup):
     """Tokens produced in the slot pool must equal a lone generation
     (slot isolation: no cross-request state leakage)."""

@@ -1,0 +1,146 @@
+"""Golden parity: the typed plan/commit lifecycle is bit-exact with the
+legacy lookup/insert serving loop — hits, scores, value ids, admissions,
+evictions and the full device tier state — for both backends
+(SemanticCache and CacheService) and both cascade paths (fused and
+unfused).  The query mix includes exact in-batch duplicates, so miss
+coalescing is exercised while keeping even the host strings identical."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.cache_service import CacheRequest, CacheService
+from repro.core import SemanticCache
+
+rng = np.random.default_rng(29)
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def _batches(d, n_batches=8, batch=8, repeat_frac=0.4):
+    """Query stream with cross-batch repeats and exact in-batch dups."""
+    seen = []
+    out = []
+    for b in range(n_batches):
+        rows = []
+        for i in range(batch - 1):
+            if seen and rng.random() < repeat_frac:
+                rows.append(seen[rng.integers(len(seen))])
+            else:
+                e = _unit(rng.standard_normal(d).astype(np.float32))
+                seen.append(e)
+                rows.append(e)
+        rows.append(rows[0])        # exact duplicate within the batch
+        out.append(np.stack(rows))
+    return out
+
+
+def _legacy_serve(cache, embs, tenant, tenant_aware):
+    """The pre-protocol serving loop, verbatim (lookup -> generate
+    misses -> insert with observed scores)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        if tenant_aware:
+            hits, scores, values = cache.lookup(embs, tenant=tenant)
+        else:
+            hits, scores, values = cache.lookup(embs)
+        miss = [i for i, h in enumerate(hits) if not h]
+        if miss:
+            answers = [f"gen({embs[i].tobytes().hex()[:12]})" for i in miss]
+            sel = np.asarray(miss)
+            if tenant_aware:
+                cache.insert(embs[sel], answers, tenant=tenant,
+                             scores=scores[sel])
+            else:
+                cache.insert(embs[sel], answers)
+    return np.asarray(hits), np.asarray(scores), values
+
+
+def _plan_commit_serve(cache, embs, tenant):
+    """The typed pipeline: plan -> one generation per miss-group leader
+    -> commit."""
+    plan = cache.plan(CacheRequest.build(embs, tenant))
+    responses = [None] * len(embs)
+    for i in plan.miss_rows():
+        lead = int(plan.miss_leader[i])
+        responses[int(i)] = f"gen({embs[lead].tobytes().hex()[:12]})"
+    cache.commit(plan, responses)
+    return plan.hit, plan.scores, plan.responses
+
+
+def _assert_tree_equal(a, b, names):
+    for name, x, y in zip(names, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=name)
+
+
+PARITY_KEYS = ("lookups", "hot_hits", "warm_hits", "inserts",
+               "admission_skips", "demotions", "rebuilds", "evictions")
+
+
+@pytest.mark.parametrize("fused", [False, True])
+def test_cache_service_plan_commit_matches_legacy(fused):
+    d = 24
+    mk = lambda: CacheService(
+        dim=d, hot_capacity=16, warm_capacity=64, n_clusters=4, bucket=32,
+        n_probe=4, threshold=0.85, admission_margin=0.05, flush_size=8,
+        rebuild_every=2, fused=fused)
+    legacy, typed = mk(), mk()
+    for b, embs in enumerate(_batches(d)):
+        tenant = b % 3
+        lh, ls, lv = _legacy_serve(legacy, embs, tenant, tenant_aware=True)
+        th, ts, tv = _plan_commit_serve(typed, embs, tenant)
+        np.testing.assert_array_equal(lh, th, err_msg=f"batch {b} hits")
+        np.testing.assert_array_equal(ls, ts, err_msg=f"batch {b} scores")
+        assert lv == tv, f"batch {b} hit responses"
+        # full device-state parity after every batch: same admissions,
+        # same value-id assignment, same demotions/evictions
+        _assert_tree_equal(legacy.hot, typed.hot,
+                           [f"hot.{f}" for f in legacy.hot._fields])
+        _assert_tree_equal(legacy.warm, typed.warm,
+                           [f"warm.{f}" for f in legacy.warm._fields])
+        assert legacy.responses == typed.responses, f"batch {b}"
+    sl, st = legacy.stats(), typed.stats()
+    assert {k: sl[k] for k in PARITY_KEYS} == {k: st[k] for k in PARITY_KEYS}
+
+
+def test_semantic_cache_plan_commit_matches_legacy():
+    d = 24
+    legacy = SemanticCache(capacity=64, dim=d, threshold=0.85)
+    typed = SemanticCache(capacity=64, dim=d, threshold=0.85)
+    for b, embs in enumerate(_batches(d)):
+        lh, ls, lv = _legacy_serve(legacy, embs, 0, tenant_aware=False)
+        th, ts, tv = _plan_commit_serve(typed, embs, 0)
+        np.testing.assert_array_equal(lh, th, err_msg=f"batch {b} hits")
+        np.testing.assert_array_equal(ls, ts, err_msg=f"batch {b} scores")
+        assert lv == tv
+        _assert_tree_equal(legacy.state, typed.state,
+                           [f"state.{f}" for f in legacy.state._fields])
+        assert legacy.responses == typed.responses
+    assert legacy.stats()["inserts"] == typed.stats()["inserts"]
+
+
+def test_insert_shim_is_commit_for_every_row():
+    """The deprecated insert() must behave exactly like committing a
+    plan whose rows are all ungrouped misses (admission included)."""
+    d = 16
+    a = CacheService(dim=d, hot_capacity=16, warm_capacity=32, n_clusters=2,
+                     bucket=16, threshold=0.9, admission_margin=0.1)
+    b = CacheService(dim=d, hot_capacity=16, warm_capacity=32, n_clusters=2,
+                     bucket=16, threshold=0.9, admission_margin=0.1)
+    e = _unit(rng.standard_normal((6, d)).astype(np.float32))
+    scores = np.asarray([0.0, 0.85, 0.3, 0.95, 0.5, 0.82], np.float32)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        n_a = a.insert(e, [f"r{i}" for i in range(6)], tenant=1,
+                       scores=scores)
+    from repro.cache_service import CachePlan
+    req = CacheRequest.build(e, 1)
+    admit = b.policies.admit_mask(req.tenants, scores)
+    n_b = b.commit(CachePlan.for_insert(req, admit, scores),
+                   [f"r{i}" for i in range(6)]).admitted
+    assert n_a == n_b == int(admit.sum()) < 6
+    _assert_tree_equal(a.hot, b.hot, a.hot._fields)
+    assert a.responses == b.responses

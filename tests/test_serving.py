@@ -48,8 +48,9 @@ def test_cached_service_hit_rate():
     for i in range(0, len(stream), 8):
         out = svc.handle(stream[i:i + 8])
         assert all(r.response is not None for r in out)
-    assert svc.stats["hits"] > 8, svc.stats
-    assert svc.stats["hits"] + svc.stats["misses"] == 120
+    st = svc.stats()
+    assert st["hits"] > 8, st
+    assert st["hits"] + st["misses"] == 120
     # every hit's response must be a previously generated response
     assert svc.hit_rate > 0.05
 

@@ -106,4 +106,6 @@ def test_full_serving_stack_with_real_llm():
     assert not r1.cache_hit and len(r1.response) > 0
     r2 = svc.handle(q)[0]
     assert r2.cache_hit and r2.response == r1.response
-    assert svc.stats == {"hits": 1, "misses": 1}
+    st = svc.stats()
+    assert st["hits"] == 1 and st["misses"] == 1
+    assert st["generations"] == 1 and st["requests"] == 2
