@@ -17,8 +17,9 @@ from repro.cache_service.tiers import (
     CascadeResult, Demoted, HotState, WarmState, cascade_lookup,
     cascade_query, demote_coldest, evict_tenant, hot_insert,
     hot_insert_batch, hot_query, hot_touch, init_hot, init_warm,
-    warm_append, warm_occupancy, warm_publish_index, warm_query,
-    warm_rebuild,
+    init_warm_sharded, place_warm_sharded, quantize_rows, requantize,
+    stack_warm, warm_append, warm_append_sharded, warm_occupancy,
+    warm_publish_index, warm_query, warm_rebuild, warm_rebuild_sharded,
 )
 
 __all__ = [
@@ -29,6 +30,8 @@ __all__ = [
     "CascadeResult", "Demoted", "HotState", "WarmState", "cascade_lookup",
     "cascade_query", "demote_coldest", "evict_tenant", "hot_insert",
     "hot_insert_batch", "hot_query", "hot_touch", "init_hot", "init_warm",
-    "warm_append", "warm_occupancy", "warm_publish_index", "warm_query",
-    "warm_rebuild",
+    "init_warm_sharded", "place_warm_sharded", "quantize_rows",
+    "requantize", "stack_warm", "warm_append", "warm_append_sharded",
+    "warm_occupancy", "warm_publish_index", "warm_query", "warm_rebuild",
+    "warm_rebuild_sharded",
 ]

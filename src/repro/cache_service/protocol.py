@@ -62,6 +62,8 @@ class CacheCapabilities:
     admission: bool = False          # plan carries a real admit decision
     background_rebuild: bool = False  # maintenance() can double-buffer
     tiered: bool = False             # hot/warm cascade vs flat store
+    warm_sharded: bool = False       # warm tier spans a mesh axis (§8)
+    warm_dtype: str = "float32"      # warm scan precision (int8 = quantized)
 
 
 # ---------------------------------------------------------------------------

@@ -63,7 +63,9 @@ class CacheService:
                  flush_watermark: float = 0.85,
                  flush_size: Optional[int] = None, rebuild_every: int = 1,
                  kmeans_iters: int = 4, seed: int = 0,
-                 fused: bool = False, background_rebuild: bool = False):
+                 fused: bool = False, background_rebuild: bool = False,
+                 mesh=None, shard_axis: str = "model",
+                 warm_dtype: str = "float32"):
         """Build the tiered service.
 
         Tail invariant (see ``tiers.warm_query``): rows demoted into the
@@ -76,7 +78,11 @@ class CacheService:
         clamped to ``warm_capacity`` and ``_do_flush`` forces rebuilds
         earlier than ``rebuild_every`` would suggest (correct, but the
         configured cadence is unattainable); a warning is emitted at
-        construction instead of silently accepting the config.
+        construction instead of silently accepting the config.  In the
+        sharded tier every quantity in the invariant divides by the
+        shard count — each flush lands ``flush_size/shards`` rows per
+        shard ring, so the window, the clamp and the warning are all
+        per shard.
 
         ``fused=True`` routes the cascade through the fused Pallas
         lookup kernel (`kernels/cascade_lookup`) on TPU — subject to
@@ -92,22 +98,51 @@ class CacheService:
         backlog past the tail window first joins the in-flight build
         (or re-clusters inline if none is running), so no row is ever
         stranded out of reach.
+
+        ``mesh`` shards the warm tier over its ``shard_axis``
+        (DESIGN.md §8): the warm ring/IVF becomes
+        ``mesh.shape[shard_axis]`` independent per-shard rings
+        (capacity, clusters and the tail window split per shard; flush
+        batches round-robin across shards), looked up via shard_map
+        with a tiny (Q, k·shards) merge collective.  The hot tier
+        stays replicated.  ``warm_dtype="int8"`` scans the warm panel
+        from its symmetric per-row int8 quantization (~4x less
+        HBM/VMEM bandwidth) and re-scores the selected rows exactly —
+        reported scores stay true fp32 cosines; only candidate
+        *selection* sees the bounded quantization error.
         """
+        sharded = mesh is not None
+        shards = int(mesh.shape[shard_axis]) if sharded else 1
+        if warm_dtype not in ("float32", "int8"):
+            raise ValueError(f"warm_dtype must be float32|int8, "
+                             f"got {warm_dtype!r}")
         if flush_size is None:
             flush_size = max(hot_capacity // 4, 1)
         flush_size = min(flush_size, hot_capacity, warm_capacity)
+        if sharded:
+            if hot_capacity < shards:
+                raise ValueError(
+                    f"hot_capacity {hot_capacity} < {shards} shards: one "
+                    "demotion flush cannot feed every warm shard")
+            # flushes split round-robin over shards: keep them divisible
+            flush_size = max(shards, (flush_size // shards) * shards)
+            warm_capacity = -(-warm_capacity // shards) * shards
         rebuild_every = max(rebuild_every, 1)
+        cap_local = warm_capacity // shards
+        flush_local = flush_size // shards
+        n_clusters_local = max(n_clusters // shards, 1)
         # every row appended since the last rebuild lies in this window
-        if flush_size * rebuild_every > warm_capacity:
+        # (per shard: each flush lands flush_local rows on each shard)
+        if flush_local * rebuild_every > cap_local:
             warnings.warn(
                 f"tail window flush_size*rebuild_every ("
-                f"{flush_size}*{rebuild_every}="
-                f"{flush_size * rebuild_every}) exceeds warm_capacity "
-                f"{warm_capacity}; clamping to warm_capacity and forcing "
-                "IVF rebuilds before the unindexed backlog outgrows the "
-                "window (the configured rebuild cadence will not be "
-                "honored)", stacklevel=2)
-        tail = min(flush_size * rebuild_every, warm_capacity)
+                f"{flush_local}*{rebuild_every}="
+                f"{flush_local * rebuild_every} per shard) exceeds the "
+                f"per-shard warm capacity {cap_local}; clamping and "
+                "forcing IVF rebuilds before the unindexed backlog "
+                "outgrows the window (the configured rebuild cadence "
+                "will not be honored)", stacklevel=2)
+        tail = min(flush_local * rebuild_every, cap_local)
 
         self.dim = dim
         self.hot_capacity = hot_capacity
@@ -117,9 +152,21 @@ class CacheService:
         self.rebuild_every = rebuild_every
         self.topk = topk
         self.background_rebuild = bool(background_rebuild)
+        self.warm_shards = shards
+        self.warm_dtype = warm_dtype
+        self._mesh = mesh
+        self._shard_axis = shard_axis
+        self._flush_local = flush_local
 
         self.hot = tiers.init_hot(hot_capacity, dim)
-        self.warm = tiers.init_warm(warm_capacity, dim, n_clusters, bucket)
+        if sharded:
+            self.warm = tiers.place_warm_sharded(
+                tiers.init_warm_sharded(shards, cap_local, dim,
+                                        n_clusters_local, bucket),
+                mesh, shard_axis)
+        else:
+            self.warm = tiers.init_warm(warm_capacity, dim, n_clusters,
+                                        bucket)
         self.policies = PolicyTable(TenantPolicy(threshold, admission_margin))
         self.responses: Dict[int, str] = {}
         self._next_vid = 0
@@ -145,9 +192,14 @@ class CacheService:
         self._insert = jax.jit(tiers.hot_insert_batch)
         self._touch = jax.jit(tiers.hot_touch)
         self._demote = jax.jit(partial(tiers.demote_coldest, m=flush_size))
-        self._append = jax.jit(tiers.warm_append)
-        self._rebuild = jax.jit(partial(tiers.warm_rebuild, iters=kmeans_iters,
-                                        seed=seed))
+        if sharded:
+            self._append = jax.jit(tiers.warm_append_sharded)
+            self._rebuild = jax.jit(partial(tiers.warm_rebuild_sharded,
+                                            iters=kmeans_iters, seed=seed))
+        else:
+            self._append = jax.jit(tiers.warm_append)
+            self._rebuild = jax.jit(partial(tiers.warm_rebuild,
+                                            iters=kmeans_iters, seed=seed))
         self._evict_tenant = jax.jit(tiers.evict_tenant)
 
     def set_fused(self, fused: bool) -> None:
@@ -156,7 +208,9 @@ class CacheService:
         self.fused = bool(fused)
         self._lookup = jax.jit(partial(
             tiers.cascade_query, k=self.topk, n_probe=self._n_probe,
-            tail=self._tail, fused=self.fused))
+            tail=self._tail, fused=self.fused,
+            quantized=self.warm_dtype == "int8",
+            mesh=self._mesh, axis=self._shard_axis))
 
     # ------------------------------------------------------------------
     # tenant policy surface
@@ -179,7 +233,9 @@ class CacheService:
         return CacheCapabilities(tenants=True, fused_lookup=True,
                                  admission=True,
                                  background_rebuild=self.background_rebuild,
-                                 tiered=True)
+                                 tiered=True,
+                                 warm_sharded=self._mesh is not None,
+                                 warm_dtype=self.warm_dtype)
 
     def plan(self, request: CacheRequest, *,
              coalesce: bool = True) -> CachePlan:
@@ -283,6 +339,8 @@ class CacheService:
             "rebuild_in_flight": self._shadow_thread is not None,
             "last_rebuild_s": self._last_rebuild_s,
             "rebuild_total_s": self._rebuild_total_s,
+            "warm_shards": self.warm_shards,
+            "warm_dtype": self.warm_dtype,
         }
 
     # ------------------------------------------------------------------
@@ -336,14 +394,17 @@ class CacheService:
         return n
 
     def _backlog(self) -> int:
-        """Rows appended since the *published* index was built."""
-        return int(np.asarray(self.warm.total - self.warm.indexed_total))
+        """Rows appended since the *published* index was built (the
+        worst shard's backlog in the sharded tier — each shard has its
+        own ring, so the window must cover the deepest one)."""
+        return int(np.max(np.asarray(self.warm.total
+                                     - self.warm.indexed_total)))
 
     def _tail_pressure(self) -> bool:
         """One more flush would push the unindexed backlog past the
         tail window — the single rebuild-trigger predicate shared by
         inline flushes, background starts and maintenance()."""
-        return self._backlog() + self.flush_size > self._tail
+        return self._backlog() + self._flush_local > self._tail
 
     def _rebuild_due(self) -> bool:
         """A maintenance() call now would publish or start a rebuild."""

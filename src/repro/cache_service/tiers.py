@@ -25,9 +25,24 @@ only bumps hot-tier LRU clocks.  Scores are cosine in both tiers, so
 `cascade_query` selects between the four-op XLA composition and the
 fused Pallas kernel (`kernels/cascade_lookup`, DESIGN.md §3) — same
 results, one kernel launch.
+
+Scale-out (DESIGN.md §8): the warm tier also exists in a *sharded*
+form — a stacked ``WarmState`` whose every leaf carries a leading
+``shards`` axis, one independent ring + local IVF per shard, laid over
+the mesh ``model`` axis by ``cascade_query(..., mesh=...)`` via
+shard_map.  Each shard probes its own centroids and computes a local
+top-k (the fused kernel runs per shard on exactly the warm slice its
+VMEM budget assumes); the only collective is the tiny
+(Q, k·shards) candidate merge shared with `store.query_sharded`
+(`core.distrib`).  The hot tier stays replicated and is attributed to
+shard 0 so the merge never sees duplicate hot candidates.  The warm
+panel can additionally be scanned from an int8 symmetric per-row
+quantization (``keys_q``/``scales``, maintained on append) with the
+selected rows re-scored exactly from the fp32 keys at merge time.
 """
 from __future__ import annotations
 
+from functools import partial
 from typing import NamedTuple, Tuple
 
 import jax
@@ -49,6 +64,9 @@ class HotState(NamedTuple):
 
 
 class WarmState(NamedTuple):
+    """One warm ring + IVF.  In the sharded tier every leaf gains a
+    leading ``shards`` axis (one independent ring/index per shard);
+    `cascade_query` detects the stacked form by ``keys.ndim == 3``."""
     keys: jax.Array        # (Nw, D) float32 unit-norm
     valid: jax.Array       # (Nw,) bool
     tenants: jax.Array     # (Nw,) int32
@@ -60,6 +78,8 @@ class WarmState(NamedTuple):
     members: jax.Array     # (K, bucket) int32 row ids, -1 empty
     sizes: jax.Array       # (K,) int32
     indexed_total: jax.Array  # () int32: `total` at the last rebuild
+    keys_q: jax.Array      # (Nw, D) int8 symmetric per-row quantization
+    scales: jax.Array      # (Nw,) float32 per-row dequant scale
 
 
 class Demoted(NamedTuple):
@@ -196,6 +216,28 @@ def demote_coldest(state: HotState, m: int) -> Tuple[HotState, Demoted]:
 # warm tier
 # ---------------------------------------------------------------------------
 
+def quantize_rows(keys: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric int8 per-row quantization of a (…, D) key panel.
+
+    ``keys ≈ q8 * scale[..., None]`` with scale = amax/127; per-row
+    reconstruction error is <= scale/2 per component, so a cosine score
+    against a unit query is off by at most ``amax·sqrt(D)/254``
+    (DESIGN.md §8).  Returns (q8 int8, scale float32).
+    """
+    amax = jnp.max(jnp.abs(keys), axis=-1)
+    scale = jnp.maximum(amax, 1e-9) / 127.0
+    q8 = jnp.clip(jnp.round(keys / scale[..., None]),
+                  -127, 127).astype(jnp.int8)
+    return q8, scale.astype(jnp.float32)
+
+
+def requantize(state: WarmState) -> WarmState:
+    """Refresh ``keys_q``/``scales`` from ``keys`` — required after any
+    bulk load that writes ``keys`` directly instead of `warm_append`."""
+    q8, sc = quantize_rows(state.keys)
+    return state._replace(keys_q=q8, scales=sc)
+
+
 def init_warm(capacity: int, dim: int, n_clusters: int,
               bucket: int) -> WarmState:
     return WarmState(
@@ -210,7 +252,40 @@ def init_warm(capacity: int, dim: int, n_clusters: int,
         members=jnp.full((n_clusters, bucket), -1, jnp.int32),
         sizes=jnp.zeros((n_clusters,), jnp.int32),
         indexed_total=jnp.zeros((), jnp.int32),
+        keys_q=jnp.zeros((capacity, dim), jnp.int8),
+        scales=jnp.zeros((capacity,), jnp.float32),
     )
+
+
+def init_warm_sharded(shards: int, capacity: int, dim: int, n_clusters: int,
+                      bucket: int) -> WarmState:
+    """Stacked warm tier: ``shards`` independent rings of ``capacity``
+    rows and ``n_clusters`` local centroids each (leading axis laid
+    over the mesh ``model`` axis by `cascade_query`)."""
+    one = init_warm(capacity, dim, n_clusters, bucket)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (shards,) + x.shape), one)
+
+
+def stack_warm(states) -> WarmState:
+    """Stack per-shard WarmStates into the sharded (leading-axis) form."""
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *states)
+
+
+def place_warm_sharded(warm: WarmState, mesh, axis: str = "model"
+                       ) -> WarmState:
+    """Commit a stacked warm state to the mesh: leading shard axis over
+    ``axis``, everything else replicated.  Done once after init/bulk
+    load — every later device op (vmapped append/rebuild, eviction,
+    lookup) preserves the leading-axis sharding, so lookups read
+    resident shards instead of resharding the corpus per call."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(
+            x, NamedSharding(mesh, P(*((axis,) + (None,) * (x.ndim - 1))))),
+        warm)
 
 
 def warm_append(state: WarmState, dem: Demoted) -> Tuple[WarmState, jax.Array]:
@@ -218,7 +293,8 @@ def warm_append(state: WarmState, dem: Demoted) -> Tuple[WarmState, jax.Array]:
 
     Returns (state, evicted (m,) int32) — response ids of overwritten
     ring slots, -1 padding.  Appended rows are unindexed until the next
-    rebuild; `warm_query`'s tail window keeps them reachable.
+    rebuild; `warm_query`'s tail window keeps them reachable.  The int8
+    panel (``keys_q``/``scales``) is maintained in the same update.
     """
     cap = state.keys.shape[0]
     offs = jnp.cumsum(dem.mask.astype(jnp.int32)) - 1              # (m,)
@@ -229,16 +305,41 @@ def warm_append(state: WarmState, dem: Demoted) -> Tuple[WarmState, jax.Array]:
                         state.value_ids[safe], -1).astype(jnp.int32)
     n = dem.mask.sum().astype(jnp.int32)
     seqs = state.total + 1 + offs
+    kn = _unit(dem.keys.astype(jnp.float32))
+    k8, sc = quantize_rows(kn)
     return state._replace(
-        keys=state.keys.at[dest].set(_unit(dem.keys.astype(jnp.float32)),
-                                     mode="drop"),
+        keys=state.keys.at[dest].set(kn, mode="drop"),
         valid=state.valid.at[dest].set(True, mode="drop"),
         tenants=state.tenants.at[dest].set(dem.tenants, mode="drop"),
         value_ids=state.value_ids.at[dest].set(dem.value_ids, mode="drop"),
         write_seq=state.write_seq.at[dest].set(seqs, mode="drop"),
         cursor=(state.cursor + n) % cap,
         total=state.total + n,
+        keys_q=state.keys_q.at[dest].set(k8, mode="drop"),
+        scales=state.scales.at[dest].set(sc, mode="drop"),
     ), evicted
+
+
+def warm_append_sharded(state: WarmState, dem: Demoted
+                        ) -> Tuple[WarmState, jax.Array]:
+    """Round-robin a demoted batch over the shard rings (row j of the
+    batch lands on shard ``j % shards``, so every flush loads shards
+    evenly).  ``m`` must divide by the shard count — `CacheService`
+    snaps ``flush_size`` down to a shard multiple (min. one row per
+    shard) to guarantee it.  Returns (state, evicted (m,) int32)."""
+    shards = state.keys.shape[0]
+    m = dem.keys.shape[0]
+    if m % shards:
+        raise ValueError(f"demoted batch {m} not divisible by "
+                         f"{shards} shards")
+
+    def split(x):
+        return jnp.swapaxes(x.reshape((m // shards, shards) + x.shape[1:]),
+                            0, 1)
+
+    dem_s = Demoted(*(split(x) for x in dem))
+    new, evicted = jax.vmap(warm_append)(state, dem_s)
+    return new, evicted.reshape(-1)
 
 
 def warm_rebuild(state: WarmState, iters: int = 8,
@@ -259,6 +360,14 @@ def warm_rebuild(state: WarmState, iters: int = 8,
                           indexed_total=state.total)
 
 
+def warm_rebuild_sharded(state: WarmState, iters: int = 8,
+                         seed: int = 0) -> WarmState:
+    """Per-shard re-cluster of the stacked warm tier: each shard runs
+    its own spherical k-means over its local rows (vmapped, so one
+    compile covers every shard)."""
+    return jax.vmap(partial(warm_rebuild, iters=iters, seed=seed))(state)
+
+
 def warm_publish_index(current: WarmState, shadow: WarmState) -> WarmState:
     """Atomically swap a shadow-built IVF into the live warm state.
 
@@ -271,6 +380,12 @@ def warm_publish_index(current: WarmState, shadow: WarmState) -> WarmState:
     overwritten post-snapshot are excluded from the (stale) inverted
     lists by the same epoch partition — so the swap can never create a
     recall dip or a duplicate candidate.
+
+    Works unchanged on the stacked (sharded) form: the index leaves of
+    every shard move in one ``_replace``, so the publish is
+    shard-consistent — no lookup can ever observe shard A's new index
+    next to shard B's old one (the swap happens between, never inside,
+    jitted lookups).
     """
     return current._replace(centroids=shadow.centroids,
                             members=shadow.members, sizes=shadow.sizes,
@@ -356,11 +471,117 @@ def cascade_lookup(hot: HotState, warm: WarmState, q: jax.Array,
                          hot_hit=hot_hit, hit=hit)
 
 
+def _cascade_ops(hot: HotState, warm: WarmState, qn, qt, thr, k, n_probe,
+                 tail, use_kernel, quantized):
+    """Flat-array cascade through the kernel-package dispatch; returns
+    the 6-tuple (scores, vids, warm_slots, hot_slots, hot_hit, hit)."""
+    from repro.kernels.cascade_lookup import ops as _casc_ops
+    return _casc_ops.cascade_lookup(
+        qn, qt, thr, hot.keys, hot.valid, hot.tenants, hot.value_ids,
+        warm.keys, warm.valid, warm.tenants, warm.value_ids,
+        warm.write_seq, warm.centroids, warm.members,
+        warm.cursor, warm.indexed_total, warm.keys_q, warm.scales,
+        k=k, n_probe=n_probe, tail=tail, quantized=quantized,
+        use_kernel=use_kernel)
+
+
+def _rescore_exact(qn, keys, s, wslots):
+    """Replace quantized-selected warm scores with exact fp32 cosines.
+
+    Only the (Q, k) selected rows are gathered from the fp32 panel, so
+    the exact pass costs O(Q·k·D) — the bulk scan stays int8.
+    """
+    safe = jnp.clip(wslots, 0, keys.shape[0] - 1)
+    exact = jnp.einsum("qd,qkd->qk", qn, keys[safe])
+    return jnp.where(wslots >= 0, exact, s)
+
+
+def _shard_cascade(hot: HotState, warm: WarmState, qn, qt, thr, k, n_probe,
+                   tail, use_kernel, quantized, shard_index):
+    """One shard's candidates for the sharded cascade (DESIGN.md §8).
+
+    The hot tier is replicated but *attributed to shard 0* (its valid
+    mask is zeroed elsewhere), so the cross-shard merge never sees the
+    same hot row twice.  Returns (scores (Q, k), vids (Q, k),
+    is_hot (Q, k) int32, hot_slots (Q,)) — already exact-rescored when
+    quantized, so the merge compares true cosines.
+    """
+    hot = hot._replace(valid=hot.valid & (shard_index == 0))
+    s, vids, wslots, hslots, _, _ = _cascade_ops(
+        hot, warm, qn, qt, thr, k, n_probe, tail, use_kernel, quantized)
+    if quantized:
+        s = _rescore_exact(qn, warm.keys, s, wslots)
+    is_hot = ((wslots < 0) & (s > NEG / 2)).astype(jnp.int32)
+    return s, vids, is_hot, hslots
+
+
+def _cascade_sharded_oracle(hot: HotState, swarm: WarmState, qn, qt, thr,
+                            k, n_probe, tail, use_kernel,
+                            quantized) -> CascadeResult:
+    """Single-device emulation of the sharded schedule — the bit-exact
+    oracle the shard_map path is tested against.  Shard s's candidates
+    occupy columns [s·k, (s+1)·k) of the merge panel, exactly like the
+    tiled all-gather."""
+    from repro.core.distrib import merge_stacked_topk
+    shards = swarm.keys.shape[0]
+    per = [_shard_cascade(hot,
+                          jax.tree_util.tree_map(lambda x, i=i: x[i], swarm),
+                          qn, qt, thr, k, n_probe, tail, use_kernel,
+                          quantized, i)
+           for i in range(shards)]
+    s, vids, is_hot = merge_stacked_topk(
+        k, jnp.stack([p[0] for p in per]), jnp.stack([p[1] for p in per]),
+        jnp.stack([p[2] for p in per]))
+    hit = s[:, 0] >= thr
+    hot_hit = hit & (is_hot[:, 0] != 0)
+    return CascadeResult(scores=s, value_ids=vids, hot_slots=per[0][3],
+                         hot_hit=hot_hit, hit=hit)
+
+
+def _cascade_sharded(hot: HotState, swarm: WarmState, qn, qt, thr, k,
+                     n_probe, tail, use_kernel, quantized, mesh,
+                     axis) -> CascadeResult:
+    """shard_map execution of the sharded cascade: warm leaves split on
+    their leading shard axis over ``axis``, hot/queries replicated, one
+    (Q, k·shards) all-gather merge (`core.distrib.merge_local_topk`)."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distrib import merge_local_topk
+
+    def local(hot_, swarm_, qn_, qt_, thr_):
+        i = jax.lax.axis_index(axis)
+        warm_local = jax.tree_util.tree_map(lambda x: x[0], swarm_)
+        s, vids, is_hot, hslots = _shard_cascade(
+            hot_, warm_local, qn_, qt_, thr_, k, n_probe, tail,
+            use_kernel, quantized, i)
+        sm, vm, hm = merge_local_topk(axis, k, s, vids, is_hot)
+        hit = sm[:, 0] >= thr_
+        hot_hit = hit & (hm[:, 0] != 0)
+        # only shard 0 computed real hot slots; psum broadcasts them
+        hslot0 = jax.lax.psum(jnp.where(i == 0, hslots, 0), axis)
+        return sm, vm, hslot0, hot_hit, hit
+
+    rep = P()
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(jax.tree_util.tree_map(lambda _: rep, hot),
+                  jax.tree_util.tree_map(lambda _: P(axis), swarm),
+                  rep, rep, rep),
+        out_specs=(rep, rep, rep, rep, rep),
+        check_rep=False)
+    s, vids, hslots, hot_hit, hit = fn(hot, swarm, qn, qt, thr)
+    return CascadeResult(scores=s, value_ids=vids, hot_slots=hslots,
+                         hot_hit=hot_hit, hit=hit)
+
+
 def cascade_query(hot: HotState, warm: WarmState, q: jax.Array,
                   q_tenants: jax.Array, thresholds: jax.Array,
                   k: int = 1, n_probe: int = 8, tail: int = 0,
                   fused: bool = False,
-                  use_kernel: bool | None = None) -> CascadeResult:
+                  use_kernel: bool | None = None,
+                  quantized: bool = False,
+                  mesh=None, axis: str = "model") -> CascadeResult:
     """Cascade lookup with a selectable execution path.
 
     ``fused=False`` runs the original four-op XLA composition
@@ -372,19 +593,47 @@ def cascade_query(hot: HotState, warm: WarmState, q: jax.Array,
     ``CascadeResult``s, including tenant masking, invalid slots and the
     tail window; ``use_kernel`` forces the Pallas path (interpret mode
     off-TPU) for parity tests.
+
+    A stacked ``warm`` (leading shard axis, ``keys.ndim == 3``) selects
+    the sharded schedule (DESIGN.md §8): per-shard local probe + local
+    top-k (fused or four-op per shard), tiny (Q, k·shards) merge.  With
+    ``mesh`` the shards execute under shard_map over ``axis``; without
+    it the single-device oracle emulates the identical schedule (same
+    results bit-for-bit).  ``tail`` is then the *per-shard* tail
+    window.  ``quantized=True`` scans the warm panel from its int8
+    form and re-scores the selected rows exactly (scores in the result
+    are true fp32 cosines either way).
     """
-    if not fused:
+    sharded = warm.keys.ndim == 3
+    if mesh is not None and not sharded:
+        raise ValueError("cascade_query(mesh=...) needs the stacked "
+                         "(sharded) WarmState; see init_warm_sharded")
+    uk = use_kernel if fused else False
+    if sharded:
+        qn = _unit(q.astype(jnp.float32))
+        qt = q_tenants.astype(jnp.int32)
+        thr = jnp.asarray(thresholds, jnp.float32)
+        if mesh is None:
+            return _cascade_sharded_oracle(hot, warm, qn, qt, thr, k,
+                                           n_probe, tail, uk, quantized)
+        return _cascade_sharded(hot, warm, qn, qt, thr, k, n_probe, tail,
+                                uk, quantized, mesh, axis)
+    if not fused and not quantized:
         return cascade_lookup(hot, warm, q, q_tenants, thresholds, k=k,
                               n_probe=n_probe, tail=tail)
-    from repro.kernels.cascade_lookup import ops as _casc_ops
     qn = _unit(q.astype(jnp.float32))
-    s, vids, hslots, hot_hit, hit = _casc_ops.cascade_lookup(
-        qn, q_tenants.astype(jnp.int32), thresholds,
-        hot.keys, hot.valid, hot.tenants, hot.value_ids,
-        warm.keys, warm.valid, warm.tenants, warm.value_ids,
-        warm.write_seq, warm.centroids, warm.members,
-        warm.cursor, warm.indexed_total,
-        k=k, n_probe=n_probe, tail=tail, use_kernel=use_kernel)
+    s, vids, wslots, hslots, hot_hit, hit = _cascade_ops(
+        hot, warm, qn, q_tenants.astype(jnp.int32), thresholds, k,
+        n_probe, tail, uk, quantized)
+    if quantized:
+        # exact re-score may reorder the k selected candidates
+        s = _rescore_exact(qn, warm.keys, s, wslots)
+        s, idx = jax.lax.top_k(s, k)
+        rows = jnp.arange(s.shape[0])[:, None]
+        vids = vids[rows, idx]
+        wslots = wslots[rows, idx]
+        hit = s[:, 0] >= thresholds
+        hot_hit = hit & (wslots[:, 0] < 0)
     return CascadeResult(scores=s, value_ids=vids, hot_slots=hslots,
                          hot_hit=hot_hit, hit=hit)
 

@@ -1,0 +1,67 @@
+"""Shared distributed top-k schedule: local candidates, tiny merge.
+
+Every sharded lookup in this repo — the flat store
+(`store.query_sharded`) and the sharded warm tier of the tiered cache
+(`cache_service.tiers.cascade_query` with a mesh, DESIGN.md §8) — uses
+the same two-step schedule: each shard computes a LOCAL top-k over its
+corpus slice, then a tiny all-gather moves only the (Q, k) candidate
+panels and a final top-k merges them.  The collective is
+O(Q · k · shards) instead of GSPMD's O(Q · N) score-matrix gather.
+
+This module is that merge, written once:
+
+  * `merge_local_topk`   — the collective form, called inside
+    `shard_map` (or any context with a named mesh axis);
+  * `merge_stacked_topk` — the single-device oracle over shard-stacked
+    (S, Q, k) candidates, bit-exact with the collective form because
+    `all_gather(tiled=True, axis=1)` concatenates shard blocks in
+    shard-major order — exactly what the stacked reshape produces.
+
+Tie-breaking follows `lax.top_k` (lowest concatenated index wins), so
+ties resolve to the earliest shard, then to the earlier candidate
+within a shard — the property the sharded cascade relies on to keep
+hot-tier candidates (shard 0, position 0) winning ties.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def merge_local_topk(axis: str, k: int, scores: jax.Array,
+                     *payloads: jax.Array) -> Tuple[jax.Array, ...]:
+    """Merge per-shard (Q, k) candidates into the global top-k.
+
+    Must run under a named mesh axis (`shard_map`).  ``scores`` and
+    every payload are the shard's local candidates, column-aligned;
+    each is all-gathered along ``axis`` into shard-major (Q, k·S)
+    panels and the global top-k is selected once on the scores.
+
+    Returns ``(merged_scores, *merged_payloads)``, each (Q, k),
+    replicated across the axis (all_gather leaves identical copies).
+    """
+    s_all = jax.lax.all_gather(scores, axis, axis=1, tiled=True)
+    p_all = [jax.lax.all_gather(p, axis, axis=1, tiled=True)
+             for p in payloads]
+    sm, im = jax.lax.top_k(s_all, k)
+    rows = jnp.arange(s_all.shape[0])[:, None]
+    return (sm,) + tuple(p[rows, im] for p in p_all)
+
+
+def merge_stacked_topk(k: int, scores: jax.Array,
+                       *payloads: jax.Array) -> Tuple[jax.Array, ...]:
+    """Single-device oracle of `merge_local_topk`.
+
+    ``scores``/payloads are shard-stacked (S, Q, k); the concatenation
+    order (shard-major, candidate-minor) matches the tiled all-gather,
+    so both forms pick identical winners, ties included.
+    """
+    def flat(x):                                   # (S, Q, k) -> (Q, S*k)
+        return jnp.moveaxis(x, 0, 1).reshape(x.shape[1], -1)
+
+    s_all = flat(scores)
+    sm, im = jax.lax.top_k(s_all, k)
+    rows = jnp.arange(s_all.shape[0])[:, None]
+    return (sm,) + tuple(flat(p)[rows, im] for p in payloads)

@@ -116,10 +116,14 @@ def query_sharded(state: StoreState, q: jax.Array, threshold: float,
     LOCAL top-k per corpus shard and all-gathers only (Q, 2k) candidate
     scores+ids per device — the collective shrinks from O(Q·N) to
     O(Q·k·shards).  The corpus stays sharded over ``axis``; queries may
-    stay batch-sharded over the other mesh axes.
+    stay batch-sharded over the other mesh axes.  The local-topk +
+    tiny-merge step itself is `core.distrib.merge_local_topk`, shared
+    with the tiered cache's sharded warm lookup (DESIGN.md §8).
     """
     from jax.experimental.shard_map import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.core.distrib import merge_local_topk
 
     qn = q.astype(jnp.float32)
     qn = qn / jnp.maximum(jnp.linalg.norm(qn, axis=-1, keepdims=True), 1e-9)
@@ -138,12 +142,7 @@ def query_sharded(state: StoreState, q: jax.Array, threshold: float,
         vals = value_ids[i_loc]                                 # (Q, k)
         i_glob = i_loc + jax.lax.axis_index(axis) * shard_n
         # tiny merge: gather only (Q, k) candidates from every shard
-        s_all = jax.lax.all_gather(s, axis, axis=1, tiled=True)  # (Q, k*S)
-        i_all = jax.lax.all_gather(i_glob, axis, axis=1, tiled=True)
-        v_all = jax.lax.all_gather(vals, axis, axis=1, tiled=True)
-        sm, im = jax.lax.top_k(s_all, k)
-        rows = jnp.arange(s_all.shape[0])[:, None]
-        return sm, i_all[rows, im], v_all[rows, im]
+        return merge_local_topk(axis, k, s, i_glob, vals)
 
     fn = shard_map(
         local, mesh=mesh,

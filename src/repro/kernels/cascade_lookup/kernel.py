@@ -26,18 +26,27 @@ across panels, the accumulator (earlier candidates) is concatenated
 first.  That makes the kernel bit-compatible with the four-op path —
 `ref.py` — including tenant masking, invalid slots and the tail window.
 
+``quantized=True`` swaps the VMEM-resident warm panel for its int8
+symmetric per-row quantization (``warm_keys`` arrives as int8 plus a
+(cap,) fp32 scale vector): each (Q, bucket) panel is dequantized only
+transiently, scores accumulate in fp32, and both VMEM residency and
+the HBM→VMEM stream for the warm corpus shrink 4x (DESIGN.md §8).  The
+returned ``warm_slots`` let the caller re-score the few selected rows
+exactly from the fp32 panel at merge time.
+
 VMEM budget: the warm corpus, centroids and inverted lists are held as
 single VMEM-resident blocks.  At ~16 MB VMEM/core that caps the warm
-slice around a few tens of thousands of rows at D=64 (keys alone are
-cap·D·4 bytes, plus one (Q, bucket, D) panel), so production
-deployment assumes the sharded lookup splits the corpus across the
-`model` axis first (DESIGN.md §3) and each core fuses over its shard;
-larger single-core tiers need the warm keys streamed blockwise like
-the hot tier, which this kernel does not do yet.  Valid masks travel
-as int32 and the hit flags return as int32 (bool VMEM refs are a
-Mosaic lowering hazard); `interpret=True` runs the same dataflow as
-pure XLA ops for CPU tests — the only mode exercised in this repo's
-CPU CI, as with the other kernel packages.
+slice around a few tens of thousands of rows at D=64 fp32 (4x more
+quantized) — keys alone are cap·D·4 bytes (cap·D int8), plus one
+(Q, bucket, D) panel — so production deployment runs the kernel on the
+per-shard warm slice of the sharded tier (DESIGN.md §8), which is
+exactly the size this budget was designed for; larger single-core
+tiers need the warm keys streamed blockwise like the hot tier, which
+this kernel does not do yet.  Valid masks travel as int32 and the hit
+flags return as int32 (bool VMEM refs are a Mosaic lowering hazard);
+`interpret=True` runs the same dataflow as pure XLA ops for CPU tests
+— the only mode exercised in this repo's CPU CI, as with the other
+kernel packages.
 """
 from __future__ import annotations
 
@@ -75,10 +84,11 @@ def _merge(acc_s, acc_i, blk_s, blk_i, k):
 
 
 def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
-            wk_ref, wv_ref, wt_ref, wvid_ref, wseq_ref, cent_ref, mem_ref,
-            meta_ref, out_s_ref, out_v_ref, out_hslot_ref, out_flag_ref,
+            wk_ref, wscale_ref, wv_ref, wt_ref, wvid_ref, wseq_ref,
+            cent_ref, mem_ref, meta_ref, out_s_ref, out_v_ref,
+            out_wslot_ref, out_hslot_ref, out_flag_ref,
             acc_s, acc_i, *, k: int, block_n: int, n_hot: int,
-            n_probe: int, tail: int):
+            n_probe: int, tail: int, quantized: bool):
     j = pl.program_id(0)
     nb = pl.num_programs(0)
 
@@ -111,11 +121,24 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
         bucket = mem_ref.shape[1]
         cursor = meta_ref[0]
         indexed_total = meta_ref[1]
-        wk = wk_ref[...].astype(jnp.float32)           # (cap, D) VMEM
         wv = wv_ref[...] != 0
         wt = wt_ref[...]
         wseq = wseq_ref[...]
         rows = jnp.arange(Q)[:, None]
+        if quantized:
+            # int8 warm panel stays int8-resident: dequantize one
+            # (Q, B, D) gather at a time, fp32 accumulation
+            wk8 = wk_ref[...]                          # (cap, D) int8 VMEM
+            wscale = wscale_ref[...]                   # (cap,) fp32
+
+            def _panel_scores(safe):
+                pan = wk8[safe].astype(jnp.float32)
+                return jnp.einsum("qd,qbd->qb", q, pan) * wscale[safe]
+        else:
+            wk = wk_ref[...].astype(jnp.float32)       # (cap, D) VMEM
+
+            def _panel_scores(safe):
+                return jnp.einsum("qd,qbd->qb", q, wk[safe])
 
         # probe selection: centroid matmul + n_probe argmax rounds
         csims = jax.lax.dot_general(
@@ -132,8 +155,7 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
         for p in range(n_probe):
             cand = mem[probes[:, p]]                   # (Q, bucket)
             safe = jnp.clip(cand, 0, cap - 1)
-            panel = wk[safe]                           # (Q, bucket, D)
-            sc = jnp.einsum("qd,qbd->qb", q, panel)
+            sc = _panel_scores(safe)
             okp = (cand >= 0) & wv[safe] & (wt[safe] == qt[:, None]) \
                 & (wseq[safe] <= indexed_total)
             sc = jnp.where(okp, sc, NEG_INF)
@@ -148,7 +170,7 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
             tcand = jnp.broadcast_to(jnp.where(unindexed, pos, -1),
                                      (Q, tail))
             tsafe = jnp.clip(tcand, 0, cap - 1)
-            sc = jnp.einsum("qd,qtd->qt", q, wk[tsafe])
+            sc = _panel_scores(tsafe)
             okt = (tcand >= 0) & wv[tsafe] & (wt[tsafe] == qt[:, None])
             sc = jnp.where(okt, sc, NEG_INF)
             tb_s, tb_i = _select_topk(sc, tsafe, k)
@@ -158,12 +180,16 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
         hs, hi = acc_s[...], acc_i[...]
         hvids = jnp.where(hs > NEG_INF / 2, hvid_ref[...][hi], -1)
         wvids = jnp.where(ws_acc > NEG_INF / 2, wvid_ref[...][wi_acc], -1)
+        wslot_c = jnp.where(ws_acc > NEG_INF / 2, wi_acc, -1)
         cand_s = jnp.concatenate([hs, ws_acc], axis=-1)     # (Q, 2k)
         cand_v = jnp.concatenate([hvids, wvids], axis=-1)
+        cand_w = jnp.concatenate(
+            [jnp.full((Q, k), -1, jnp.int32), wslot_c], axis=-1)
         ppos = jax.lax.broadcasted_iota(jnp.int32, cand_s.shape, 1)
         out_s, out_p = _select_topk(cand_s, ppos, k)
         out_s_ref[...] = out_s
         out_v_ref[...] = cand_v[rows, out_p]
+        out_wslot_ref[...] = cand_w[rows, out_p]
         out_hslot_ref[...] = hi[:, :1]
         hit = out_s[:, 0] >= thr_ref[...]
         out_flag_ref[...] = jnp.stack(
@@ -171,17 +197,22 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_probe", "tail",
-                                             "block_n", "interpret"))
+                                             "block_n", "interpret",
+                                             "quantized"))
 def cascade_lookup(q, q_tenants, thresholds,
                    hot_keys, hot_valid, hot_tenants, hot_value_ids,
                    warm_keys, warm_valid, warm_tenants, warm_value_ids,
                    warm_write_seq, centroids, members, cursor, indexed_total,
+                   warm_keys_q=None, warm_scales=None,
                    k: int = 1, n_probe: int = 8, tail: int = 0, *,
+                   quantized: bool = False,
                    block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
     """Array-level fused cascade; signature/semantics of `ref.py`.
 
     q: (Q, D) unit-norm.  Returns (scores (Q, k), value_ids (Q, k),
-    hot_slots (Q,), hot_hit (Q,), hit (Q,)).
+    warm_slots (Q, k), hot_slots (Q,), hot_hit (Q,), hit (Q,)).
+    ``quantized=True`` streams ``warm_keys_q``/``warm_scales`` instead
+    of the fp32 warm panel.
     """
     q = q.astype(jnp.float32)
     q_tenants = q_tenants.astype(jnp.int32)
@@ -189,6 +220,16 @@ def cascade_lookup(q, q_tenants, thresholds,
     n_hot = hot_keys.shape[0]
     n_clusters = centroids.shape[0]
     n_probe = min(n_probe, n_clusters)
+    cap = warm_keys.shape[0]
+
+    if quantized:
+        wk_in = warm_keys_q
+        wscale_in = warm_scales.astype(jnp.float32)
+        wk_dtype = jnp.int8
+    else:
+        wk_in = warm_keys
+        wscale_in = jnp.zeros((cap,), jnp.float32)      # unread placeholder
+        wk_dtype = jnp.float32
 
     bn = min(block_n, n_hot)
     n_blocks = -(-n_hot // bn)
@@ -204,17 +245,17 @@ def cascade_lookup(q, q_tenants, thresholds,
     meta = jnp.stack([jnp.asarray(cursor, jnp.int32),
                       jnp.asarray(indexed_total, jnp.int32)])
 
-    cap = warm_keys.shape[0]
     bucket = members.shape[1]
     grid = (n_blocks,)
     whole = lambda shape: pl.BlockSpec(shape, lambda j: (0,) * len(shape))
     out_shape = (jax.ShapeDtypeStruct((Q, k), jnp.float32),
                  jax.ShapeDtypeStruct((Q, k), jnp.int32),
+                 jax.ShapeDtypeStruct((Q, k), jnp.int32),
                  jax.ShapeDtypeStruct((Q, 1), jnp.int32),
                  jax.ShapeDtypeStruct((Q, 2), jnp.int32))
     fn = pl.pallas_call(
         functools.partial(_kernel, k=k, block_n=bn, n_hot=n_hot,
-                          n_probe=n_probe, tail=tail),
+                          n_probe=n_probe, tail=tail, quantized=quantized),
         grid=grid,
         in_specs=[
             whole((Q, D)),                                # q
@@ -224,7 +265,8 @@ def cascade_lookup(q, q_tenants, thresholds,
             pl.BlockSpec((bn,), lambda j: (j,)),          # hot valid
             pl.BlockSpec((bn,), lambda j: (j,)),          # hot tenants
             whole((n_blocks * bn,)),                      # hot value ids
-            whole((cap, D)),                              # warm keys
+            whole((cap, D)),                              # warm keys (f32/i8)
+            whole((cap,)),                                # warm row scales
             whole((cap,)),                                # warm valid
             whole((cap,)),                                # warm tenants
             whole((cap,)),                                # warm value ids
@@ -233,8 +275,8 @@ def cascade_lookup(q, q_tenants, thresholds,
             whole((n_clusters, bucket)),                  # inverted lists
             whole((2,)),                                  # cursor/indexed
         ],
-        out_specs=(whole((Q, k)), whole((Q, k)), whole((Q, 1)),
-                   whole((Q, 2))),
+        out_specs=(whole((Q, k)), whole((Q, k)), whole((Q, k)),
+                   whole((Q, 1)), whole((Q, 2))),
         out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((Q, k), jnp.float32),
@@ -242,8 +284,10 @@ def cascade_lookup(q, q_tenants, thresholds,
         ],
         interpret=interpret,
     )
-    out_s, out_v, hslot, flags = fn(
+    out_s, out_v, out_w, hslot, flags = fn(
         q, q_tenants, thresholds.astype(jnp.float32), hot_keys, hot_valid,
-        hot_tenants, hot_value_ids, warm_keys, warm_valid, warm_tenants,
-        warm_value_ids, warm_write_seq, centroids, members, meta)
-    return out_s, out_v, hslot[:, 0], flags[:, 1] != 0, flags[:, 0] != 0
+        hot_tenants, hot_value_ids, wk_in.astype(wk_dtype), wscale_in,
+        warm_valid, warm_tenants, warm_value_ids, warm_write_seq, centroids,
+        members, meta)
+    return (out_s, out_v, out_w, hslot[:, 0], flags[:, 1] != 0,
+            flags[:, 0] != 0)

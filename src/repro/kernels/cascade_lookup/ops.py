@@ -4,6 +4,9 @@ Chooses the Pallas kernel on TPU (or interpret mode when asked) and the
 four-op jnp oracle otherwise — the oracle IS the original unfused
 cascade math, so the CPU fallback costs nothing over the four-op path.
 Both share the exact signature, so `tiers.cascade_query` is agnostic.
+The ``quantized`` flag selects the int8 warm-panel variant in both
+implementations (DESIGN.md §8); callers re-score the returned
+``warm_slots`` exactly from the fp32 panel at merge time.
 """
 from __future__ import annotations
 
@@ -24,11 +27,13 @@ def cascade_lookup(q, q_tenants, thresholds,
                    hot_keys, hot_valid, hot_tenants, hot_value_ids,
                    warm_keys, warm_valid, warm_tenants, warm_value_ids,
                    warm_write_seq, centroids, members, cursor, indexed_total,
+                   warm_keys_q=None, warm_scales=None,
                    k: int = 1, n_probe: int = 8, tail: int = 0, *,
+                   quantized: bool = False,
                    use_kernel: bool | None = None,
                    block_n: int = _kernel.DEFAULT_BLOCK_N):
-    """q: (Q, D) unit-norm -> (scores, value_ids, hot_slots, hot_hit,
-    hit); see `ref.cascade_lookup`.
+    """q: (Q, D) unit-norm -> (scores, value_ids, warm_slots, hot_slots,
+    hot_hit, hit); see `ref.cascade_lookup`.
 
     use_kernel: None -> kernel on TPU, oracle elsewhere (interpret-mode
     kernels are for correctness tests, not the CPU hot path).
@@ -40,10 +45,10 @@ def cascade_lookup(q, q_tenants, thresholds,
             q, q_tenants, thresholds, hot_keys, hot_valid, hot_tenants,
             hot_value_ids, warm_keys, warm_valid, warm_tenants,
             warm_value_ids, warm_write_seq, centroids, members, cursor,
-            indexed_total, k, n_probe, tail, block_n=block_n,
-            interpret=not _on_tpu())
+            indexed_total, warm_keys_q, warm_scales, k, n_probe, tail,
+            quantized=quantized, block_n=block_n, interpret=not _on_tpu())
     return _ref.cascade_lookup(
         q, q_tenants, thresholds, hot_keys, hot_valid, hot_tenants,
         hot_value_ids, warm_keys, warm_valid, warm_tenants, warm_value_ids,
         warm_write_seq, centroids, members, cursor, indexed_total,
-        k, n_probe, tail)
+        warm_keys_q, warm_scales, k, n_probe, tail, quantized=quantized)

@@ -11,6 +11,14 @@ masked-argmax rounds reproduce.
 Queries are expected unit-norm float32 (the caller normalizes once; the
 unfused tiers path normalizes per tier, but `_unit` is idempotent up to
 bit-identity on already-unit rows, so parity holds).
+
+``quantized=True`` scores the warm panel from its int8 symmetric
+per-row quantization (``warm_keys_q`` + ``warm_scales``) with fp32
+accumulation — the selection then runs on approximate scores whose
+per-candidate error is bounded by ``amax·sqrt(D)/254`` (DESIGN.md §8);
+the caller re-scores the selected rows exactly from the fp32 panel at
+merge time, which is why every return includes ``warm_slots`` (the warm
+row of each merged candidate, -1 for hot/invalid entries).
 """
 from __future__ import annotations
 
@@ -26,14 +34,16 @@ def cascade_lookup(q, q_tenants, thresholds,
                    hot_keys, hot_valid, hot_tenants, hot_value_ids,
                    warm_keys, warm_valid, warm_tenants, warm_value_ids,
                    warm_write_seq, centroids, members, cursor, indexed_total,
-                   k: int = 1, n_probe: int = 8, tail: int = 0
+                   warm_keys_q=None, warm_scales=None,
+                   k: int = 1, n_probe: int = 8, tail: int = 0,
+                   quantized: bool = False
                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
-                              jax.Array]:
+                              jax.Array, jax.Array]:
     """q: (Q, D) unit-norm; q_tenants/thresholds: (Q,).
 
-    Returns (scores (Q, k), value_ids (Q, k), hot_slots (Q,),
-    hot_hit (Q,), hit (Q,)) — the field order of
-    ``tiers.CascadeResult``.
+    Returns (scores (Q, k), value_ids (Q, k), warm_slots (Q, k),
+    hot_slots (Q,), hot_hit (Q,), hit (Q,)) — ``warm_slots`` is -1 for
+    candidates answered by the hot tier (or padding).
     """
     q = q.astype(jnp.float32)
     q_tenants = q_tenants.astype(jnp.int32)
@@ -67,17 +77,26 @@ def cascade_lookup(q, q_tenants, thresholds,
     ok = (cand >= 0) & warm_valid[safe] \
         & (warm_tenants[safe] == q_tenants[:, None]) \
         & (is_tail | (warm_write_seq[safe] <= indexed_total))
-    wscores = jnp.einsum("qd,qnd->qn", q, warm_keys[safe])
+    if quantized:
+        # int8 panel, fp32 accumulation: dequantize per candidate row
+        panel = warm_keys_q[safe].astype(jnp.float32)
+        wscores = jnp.einsum("qd,qnd->qn", q, panel) * warm_scales[safe]
+    else:
+        wscores = jnp.einsum("qd,qnd->qn", q, warm_keys[safe])
     wscores = jnp.where(ok, wscores, NEG)
     ws, wi = jax.lax.top_k(wscores, k)
     wslots = safe[rows, wi]
     wvids = jnp.where(ws > NEG / 2, warm_value_ids[wslots], -1)
+    wslots = jnp.where(ws > NEG / 2, wslots, -1)
 
     # best-of-tiers merge (hot side first, so ties resolve hot)
     all_s = jnp.concatenate([hs, ws], axis=1)                      # (Q, 2k)
     all_v = jnp.concatenate([hvids, wvids], axis=1)
+    all_w = jnp.concatenate([jnp.full((Q, k), -1, jnp.int32),
+                             wslots.astype(jnp.int32)], axis=1)
     s, i = jax.lax.top_k(all_s, k)
     vids = all_v[rows, i]
+    out_wslots = all_w[rows, i]
     hit = s[:, 0] >= thresholds
     hot_hit = hit & (i[:, 0] < k)
-    return s, vids, hslots[:, 0], hot_hit, hit
+    return s, vids, out_wslots, hslots[:, 0], hot_hit, hit

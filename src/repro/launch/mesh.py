@@ -37,3 +37,15 @@ def make_host_mesh(data: int = 1, model: int = 1):
     model = min(model, max(n // data, 1))
     return jax.make_mesh((data, model), ("data", "model"),
                          **_mesh_kwargs(2))
+
+
+def make_cache_mesh(model: int | None = None):
+    """Mesh for the sharded warm tier of the cache service
+    (DESIGN.md §8): every warm shard lives on one `model`-axis device,
+    queries stay replicated.  ``model=None`` spans all visible devices;
+    otherwise the axis is clamped to the device count (all via
+    `make_host_mesh` — one mesh builder, two names).  On CPU CI the
+    virtual fleet comes from
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N``."""
+    n = len(jax.devices())
+    return make_host_mesh(1, n if model is None else max(1, model))

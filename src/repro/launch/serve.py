@@ -3,6 +3,11 @@ optional semantic cache in front (the paper's deployment).
 
     PYTHONPATH=src python -m repro.launch.serve \
         --arch phi3-mini-3.8b --smoke --requests 32 --batch 8 --cache
+
+``--tiered`` swaps the flat SemanticCache for the tiered CacheService;
+``--cache-shards N`` then lays its warm tier over an N-device `model`
+mesh (local IVF probe per shard + tiny merge, DESIGN.md §8) and
+``--warm-dtype int8`` scans the warm panel from its quantized form.
 """
 from __future__ import annotations
 
@@ -28,7 +33,20 @@ def main():
     ap.add_argument("--max-new-tokens", type=int, default=8)
     ap.add_argument("--cache", action="store_true")
     ap.add_argument("--threshold", type=float, default=0.93)
+    ap.add_argument("--tiered", action="store_true",
+                    help="tiered CacheService instead of the flat "
+                         "SemanticCache")
+    ap.add_argument("--cache-shards", type=int, default=0,
+                    help="shard the warm tier over a model-axis mesh of "
+                         "N devices (0 = unsharded; implies --tiered)")
+    ap.add_argument("--warm-dtype", choices=("float32", "int8"),
+                    default="float32",
+                    help="warm-panel scan precision; int8 quantizes the "
+                         "warm keys (exact re-score at merge, DESIGN.md "
+                         "§8; implies --tiered)")
     args = ap.parse_args()
+    if args.cache_shards or args.warm_dtype != "float32":
+        args.tiered = True
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -54,8 +72,22 @@ def main():
     trainer = EmbedderTrainer(enc_cfg, FinetuneConfig(
         epochs=1, batch_size=32, lr=5e-4, max_len=24))
     trainer.fit(make_pair_dataset("medical", 512, seed=0), tok)
-    cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
-                          threshold=args.threshold)
+    if args.tiered:
+        from repro.cache_service import CacheService
+        from repro.launch.mesh import make_cache_mesh
+        mesh = make_cache_mesh(args.cache_shards) if args.cache_shards \
+            else None
+        cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
+                             warm_capacity=4096, n_clusters=32, bucket=256,
+                             threshold=args.threshold, mesh=mesh,
+                             warm_dtype=args.warm_dtype)
+        caps = cache.capabilities()
+        print(f"tiered cache: warm shards "
+              f"{cache.warm_shards if caps.warm_sharded else 0}, "
+              f"warm dtype {caps.warm_dtype}")
+    else:
+        cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
+                              threshold=args.threshold)
     svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
                            max_new_tokens=args.max_new_tokens)
     stream = [q.text for q in make_query_stream("medical", args.requests,

@@ -57,12 +57,17 @@ def _write_slot(pool_state, slot_state, slot: int):
 class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  max_len: int = 256, prompt_len: int = 32,
-                 maintenance: Optional[Callable[[], object]] = None):
+                 maintenance: Optional[Callable[[], object]] = None,
+                 maintenance_max_interval: int = 64):
         """``maintenance`` (e.g. a cache backend's bound
-        ``maintenance()``) is invoked once per engine tick, after
-        decode/retire — the queued-step way to drive background cache
-        work (double-buffered IVF publish) between batches without a
-        dedicated thread in the serving loop."""
+        ``maintenance()``) is invoked on *idle* engine ticks — ticks
+        where the pending queue is empty (every waiting request has a
+        slot) or the slot pool has spare capacity after admission — so
+        background cache work (the double-buffered IVF publish) rides
+        the real inter-batch gaps instead of stealing host time from
+        every saturated decode step.  Starvation is bounded: under
+        sustained full load the hook still runs at least every
+        ``maintenance_max_interval`` ticks."""
         if cfg.is_encoder:
             raise ValueError("decoder configs only")
         self.cfg = cfg
@@ -71,6 +76,10 @@ class ContinuousBatcher:
         self.max_len = max_len
         self.prompt_len = prompt_len
         self.maintenance = maintenance
+        self.maintenance_max_interval = max(maintenance_max_interval, 1)
+        self.maintenance_runs = 0
+        self.maintenance_skips = 0
+        self._ticks_since_maintenance = 0
         self.pool = init_lm_state(cfg, n_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.pending: List[Request] = []
@@ -112,6 +121,14 @@ class ContinuousBatcher:
                 self.finished[req.uid] = req
                 self.slot_req[slot] = None
 
+    def idle(self) -> bool:
+        """The idle-tick signal driving the maintenance hook: true when
+        no request is waiting for a slot (queue drained) or the slot
+        pool has spare capacity — i.e. this tick has host headroom that
+        a decode-bound tick does not."""
+        free = sum(r is None for r in self.slot_req)
+        return not self.pending or free > 0
+
     def tick(self) -> int:
         """One engine iteration: admit, decode all active slots, retire.
         Returns the number of active slots this tick."""
@@ -127,7 +144,15 @@ class ContinuousBatcher:
                 self.slot_req[slot].generated.append(tok)
         self._retire()
         if self.maintenance is not None:
-            self.maintenance()
+            self._ticks_since_maintenance += 1
+            overdue = (self._ticks_since_maintenance
+                       >= self.maintenance_max_interval)
+            if self.idle() or overdue:
+                self.maintenance()
+                self.maintenance_runs += 1
+                self._ticks_since_maintenance = 0
+            else:
+                self.maintenance_skips += 1
         self.ticks += 1
         return len(active)
 

@@ -79,8 +79,8 @@ def test_fused_kernel_matches_oracle(k, n_probe, tail, block_n):
     ref = cl_ref.cascade_lookup(*args, k=k, n_probe=n_probe, tail=tail)
     ker = cl_kernel.cascade_lookup(*args, k=k, n_probe=n_probe, tail=tail,
                                    block_n=block_n, interpret=True)
-    for name, a, b in zip(("scores", "value_ids", "hot_slots", "hot_hit",
-                           "hit"), ref, ker):
+    for name, a, b in zip(("scores", "value_ids", "warm_slots", "hot_slots",
+                           "hot_hit", "hit"), ref, ker):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
                                       err_msg=name)
 
@@ -104,7 +104,7 @@ def test_fused_kernel_all_invalid_never_hits():
     warm = tiers.init_warm(64, 16, 4, 8)
     q, qt, _ = _queries(4, 16)
     thr = jnp.full((4,), 0.0, jnp.float32)
-    s, vids, _, hot_hit, hit = cl_kernel.cascade_lookup(
+    s, vids, _, _, hot_hit, hit = cl_kernel.cascade_lookup(
         q, qt, thr, *_flatten(hot, warm), k=1, n_probe=2, tail=4,
         block_n=32, interpret=True)
     assert float(jnp.max(s)) < -1e20

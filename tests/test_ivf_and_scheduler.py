@@ -131,9 +131,10 @@ def test_continuous_batching_completes_all(batcher_setup):
         assert all(0 <= t < cfg.vocab_size for t in r.generated)
 
 
-def test_batcher_drives_maintenance_every_tick(batcher_setup):
-    """The queued-step maintenance hook: a cache backend's bound
-    maintenance() handed to the batcher runs once per engine tick."""
+def test_batcher_drives_maintenance_on_idle_ticks(batcher_setup):
+    """The maintenance hook rides the real idle signal: it runs on
+    ticks with host headroom (queue drained / free slots), not
+    unconditionally on every saturated decode tick."""
     cfg, pv = batcher_setup
     calls = []
     b = ContinuousBatcher(cfg, pv, n_slots=2, max_len=64, prompt_len=8,
@@ -143,7 +144,48 @@ def test_batcher_drives_maintenance_every_tick(batcher_setup):
                          np.int32),
                      max_new_tokens=3))
     b.run(max_ticks=50)
+    # one request on two slots: every tick is idle, so the hook runs
+    # each tick — the PR-3 behaviour is preserved exactly when idle
     assert b.ticks > 0 and len(calls) == b.ticks
+    assert b.maintenance_runs == len(calls) and b.maintenance_skips == 0
+
+
+def test_batcher_defers_maintenance_under_backlog(batcher_setup):
+    """With more pending requests than slots, decode ticks are not
+    idle: maintenance is deferred (skips counted), resumes once the
+    queue drains, and the starvation bound forces a run regardless."""
+    cfg, pv = batcher_setup
+    calls = []
+    b = ContinuousBatcher(cfg, pv, n_slots=1, max_len=64, prompt_len=8,
+                          maintenance=lambda: calls.append(b.ticks),
+                          maintenance_max_interval=64)
+    for i in range(3):
+        b.submit(Request(uid=i,
+                         prompt=rng.integers(4, cfg.vocab_size, 6).astype(
+                             np.int32),
+                         max_new_tokens=4))
+    b.run(max_ticks=60)
+    # the single-slot pool stays saturated while requests queue: those
+    # ticks must skip, and the drained tail must still run the hook
+    assert b.maintenance_skips > 0
+    assert b.maintenance_runs > 0
+    assert b.maintenance_runs + b.maintenance_skips == b.ticks
+
+    # starvation bound: a permanently-backlogged batcher still runs the
+    # hook every maintenance_max_interval ticks
+    calls2 = []
+    b2 = ContinuousBatcher(cfg, pv, n_slots=1, max_len=64, prompt_len=8,
+                           maintenance=lambda: calls2.append(1),
+                           maintenance_max_interval=5)
+    for i in range(8):
+        b2.submit(Request(uid=i,
+                          prompt=rng.integers(4, cfg.vocab_size, 6).astype(
+                              np.int32),
+                          max_new_tokens=30))
+    for _ in range(20):
+        b2.tick()
+    assert len(b2.pending) > 0          # still backlogged (never idle)
+    assert len(calls2) == 20 // 5
 
 
 def test_continuous_batching_matches_sequential(batcher_setup):
