@@ -42,7 +42,15 @@ sweep.
 Every row also lands in a machine-readable ``BENCH_cascade.json``
 (default ``results/BENCH_cascade.json``, override with
 ``BENCH_CASCADE_JSON``; set it empty to skip writing) so future PRs
-have a perf trajectory to diff against.
+have a perf trajectory to diff against — CI enforces the diff via
+``scripts/check_bench_trajectory.py`` (recall must not regress vs the
+committed baseline, p50 ratios bounded on a matching fleet).
+
+The ``admission_fixed`` / ``admission_learned`` rows run a drifting
+paraphrase stream through two otherwise-identical CacheServices — one
+frozen at the static operating point, one with the online feedback
+loop (DESIGN.md §9) — and hard-assert the loop's claim: duplicate
+admissions drop, probe recall holds, the false-hit budget holds.
 
 Rebuild-stall rows (``serve_inline_rebuild`` / ``serve_bg_rebuild``)
 time a serving loop — plan over the live CacheService each tick — in
@@ -70,7 +78,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import fmt_derived, timed
-from repro.cache_service import CacheRequest, CacheService, tiers
+from repro.cache_service import (
+    CacheRequest, CacheService, FeedbackConfig, tiers,
+)
 from repro.core import store as store_lib
 from repro.launch.mesh import make_host_mesh
 
@@ -443,6 +453,102 @@ def _bench_rebuild_stall(n_total, n_clusters, bucket, iters):
               file=sys.stderr)
 
 
+def _drift_stream(rng, intents, n_batches=24, batch=32):
+    """A paraphrase stream whose duplicate pressure drifts mid-run: the
+    first third is mostly novel traffic with tight paraphrases, the
+    rest is duplicate-heavy with noisier paraphrases that land *below*
+    the static threshold — the regime where a frozen admission rule
+    fills the store with near-duplicates."""
+    for b in range(n_batches):
+        drift = b >= n_batches // 3
+        noise = 0.06 if drift else 0.02
+        ids = rng.integers(0, len(intents), batch)
+        embs = _unit(intents[ids] + noise * rng.standard_normal(
+            (batch, DIM)).astype(np.float32))
+        yield embs, ids
+
+
+def _bench_admission_drift():
+    """Learned vs fixed admission on the drifting stream (DESIGN.md §9).
+
+    Both services start from the same static operating point
+    (threshold 0.95, margin 0.02); the learned one labels every commit
+    against its stored neighbour and lets ``maintenance()`` refit the
+    tenant's threshold/margin from the observed duplicate rate.  The
+    claim the rows carry: duplicate admissions drop, end recall on
+    fresh paraphrases holds, and novel probes stay below the false-hit
+    budget — asserted hard, not just reported.
+    """
+    rng = np.random.default_rng(SEED + 2)
+    n_intents = 64
+    intents = _unit(rng.standard_normal((n_intents, DIM)
+                                        ).astype(np.float32))
+    stream = list(_drift_stream(rng, intents))
+    n_queries = sum(len(ids) for _, ids in stream)
+    # probes: fresh tight paraphrases (recall) + novel queries (budget)
+    probe_pos = _unit(intents + 0.03 * rng.standard_normal(
+        intents.shape).astype(np.float32))
+    probe_neg = _unit(rng.standard_normal((64, DIM)).astype(np.float32))
+
+    results = {}
+    for mode in ("fixed", "learned"):
+        learned = mode == "learned"
+        svc = CacheService(
+            dim=DIM, hot_capacity=256, warm_capacity=1024, n_clusters=16,
+            bucket=128, n_probe=4, threshold=0.95, admission_margin=0.02,
+            flush_size=64, kmeans_iters=2, seed=SEED,
+            learned_admission=learned,
+            feedback_config=FeedbackConfig(
+                min_samples=48, refit_interval=32, max_step=0.03,
+                seed=SEED) if learned else None)
+        seen, dup_admits, admits, hits, lat = set(), 0, 0, 0, []
+        for embs, ids in stream:
+            t0 = time.perf_counter()
+            plan = svc.plan(CacheRequest.build(embs))
+            svc.commit(plan, [f"ans{i}" for i in ids])
+            svc.maintenance()
+            lat.append(time.perf_counter() - t0)
+            hits += int(plan.hit.sum())
+            for row in plan.miss_rows():
+                if not plan.admit[row]:
+                    continue
+                admits += 1
+                if int(ids[row]) in seen:
+                    dup_admits += 1   # a same-intent entry already lives
+                seen.add(int(ids[row]))
+        pos_plan = svc.plan(CacheRequest.build(probe_pos), coalesce=False)
+        neg_plan = svc.plan(CacheRequest.build(probe_neg), coalesce=False)
+        st = svc.stats()
+        pol = svc.policies.get(0)
+        results[mode] = {
+            "queries": n_queries, "hits": hits, "admitted": admits,
+            "dup_admissions": dup_admits,
+            "dup_admit_rate": dup_admits / max(admits, 1),
+            "recall_probe": float(pos_plan.hit.mean()),
+            "false_hits_probe": int(neg_plan.hit.sum()),
+            "threshold_final": round(float(pol.threshold), 4),
+            "margin_final": round(float(pol.admission_margin), 4),
+            "refits": int(st.get("refits_applied", 0)),
+            "p50_us": float(np.percentile(np.asarray(lat) * 1e6, 50)),
+        }
+        yield f"tiered/admission_{mode}", results[mode]["p50_us"], \
+            results[mode]
+
+    fixed, learned = results["fixed"], results["learned"]
+    # the learned rows exist to back these three claims
+    assert learned["dup_admissions"] < fixed["dup_admissions"], \
+        f"learned admission did not reduce duplicate admissions " \
+        f"({learned['dup_admissions']} vs {fixed['dup_admissions']})"
+    assert learned["recall_probe"] >= fixed["recall_probe"] - 0.02, \
+        f"learned admission regressed probe recall " \
+        f"({learned['recall_probe']} vs {fixed['recall_probe']})"
+    assert learned["false_hits_probe"] <= max(
+        1, int(0.02 * len(probe_neg))), \
+        f"learned threshold leaks false hits " \
+        f"({learned['false_hits_probe']}/{len(probe_neg)} novel probes)"
+    assert learned["refits"] >= 1, "no refit was ever applied"
+
+
 def _json_path():
     env = os.environ.get("BENCH_CASCADE_JSON")
     if env is not None:
@@ -459,6 +565,10 @@ def bench_tiered_cache():
         for name, us, derived in _bench_one_size(n_total):
             rows.append({"name": name, "us_per_call": us, **derived})
             yield name, us, fmt_derived(derived)
+    # size-independent: learned-vs-fixed admission on a drifting stream
+    for name, us, derived in _bench_admission_drift():
+        rows.append({"name": name, "us_per_call": us, **derived})
+        yield name, us, fmt_derived(derived)
     path = _json_path()
     if path is not None:
         path.parent.mkdir(parents=True, exist_ok=True)

@@ -15,7 +15,9 @@ By default the serving path runs the tiered multi-tenant CacheService
 pass --flat for the paper's bare SemanticCache, --tenants N to
 round-robin batches over N isolated logical caches,
 --background-rebuild to double-buffer the warm IVF re-cluster off the
-hot path (DESIGN.md §7).  Requests flow through the typed plan/commit
+hot path (DESIGN.md §7), --learned-admission to refit per-tenant
+thresholds/margins online from observed duplicate rates (DESIGN.md
+§9).  Requests flow through the typed plan/commit
 lifecycle (near-identical misses in a batch share one generation) and
 the summary prints the protocol's unified stats() snapshot.
 """
@@ -55,10 +57,16 @@ def main():
                     help="double-buffer the warm IVF rebuild: k-means "
                          "runs on a shadow index off the hot path and "
                          "maintenance() publishes it between batches")
+    ap.add_argument("--learned-admission", action="store_true",
+                    help="learn per-tenant thresholds and admission "
+                         "margins online from observed duplicate rates "
+                         "(maintenance() refits them under hysteresis "
+                         "guards, DESIGN.md §9)")
     args = ap.parse_args()
-    if args.flat and (args.fused or args.background_rebuild):
-        ap.error("--fused/--background-rebuild require the tiered "
-                 "CacheService (drop --flat)")
+    if args.flat and (args.fused or args.background_rebuild
+                      or args.learned_admission):
+        ap.error("--fused/--background-rebuild/--learned-admission "
+                 "require the tiered CacheService (drop --flat)")
 
     # --- LLM backend (reduced variant of the assigned arch) -----------
     dec_cfg = get_config(args.arch).reduced()
@@ -84,7 +92,8 @@ def main():
                              n_probe=4, threshold=args.threshold,
                              admission_margin=0.02, flush_size=128,
                              fused=args.fused,
-                             background_rebuild=args.background_rebuild)
+                             background_rebuild=args.background_rebuild,
+                             learned_admission=args.learned_admission)
         print(f"cascade path: {'fused kernel' if cache.fused else 'four-op'}"
               f" (backend {jax.default_backend()})")
     svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
@@ -134,6 +143,15 @@ def main():
         print(f"admission skips: {st['admission_skips']}  "
               f"responses GC'd: {st['evictions']}  live: "
               f"{st['live_responses']}")
+        if args.learned_admission:
+            print(f"learned admission: {st['refits_applied']} refits "
+                  f"from {st['feedback_events']} events "
+                  f"({st['duplicate_events']} duplicates, "
+                  f"{st['wasted_admissions']} wasted admissions)")
+            for t, pol in st["learned_policies"].items():
+                print(f"  tenant {t}: threshold "
+                      f"{pol['threshold']:.3f}  margin "
+                      f"{pol['admission_margin']:.3f}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,10 @@
-"""Builds the EXPERIMENTS.md §Roofline table from results/roofline_*.json
-and the §Dry-run summary from results/scan_*.json."""
+"""Builds the EXPERIMENTS.md §Roofline table from results/roofline_*.json,
+the §Dry-run summary from results/scan_*.json, and the tiered-cascade
+table (lookup paths + the learned-vs-fixed admission comparison) from
+results/BENCH_cascade.json alone:
+
+    python results/make_tables.py cascade
+"""
 import glob
 import json
 import sys
@@ -59,9 +64,59 @@ def dryrun_table(rows):
               f"| {ops} |")
 
 
+def cascade_table(path="results/BENCH_cascade.json"):
+    """Everything renders from the bench's own JSON: lookup-path rows
+    (latency/recall), maintenance rows, and the learned-vs-fixed
+    admission comparison the feedback loop (DESIGN.md §9) is judged
+    by."""
+    with open(path) as f:
+        data = json.load(f)
+    rows = {r["name"]: r for r in data["rows"]}
+    print(f"Tiered cascade — backend {data['backend']} "
+          f"x{data['devices']} device(s), sizes {data['sizes']}, "
+          f"Q={data['q']}, threshold {data['threshold']}")
+    print()
+    print("| row | us/query | p50 ms | recall@thr | speedup vs flat |")
+    print("|---|---|---|---|---|")
+    for name, r in rows.items():
+        if "recall_at_thr" not in r:
+            continue
+        p50 = f"{r['p50_us']/1e3:.1f}" if "p50_us" in r else "-"
+        spd = f"{r['speedup_vs_flat']:.2f}x" if "speedup_vs_flat" in r \
+            else "-"
+        print(f"| {name} | {r['us_per_query']:.1f} | {p50} "
+              f"| {r['recall_at_thr']:.3f} | {spd} |")
+    fixed = rows.get("tiered/admission_fixed")
+    learned = rows.get("tiered/admission_learned")
+    if fixed and learned:
+        print()
+        print("Admission on the drifting stream (fixed rule vs online "
+              "learned, same queries):")
+        print()
+        print("| admission | dup admissions | admitted | hits | "
+              "probe recall | false hits | final thr | final margin | "
+              "refits |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for tag, r in (("fixed", fixed), ("learned", learned)):
+            print(f"| {tag} | {r['dup_admissions']} | {r['admitted']} "
+                  f"| {r['hits']} | {r['recall_probe']:.3f} "
+                  f"| {r['false_hits_probe']} | {r['threshold_final']} "
+                  f"| {r['margin_final']} | {r['refits']} |")
+        drop = 1 - learned["dup_admissions"] / max(fixed["dup_admissions"],
+                                                   1)
+        print()
+        print(f"Learned admission cuts duplicate admissions by "
+              f"{drop:.0%} with probe recall "
+              f"{learned['recall_probe']:.3f} (fixed: "
+              f"{fixed['recall_probe']:.3f}).")
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "roofline"
     if which == "roofline":
         roofline_table(load("roofline"))
+    elif which == "cascade":
+        cascade_table(sys.argv[2] if len(sys.argv) > 2
+                      else "results/BENCH_cascade.json")
     else:
         dryrun_table(load("scan"))

@@ -1,0 +1,167 @@
+"""CI perf-trajectory gate over ``BENCH_cascade.json``.
+
+``bench_tiered_cache`` writes every row of each run to a
+machine-readable JSON; the copy committed under ``results/`` is the
+perf trajectory baseline.  This gate compares a fresh ``--smoke`` run
+against it so a PR cannot silently regress what the bench measures:
+
+  * every baseline row must still exist in the fresh run (a vanished
+    row means a bench path was dropped, which must be an explicit
+    baseline update, never an accident);
+  * recall fields (``recall_at_thr``, ``recall_probe``) must not fall
+    more than ``--recall-eps`` below the baseline;
+  * ``p50_us`` may not exceed ``baseline * --p50-tolerance`` — latency
+    ratios, not absolutes, and only when the fresh run's backend AND
+    device count match the baseline's.  The fleet tuple is coarse (a
+    dev laptop and a hosted CI runner both say ``cpu x1``), so the
+    default tolerance is deliberately wide: it exists to catch
+    order-of-magnitude cliffs (an accidental recompile per batch, an
+    O(N) scan on the hot path), not machine-to-machine jitter.
+    Tighten ``--p50-tolerance`` only where baseline and CI hardware
+    genuinely match; a mismatched fleet skips the latency check and
+    says so;
+  * a baseline row whose size tier is absent from the fresh sweep is
+    skipped with a note (a full-sweep baseline must not fail every
+    ``--smoke`` run on rows the smoke tier cannot produce);
+  * the learned-admission claim is re-checked on the artifacts: the
+    ``admission_learned`` row must keep ``dup_admissions`` strictly
+    below ``admission_fixed``'s and its false-hit probes at zero-ish
+    (<= the fixed row's).
+
+Exit 0 when clean; exit 1 with one line per violation.
+
+    python scripts/check_bench_trajectory.py \
+        --baseline results/BENCH_cascade.json \
+        --fresh /tmp/BENCH_cascade_fresh.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from typing import Dict, List, Tuple
+
+RECALL_FIELDS = ("recall_at_thr", "recall_probe")
+
+
+def load(path: str) -> Dict[str, object]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def _rows(data: Dict[str, object]) -> Dict[str, Dict[str, object]]:
+    return {r["name"]: r for r in data.get("rows", [])}
+
+
+_SIZE_RE = re.compile(r"^tiered/(\d+)k/")
+
+
+def _comparable(name: str, fresh_sizes) -> bool:
+    """A baseline row is only owed by the fresh run when the fresh
+    sweep covers its size tier: a full-sweep baseline (16k/64k/256k
+    rows) must not make every --smoke run (4k only) fail on rows the
+    smoke tier can never produce.  Size-independent rows (admission,
+    …) are always owed."""
+    m = _SIZE_RE.match(name)
+    if m is None:
+        return True
+    return int(m.group(1)) * 1024 in set(fresh_sizes or [])
+
+
+def compare(baseline: Dict[str, object], fresh: Dict[str, object],
+            recall_eps: float = 0.005,
+            p50_tolerance: float = 5.0) -> Tuple[List[str], List[str]]:
+    """Returns (violations, notes).  Violations fail the gate; notes
+    explain what was skipped or newly added."""
+    violations: List[str] = []
+    notes: List[str] = []
+    base_rows = _rows(baseline)
+    fresh_rows = _rows(fresh)
+
+    same_fleet = (baseline.get("backend") == fresh.get("backend")
+                  and baseline.get("devices") == fresh.get("devices"))
+    if not same_fleet:
+        notes.append(
+            f"fleet mismatch (baseline {baseline.get('backend')}"
+            f"x{baseline.get('devices')} vs fresh {fresh.get('backend')}"
+            f"x{fresh.get('devices')}): p50 ratios not compared")
+
+    fresh_sizes = fresh.get("sizes", [])
+    for name, base in base_rows.items():
+        if not _comparable(name, fresh_sizes):
+            notes.append(f"{name}: size tier not in the fresh sweep "
+                         f"{fresh_sizes}; skipped")
+            continue
+        row = fresh_rows.get(name)
+        if row is None:
+            violations.append(
+                f"{name}: row present in baseline but missing from the "
+                "fresh run (bench path dropped?)")
+            continue
+        for field in RECALL_FIELDS:
+            if field in base:
+                if field not in row:
+                    violations.append(f"{name}: {field} vanished from "
+                                      "the fresh run")
+                elif row[field] < base[field] - recall_eps:
+                    violations.append(
+                        f"{name}: {field} regressed "
+                        f"{base[field]:.4f} -> {row[field]:.4f} "
+                        f"(eps {recall_eps})")
+        if same_fleet and "p50_us" in base and "p50_us" in row:
+            if row["p50_us"] > base["p50_us"] * p50_tolerance:
+                violations.append(
+                    f"{name}: p50 {row['p50_us']:.0f}us exceeds "
+                    f"{p50_tolerance:.1f}x the baseline "
+                    f"{base['p50_us']:.0f}us")
+
+    for name in sorted(set(fresh_rows) - set(base_rows)):
+        notes.append(f"{name}: new row (not in baseline)")
+
+    fixed = fresh_rows.get("tiered/admission_fixed")
+    learned = fresh_rows.get("tiered/admission_learned")
+    if fixed is not None and learned is not None:
+        if learned["dup_admissions"] >= fixed["dup_admissions"]:
+            violations.append(
+                "admission: learned dup_admissions "
+                f"{learned['dup_admissions']} not below fixed "
+                f"{fixed['dup_admissions']}")
+        if learned["false_hits_probe"] > fixed["false_hits_probe"]:
+            violations.append(
+                "admission: learned false_hits_probe "
+                f"{learned['false_hits_probe']} exceeds fixed "
+                f"{fixed['false_hits_probe']}")
+    return violations, notes
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default="results/BENCH_cascade.json",
+                    help="committed perf-trajectory baseline")
+    ap.add_argument("--fresh", required=True,
+                    help="JSON written by the fresh bench run")
+    ap.add_argument("--recall-eps", type=float, default=0.005,
+                    help="tolerated absolute recall drop per row")
+    ap.add_argument("--p50-tolerance", type=float, default=5.0,
+                    help="max fresh/baseline p50 ratio (same fleet only)")
+    args = ap.parse_args(argv)
+
+    violations, notes = compare(load(args.baseline), load(args.fresh),
+                                recall_eps=args.recall_eps,
+                                p50_tolerance=args.p50_tolerance)
+    for n in notes:
+        print(f"note: {n}")
+    if violations:
+        for v in violations:
+            print(f"VIOLATION: {v}", file=sys.stderr)
+        print(f"perf trajectory gate: {len(violations)} violation(s)",
+              file=sys.stderr)
+        return 1
+    print("perf trajectory gate: clean "
+          f"({len(_rows(load(args.fresh)))} rows vs baseline)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

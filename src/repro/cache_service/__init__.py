@@ -7,6 +7,9 @@ store primitives (repro.core) and the LLM engine (repro.serving).  The
 serving pipeline drives any backend through the typed ``CacheBackend``
 protocol (plan/commit lifecycle, DESIGN.md §7).
 """
+from repro.cache_service.feedback import (
+    FeedbackAccumulator, FeedbackConfig, RefitReport, TenantReservoir,
+)
 from repro.cache_service.policy import PolicyTable, TenantPolicy
 from repro.cache_service.protocol import (
     CacheBackend, CacheCapabilities, CachePlan, CacheRequest,
@@ -24,6 +27,8 @@ from repro.cache_service.tiers import (
 
 __all__ = [
     "CacheService", "PolicyTable", "TenantPolicy",
+    "FeedbackAccumulator", "FeedbackConfig", "RefitReport",
+    "TenantReservoir",
     "CacheBackend", "CacheCapabilities", "CachePlan", "CacheRequest",
     "CommitReceipt", "MaintenanceReport", "coalesce_misses",
     "ungrouped_misses",

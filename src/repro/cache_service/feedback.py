@@ -1,0 +1,291 @@
+"""Online per-tenant admission/threshold learning (DESIGN.md §9).
+
+PR 1 froze each tenant's operating point into a static
+``TenantPolicy(threshold, admission_margin)`` fit once from *offline*
+pairs.  The serving loop meanwhile observes every signal that offline
+fit was a proxy for — plan-time scores, hit/miss verdicts, and (at
+commit) whether a generated miss response turned out identical to its
+nearest stored neighbour's — and threw them away.  This module closes
+the loop:
+
+  * ``FeedbackAccumulator`` ingests the stream: a per-tenant fixed-size
+    reservoir (Vitter's algorithm R, uniform over the tenant's whole
+    history) of ``(score, duplicate)`` events, where *score* is the
+    best same-tenant score the plan observed for a miss row and
+    *duplicate* is the commit-time verdict — the generated response
+    matched the stored neighbour's response exactly.  A duplicate that
+    was nevertheless admitted is a **wasted admission** (the stored
+    neighbour would have served its paraphrases).
+  * ``fit()`` re-derives the tenant's threshold and admission margin
+    from its own reservoir, reusing ``core/calibration.py``'s
+    estimators on live data: ``calibrate_for_false_hit_budget`` maps
+    the labeled scores to the loosest threshold inside the false-hit
+    budget, and ``calibrate_for_precision`` finds the score above
+    which observed misses are duplicates with high precision — the
+    admission margin is the gap between the two.
+
+Hysteresis — thresholds must never thrash (``PolicyTable.refit`` runs
+on every ``maintenance()`` idle tick):
+
+  * **min-samples / class balance**: no fit below ``min_samples``
+    events or ``min_class`` events of either verdict.
+  * **refit interval**: a tenant is only re-examined after
+    ``refit_interval`` *new* events since its last examination.
+  * **max-step**: one refit moves the threshold at most ``max_step``;
+    drift is tracked over several refits, never jumped.
+  * **monotone false-hit-budget guard**: a refit never *loosens* the
+    threshold past the budgeted quantile of observed negatives, and a
+    loosening that would breach the observed false-hit budget is
+    refused outright.
+  * **duplicate-support floor**: loosening stops at the score that
+    already captures ``dup_coverage`` of observed duplicates — below
+    it there is no observed duplicate mass to convert into hits, only
+    unobserved false-hit risk (hit rows are never re-labeled online,
+    so the region far under the threshold is censored).
+
+Every decision — applied or refused, with the reason — is recorded as
+a ``RefitReport`` in ``refit_log`` so the learned state is inspectable
+through ``stats()`` and testable under the batcher's idle tick.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.cache_service.policy import TenantPolicy
+from repro.core.calibration import (
+    calibrate_for_false_hit_budget, calibrate_for_precision,
+)
+
+
+@dataclass(frozen=True)
+class FeedbackConfig:
+    """Knobs of the online learning loop; defaults are sized for the
+    smoke-scale streams this repo serves (hundreds-to-thousands of
+    events per tenant)."""
+    reservoir: int = 1024        # per-tenant event capacity
+    min_samples: int = 64        # no fit below this many events
+    min_class: int = 8           # ... or this many of either verdict
+    refit_interval: int = 64     # new events between examinations
+    max_step: float = 0.02      # max threshold move per refit
+    max_false_hit_rate: float = 0.01   # the budget the guard enforces
+    dup_precision: float = 0.9   # P(duplicate | score >= cut) target
+    dup_coverage: float = 0.95   # loosening floor: keep this dup mass
+    max_margin: float = 0.25     # admission band width cap
+    refit_log_cap: int = 512     # most recent decisions kept
+    seed: int = 0
+
+
+@dataclass(frozen=True)
+class RefitReport:
+    """One refit decision for one tenant (applied or refused)."""
+    tenant: int
+    applied: bool
+    reason: str                  # "ok" | "min-samples" | "class-starved"
+    #                            | "interval" | "budget-guard" | "no-change"
+    old_threshold: float
+    new_threshold: float
+    old_margin: float
+    new_margin: float
+    step_clamped: bool = False   # max_step truncated the move
+    n_events: int = 0
+    n_duplicates: int = 0
+    false_hit_rate: float = 0.0  # observed, at the published threshold
+
+
+class TenantReservoir:
+    """Fixed-capacity uniform sample of one tenant's (score, duplicate)
+    events — algorithm R, so a drifting stream keeps every era
+    represented proportionally."""
+
+    def __init__(self, capacity: int, rng: np.random.Generator):
+        self.capacity = int(capacity)
+        self.scores = np.zeros(self.capacity, np.float32)
+        self.labels = np.zeros(self.capacity, np.int8)
+        self.fill = 0
+        self.seen = 0
+        self._rng = rng
+
+    def add(self, score: float, duplicate: bool) -> None:
+        self.seen += 1
+        if self.fill < self.capacity:
+            i = self.fill
+            self.fill += 1
+        else:
+            i = int(self._rng.integers(self.seen))
+            if i >= self.capacity:
+                return
+        self.scores[i] = np.clip(score, -1.0, 1.0)
+        self.labels[i] = 1 if duplicate else 0
+
+    def arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.scores[:self.fill], self.labels[:self.fill]
+
+
+class FeedbackAccumulator:
+    """The online learning half of the admission policy: ingests the
+    serving stream per tenant, answers ``refit_due()`` for the
+    maintenance tick, and ``fit()``s one tenant's policy on demand
+    (``PolicyTable.refit`` drives it over every due tenant)."""
+
+    def __init__(self, config: Optional[FeedbackConfig] = None):
+        self.config = config or FeedbackConfig()
+        self._rng = np.random.default_rng(self.config.seed)
+        self._res: Dict[int, TenantReservoir] = {}
+        self._seen_at_fit: Dict[int, int] = {}
+        self.refit_log: List[RefitReport] = []
+        self.counters = {
+            "events": 0, "duplicate_events": 0, "wasted_admissions": 0,
+            "plan_hits": 0, "plan_misses": 0,
+            "refits_applied": 0, "refits_skipped": 0,
+        }
+
+    # ------------------------------------------------------------------
+    # ingest
+    # ------------------------------------------------------------------
+    def observe_plan(self, hit: np.ndarray) -> None:
+        """Plan-time verdict counters (hit rows are served uninspected,
+        so they only feed observability, never the reservoir)."""
+        hit = np.asarray(hit, bool)
+        self.counters["plan_hits"] += int(hit.sum())
+        self.counters["plan_misses"] += int((~hit).sum())
+
+    def observe(self, tenant: int, score: float, duplicate: bool,
+                admitted: bool) -> None:
+        """One commit-time miss event; a duplicate that was admitted
+        anyway counts as a wasted admission."""
+        t = int(tenant)
+        res = self._res.get(t)
+        if res is None:
+            res = self._res[t] = TenantReservoir(self.config.reservoir,
+                                                 self._rng)
+        res.add(float(score), bool(duplicate))
+        self.counters["events"] += 1
+        if duplicate:
+            self.counters["duplicate_events"] += 1
+            if admitted:
+                self.counters["wasted_admissions"] += 1
+
+    # ------------------------------------------------------------------
+    # refit scheduling
+    # ------------------------------------------------------------------
+    def tenants(self) -> List[int]:
+        return sorted(self._res)
+
+    def refit_due(self, tenant: Optional[int] = None) -> bool:
+        """Enough new events since the tenant's last examination (any
+        tenant, when ``tenant`` is None) to justify a fit attempt."""
+        if tenant is None:
+            return any(self.refit_due(t) for t in self._res)
+        res = self._res.get(int(tenant))
+        if res is None or res.fill < self.config.min_samples:
+            return False
+        seen_at = self._seen_at_fit.get(int(tenant), 0)
+        return res.seen - seen_at >= self.config.refit_interval \
+            or seen_at == 0
+
+    # ------------------------------------------------------------------
+    # the fit itself
+    # ------------------------------------------------------------------
+    def fit(self, tenant: int,
+            policy: TenantPolicy) -> Tuple[TenantPolicy, RefitReport]:
+        """Re-derive one tenant's operating point from its reservoir,
+        under every hysteresis guard.  Returns the (possibly unchanged)
+        policy and the decision record; the caller applies it."""
+        t = int(tenant)
+        cfg = self.config
+        res = self._res.get(t)
+        scores, labels = res.arrays() if res is not None \
+            else (np.zeros(0, np.float32), np.zeros(0, np.int8))
+        n_dup = int(labels.sum())
+
+        def skip(reason: str, fhr: float = 0.0):
+            self.counters["refits_skipped"] += 1
+            rep = RefitReport(
+                tenant=t, applied=False, reason=reason,
+                old_threshold=policy.threshold,
+                new_threshold=policy.threshold,
+                old_margin=policy.admission_margin,
+                new_margin=policy.admission_margin,
+                n_events=len(scores), n_duplicates=n_dup,
+                false_hit_rate=fhr)
+            self._log(rep)
+            return policy, rep
+
+        if len(scores) < cfg.min_samples:
+            return skip("min-samples")
+        if not self.refit_due(t):
+            return skip("interval")
+        # examined now — the interval restarts whether or not a fit
+        # applies, so a tenant stuck in a skip state (e.g. too few
+        # duplicates) is re-examined every refit_interval new events,
+        # not on every maintenance tick
+        self._seen_at_fit[t] = res.seen
+        if n_dup < cfg.min_class or len(scores) - n_dup < cfg.min_class:
+            return skip("class-starved")
+
+        old_thr = float(policy.threshold)
+        cal = calibrate_for_false_hit_budget(scores, labels,
+                                             cfg.max_false_hit_rate)
+        pos = scores[labels == 1]
+        neg = scores[labels == 0]
+        # duplicate-support floor: loosening below the score that
+        # already captures dup_coverage of observed duplicates converts
+        # no observed miss into a hit — it only walks into the censored
+        # region where false hits would go unnoticed
+        floor = float(np.quantile(pos, 1.0 - cfg.dup_coverage))
+        target = max(cal.threshold, floor)
+        step_clamped = abs(target - old_thr) > cfg.max_step
+        new_thr = float(np.clip(target, old_thr - cfg.max_step,
+                                old_thr + cfg.max_step))
+        fhr = float((neg >= new_thr).mean())
+        if new_thr < old_thr and fhr > cfg.max_false_hit_rate:
+            # monotone budget guard: never publish a loosening whose
+            # observed false-hit rate breaches the budget (a clamped
+            # tightening may still be over budget — it moves toward
+            # compliance and is allowed)
+            return skip("budget-guard", fhr=fhr)
+
+        # admission margin: skip admitting misses above the score at
+        # which observed misses are duplicates with dup_precision —
+        # their stored neighbour serves the paraphrase cluster already
+        dup_cal = calibrate_for_precision(scores, labels,
+                                          min_precision=cfg.dup_precision)
+        new_margin = float(np.clip(new_thr - dup_cal.threshold, 0.0,
+                                   cfg.max_margin))
+
+        if abs(new_thr - old_thr) < 1e-6 \
+                and abs(new_margin - policy.admission_margin) < 1e-6:
+            return skip("no-change", fhr=fhr)
+        self.counters["refits_applied"] += 1
+        rep = RefitReport(
+            tenant=t, applied=True, reason="ok",
+            old_threshold=old_thr, new_threshold=new_thr,
+            old_margin=policy.admission_margin, new_margin=new_margin,
+            step_clamped=step_clamped, n_events=len(scores),
+            n_duplicates=n_dup, false_hit_rate=fhr)
+        self._log(rep)
+        return replace(policy, threshold=new_thr,
+                       admission_margin=new_margin, calibration=cal), rep
+
+    def _log(self, rep: RefitReport) -> None:
+        """Bounded decision log: a tenant stuck in a skip reason (e.g.
+        class-starved) is re-examined every maintenance tick, so the
+        log keeps only the most recent decisions."""
+        self.refit_log.append(rep)
+        if len(self.refit_log) > self.config.refit_log_cap:
+            del self.refit_log[:-self.config.refit_log_cap]
+
+    # ------------------------------------------------------------------
+    def state(self) -> Dict[str, object]:
+        """Flat snapshot for the backend's ``stats()``."""
+        return {
+            "feedback_events": self.counters["events"],
+            "duplicate_events": self.counters["duplicate_events"],
+            "wasted_admissions": self.counters["wasted_admissions"],
+            "refits_applied": self.counters["refits_applied"],
+            "refits_skipped": self.counters["refits_skipped"],
+            "feedback_tenants": len(self._res),
+        }

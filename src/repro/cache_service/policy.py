@@ -16,7 +16,7 @@ next paraphrase of that query would have hit the *existing* entry.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, Optional
+from typing import Dict, List, Optional
 
 import numpy as np
 
@@ -30,6 +30,40 @@ class TenantPolicy:
     threshold: float = 0.85        # hit operating point
     admission_margin: float = 0.0  # skip insert if score >= thr - margin
     calibration: Optional[Calibration] = None
+
+    def with_threshold(self, threshold: float,
+                       calibration: Optional[Calibration] = None
+                       ) -> "TenantPolicy":
+        """Move the operating point, rescaling the admission margin to
+        the new threshold's scale.
+
+        The margin models paraphrase spread: entries whose paraphrases
+        would already hit the stored neighbour.  That spread is set by
+        the threshold itself — at thr 0.95 paraphrases land within
+        ~0.05 of each other, at thr 0.85 within ~0.15 — so a margin
+        carried over verbatim after a recalibration is wrong in
+        *relative* terms (a 0.2 margin under a looser threshold skips
+        admissions for far less similar queries than it was tuned
+        for).  Keeping ``margin / (1 - threshold)`` constant preserves
+        the band's width in units of the operating point's own
+        paraphrase scale.
+
+        Two safety caps keep the rescale from ever disabling
+        admission: the ratio itself is capped at 2 (an old threshold
+        sitting at ~1.0 would otherwise amplify any margin without
+        bound), and the rescaled margin is capped at ``threshold/2``
+        so the admission band's bottom stays at or above half the
+        operating point — a query with no real similarity to the
+        store is always admitted.
+        """
+        ratio = min(self.admission_margin
+                    / max(1.0 - self.threshold, 1e-6), 2.0)
+        margin = min(ratio * (1.0 - threshold),
+                     0.5 * max(threshold, 0.0))
+        return replace(self, threshold=threshold,
+                       admission_margin=float(np.clip(margin, 0.0, 1.0)),
+                       calibration=calibration if calibration is not None
+                       else self.calibration)
 
 
 class PolicyTable:
@@ -48,13 +82,40 @@ class PolicyTable:
     def calibrate(self, tenant: int, scores, labels,
                   max_false_hit_rate: float = 0.01) -> Calibration:
         """Fit this tenant's threshold to a false-hit budget from its
-        own scored eval pairs (repro.core.calibration)."""
+        own scored eval pairs (repro.core.calibration).  The admission
+        margin is rescaled to the new threshold's paraphrase scale —
+        carrying it over verbatim silently changed the band's relative
+        width every time the threshold moved (see
+        ``TenantPolicy.with_threshold``)."""
         cal = calibrate_for_false_hit_budget(scores, labels,
                                              max_false_hit_rate)
         cur = self.get(tenant)
-        self.set(tenant, replace(cur, threshold=cal.threshold,
-                                 calibration=cal))
+        self.set(tenant, cur.with_threshold(cal.threshold, calibration=cal))
         return cal
+
+    def refit(self, feedback) -> List[object]:
+        """Online refit from a ``FeedbackAccumulator`` (DESIGN.md §9):
+        every tenant whose reservoir says a refit is due gets one
+        ``feedback.fit()`` — the accumulator owns the estimators and
+        every hysteresis guard; this table only publishes the policies
+        that survive them.  Returns the ``RefitReport`` list (applied
+        and refused) for the maintenance report and stats."""
+        reports = []
+        for tenant in feedback.tenants():
+            if not feedback.refit_due(tenant):
+                continue
+            policy, report = feedback.fit(tenant, self.get(tenant))
+            if report.applied:
+                self.set(tenant, policy)
+            reports.append(report)
+        return reports
+
+    def learned_state(self) -> Dict[int, Dict[str, float]]:
+        """Per-tenant operating points currently published (the
+        learned-admission view exposed by ``stats()``)."""
+        return {t: {"threshold": p.threshold,
+                    "admission_margin": p.admission_margin}
+                for t, p in sorted(self._by_tenant.items())}
 
     # ----- vectorised resolution for a query batch ---------------------
     def thresholds_for(self, tenants: np.ndarray) -> np.ndarray:

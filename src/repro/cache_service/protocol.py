@@ -64,6 +64,7 @@ class CacheCapabilities:
     tiered: bool = False             # hot/warm cascade vs flat store
     warm_sharded: bool = False       # warm tier spans a mesh axis (§8)
     warm_dtype: str = "float32"      # warm scan precision (int8 = quantized)
+    learned_admission: bool = False  # maintenance() refits policies (§9)
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +107,17 @@ class CachePlan:
     ``admit`` is the admission pre-decision taken at plan time from the
     observed neighbour scores (False on hit rows); ``commit`` honors it
     instead of re-deciding.
+
+    ``top_value_ids`` carries the id of each row's best same-tenant
+    neighbour *regardless of the hit flag* (-1 when the tenant had no
+    candidate): commit compares a generated miss response against the
+    neighbour's stored response to label the event a duplicate for the
+    feedback loop (DESIGN.md §9).  ``margins`` records how far each
+    row's best score sat from its tenant's threshold *at plan time* —
+    with learned admission the thresholds drift between refits, so the
+    plan is the only place that context exists; consumers (telemetry,
+    tests, future cross-host policy sync) read it here instead of
+    re-joining scores against a policy table that has since moved.
     """
     request: CacheRequest
     hit: np.ndarray                  # (B,) bool
@@ -115,6 +127,8 @@ class CachePlan:
     admit: np.ndarray                # (B,) bool admission pre-decision
     miss_leader: np.ndarray          # (B,) int64 coalescing map
     epoch: int = 0                   # backend epoch at plan time
+    margins: Optional[np.ndarray] = None       # (B,) thr - score
+    top_value_ids: Optional[np.ndarray] = None  # (B,) int64, -1 = none
 
     def miss_rows(self) -> np.ndarray:
         return np.nonzero(~self.hit)[0]
@@ -154,6 +168,8 @@ class MaintenanceReport:
     rebuild_published: bool = False  # a finished shadow index was swapped
     rebuild_in_flight: bool = False  # a shadow rebuild is still running
     rebuild_wall_s: float = 0.0      # wall time of the published rebuild
+    refits_applied: int = 0          # policies republished this call (§9)
+    refits_checked: int = 0          # tenants examined (incl. refusals)
 
 
 @dataclass(frozen=True)

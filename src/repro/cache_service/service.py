@@ -45,6 +45,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache_service import tiers
+from repro.cache_service.feedback import FeedbackAccumulator, FeedbackConfig
 from repro.cache_service.policy import PolicyTable, TenantPolicy
 from repro.cache_service.protocol import (
     CacheCapabilities, CachePlan, CacheRequest, CommitReceipt,
@@ -65,7 +66,9 @@ class CacheService:
                  kmeans_iters: int = 4, seed: int = 0,
                  fused: bool = False, background_rebuild: bool = False,
                  mesh=None, shard_axis: str = "model",
-                 warm_dtype: str = "float32"):
+                 warm_dtype: str = "float32",
+                 learned_admission: bool = False,
+                 feedback_config: Optional[FeedbackConfig] = None):
         """Build the tiered service.
 
         Tail invariant (see ``tiers.warm_query``): rows demoted into the
@@ -110,6 +113,17 @@ class CacheService:
         HBM/VMEM bandwidth) and re-scores the selected rows exactly —
         reported scores stay true fp32 cosines; only candidate
         *selection* sees the bounded quantization error.
+
+        ``learned_admission=True`` turns the static per-tenant
+        operating points into a feedback loop (DESIGN.md §9): every
+        commit labels its miss rows against their stored neighbours
+        (duplicate / distinct), a per-tenant reservoir accumulates the
+        labeled scores, and ``maintenance()`` re-derives each tenant's
+        threshold and admission margin from its own observed stream —
+        under hysteresis guards (min samples, max step per refit,
+        monotone false-hit budget), so the points drift with the
+        workload but never thrash.  ``feedback_config`` tunes the
+        guards (implies ``learned_admission``).
         """
         sharded = mesh is not None
         shards = int(mesh.shape[shard_axis]) if sharded else 1
@@ -168,6 +182,9 @@ class CacheService:
             self.warm = tiers.init_warm(warm_capacity, dim, n_clusters,
                                         bucket)
         self.policies = PolicyTable(TenantPolicy(threshold, admission_margin))
+        self.feedback: Optional[FeedbackAccumulator] = \
+            FeedbackAccumulator(feedback_config) \
+            if learned_admission or feedback_config is not None else None
         self.responses: Dict[int, str] = {}
         self._next_vid = 0
         self._tail = tail
@@ -235,7 +252,8 @@ class CacheService:
                                  background_rebuild=self.background_rebuild,
                                  tiered=True,
                                  warm_sharded=self._mesh is not None,
-                                 warm_dtype=self.warm_dtype)
+                                 warm_dtype=self.warm_dtype,
+                                 learned_admission=self.feedback is not None)
 
     def plan(self, request: CacheRequest, *,
              coalesce: bool = True) -> CachePlan:
@@ -260,13 +278,17 @@ class CacheService:
         responses = [self.responses.get(int(v)) if h else None
                      for h, v in zip(hit, vids)]
         admit = self.policies.pre_decision(qt, scores, hit)
+        if self.feedback is not None:
+            self.feedback.observe_plan(hit)
         return CachePlan(
             request=request, hit=hit, scores=scores,
             value_ids=np.where(hit, vids, -1), responses=responses,
             admit=admit,
             miss_leader=coalesce_misses(request.embeddings, hit, qt, thr)
             if coalesce else ungrouped_misses(hit),
-            epoch=self._epoch)
+            epoch=self._epoch,
+            margins=np.asarray(thr, np.float32) - scores,
+            top_value_ids=vids)
 
     def commit(self, plan: CachePlan,
                responses: Sequence[Optional[str]]) -> CommitReceipt:
@@ -286,6 +308,8 @@ class CacheService:
             if texts[pos] is None:
                 raise ValueError(
                     f"admitted row {int(rows[pos])} has no response")
+        if self.feedback is not None:
+            self._observe_feedback(plan, rows, admit, texts)
         vids = np.full(len(rows), -1, np.int64)
         for pos in np.nonzero(admit)[0]:
             vids[pos] = self._next_vid
@@ -305,7 +329,11 @@ class CacheService:
         return CommitReceipt(
             admitted=n_admit, skipped=int((~admit).sum()),
             evicted=self._counters["evictions"] - evicted_before,
-            rebuild_due=self._rebuild_due())
+            # a due policy refit is a maintenance obligation exactly
+            # like a due rebuild: the pipeline discharges both with one
+            # maintenance() call between batches
+            rebuild_due=self._rebuild_due()
+            or (self.feedback is not None and self.feedback.refit_due()))
 
     def maintenance(self, block: bool = False) -> MaintenanceReport:
         """Drive the double-buffered rebuild: publish a finished shadow
@@ -323,15 +351,26 @@ class CacheService:
                 and self._shadow_thread is None and self._tail_pressure()):
             self._start_shadow()
             started = True
+        refits_applied = refits_checked = 0
+        if self.feedback is not None:
+            # online admission learning (DESIGN.md §9): republish every
+            # tenant policy whose reservoir survives the hysteresis
+            # guards — host-only work, cheap enough for every idle tick
+            reports = self.policies.refit(self.feedback)
+            refits_checked = len(reports)
+            refits_applied = sum(r.applied for r in reports)
         return MaintenanceReport(
             rebuild_started=started, rebuild_published=published,
             rebuild_in_flight=self._shadow_thread is not None,
-            rebuild_wall_s=wall)
+            rebuild_wall_s=wall,
+            refits_applied=refits_applied, refits_checked=refits_checked)
 
     def stats(self) -> Dict[str, object]:
         """One unified snapshot: lookup/hit/admission counters plus
-        rebuild accounting (count, in-flight flag, wall times)."""
-        return {
+        rebuild accounting (count, in-flight flag, wall times) and,
+        with learned admission on, the feedback-loop state (event and
+        refit counters, per-tenant learned operating points)."""
+        out = {
             **self._counters,
             "hot_occupancy": self.hot_occupancy,
             "warm_occupancy": self.warm_occupancy,
@@ -342,6 +381,10 @@ class CacheService:
             "warm_shards": self.warm_shards,
             "warm_dtype": self.warm_dtype,
         }
+        if self.feedback is not None:
+            out.update(self.feedback.state())
+            out["learned_policies"] = self.policies.learned_state()
+        return out
 
     # ------------------------------------------------------------------
     # legacy serving surface (deprecated shims over plan/commit)
@@ -383,6 +426,40 @@ class CacheService:
     # ------------------------------------------------------------------
     # internals
     # ------------------------------------------------------------------
+    def _observe_feedback(self, plan: CachePlan, rows: np.ndarray,
+                          admit: np.ndarray,
+                          texts: List[Optional[str]]) -> None:
+        """Label each committed miss against its stored neighbour and
+        feed the per-tenant reservoir (DESIGN.md §9): duplicate <=> the
+        generated response equals the best same-tenant neighbour's
+        stored response (the plan carried its id).  A row with no
+        same-tenant candidate is a definite non-duplicate; a row whose
+        neighbour string was GC'd between plan and commit is
+        unknowable and skipped rather than mislabeled.  Runs before
+        commit mints fresh ids, so neighbour lookups only ever see
+        plan-era entries.  All event/wasted-admission accounting lives
+        on the accumulator (surfaced through ``stats()``)."""
+        top = plan.top_value_ids
+        if top is None:
+            return
+        tenants = plan.request.tenants
+        for pos, row in enumerate(rows):
+            text = texts[pos]
+            if text is None:
+                continue
+            vid = int(top[row])
+            if vid < 0:
+                dup = False
+                score = max(float(plan.scores[row]), -1.0)  # NEG sentinel
+            else:
+                neighbour = self.responses.get(vid)
+                if neighbour is None:
+                    continue
+                dup = text == neighbour
+                score = float(plan.scores[row])
+            self.feedback.observe(int(tenants[row]), score, dup,
+                                  bool(admit[pos]))
+
     def _gc(self, evicted) -> int:
         """Free response strings whose ids a device op reported evicted."""
         ids = np.asarray(evicted)

@@ -89,7 +89,7 @@ class SemanticCache:
             miss_leader=coalesce_misses(      # every generated miss
                 request.embeddings, hit, request.tenants, thr)
             if coalesce else ungrouped_misses(hit),
-            epoch=0)
+            epoch=0, margins=thr - scores, top_value_ids=vids)
 
     def commit(self, plan: CachePlan,
                responses: Sequence[Optional[str]]) -> CommitReceipt:

@@ -24,24 +24,39 @@ class Calibration:
 
 def calibrate_for_precision(scores, labels, min_precision: float = 0.95
                             ) -> Calibration:
-    """Loosest threshold whose eval precision >= min_precision."""
+    """Loosest threshold whose eval precision >= min_precision.
+
+    Candidate cuts are *distinct* score boundaries only: with tied
+    scores, ``score >= thr`` admits every tie, so a cut landing inside
+    a tie group would report cumulative stats the threshold cannot
+    realize.  When no cut reaches ``min_precision`` (e.g. all-negative
+    labels) the threshold is placed just above the top score — an
+    empty, vacuously precise hit set — rather than a top-1 cut whose
+    actual precision silently misses the target.
+    """
     scores = np.asarray(scores, np.float64)
     labels = np.asarray(labels, np.int32)
     order = np.argsort(-scores, kind="stable")
+    s = scores[order]
     lab = labels[order]
     tp = np.cumsum(lab)
     fp = np.cumsum(1 - lab)
     precision = tp / np.maximum(tp + fp, 1)
     n_pos = max(int(labels.sum()), 1)
     n_neg = max(int((1 - labels).sum()), 1)
-    ok = np.nonzero(precision >= min_precision)[0]
+    # a cut at i means thr = s[i]: only valid where s[i] > s[i+1]
+    # (ties below i would be admitted too); the last row always is
+    boundary = np.ones(len(s), bool)
+    boundary[:-1] = s[:-1] > s[1:]
+    ok = np.nonzero(boundary & (precision >= min_precision))[0]
     if len(ok) == 0:
-        i = 0  # strictest: only the single top score
-    else:
-        i = ok[-1]
-    thr = float(scores[order][i])
+        thr = float(s[0]) + 1e-9 if len(s) else 1.0  # admit nothing
+        return Calibration(threshold=thr, expected_precision=1.0,
+                           expected_recall=0.0, false_hit_rate=0.0,
+                           true_hit_rate=0.0)
+    i = ok[-1]
     return Calibration(
-        threshold=thr,
+        threshold=float(s[i]),
         expected_precision=float(precision[i]),
         expected_recall=float(tp[i] / n_pos),
         false_hit_rate=float(fp[i] / n_neg),

@@ -6,8 +6,10 @@ optional semantic cache in front (the paper's deployment).
 
 ``--tiered`` swaps the flat SemanticCache for the tiered CacheService;
 ``--cache-shards N`` then lays its warm tier over an N-device `model`
-mesh (local IVF probe per shard + tiny merge, DESIGN.md §8) and
-``--warm-dtype int8`` scans the warm panel from its quantized form.
+mesh (local IVF probe per shard + tiny merge, DESIGN.md §8),
+``--warm-dtype int8`` scans the warm panel from its quantized form,
+and ``--learned-admission`` turns the static per-tenant operating
+points into the online feedback loop (DESIGN.md §9).
 """
 from __future__ import annotations
 
@@ -44,8 +46,13 @@ def main():
                     help="warm-panel scan precision; int8 quantizes the "
                          "warm keys (exact re-score at merge, DESIGN.md "
                          "§8; implies --tiered)")
+    ap.add_argument("--learned-admission", action="store_true",
+                    help="learn per-tenant thresholds/admission margins "
+                         "online from observed duplicate rates "
+                         "(DESIGN.md §9; implies --tiered)")
     args = ap.parse_args()
-    if args.cache_shards or args.warm_dtype != "float32":
+    if args.cache_shards or args.warm_dtype != "float32" \
+            or args.learned_admission:
         args.tiered = True
 
     cfg = get_config(args.arch)
@@ -80,11 +87,13 @@ def main():
         cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
                              warm_capacity=4096, n_clusters=32, bucket=256,
                              threshold=args.threshold, mesh=mesh,
-                             warm_dtype=args.warm_dtype)
+                             warm_dtype=args.warm_dtype,
+                             learned_admission=args.learned_admission)
         caps = cache.capabilities()
         print(f"tiered cache: warm shards "
               f"{cache.warm_shards if caps.warm_sharded else 0}, "
-              f"warm dtype {caps.warm_dtype}")
+              f"warm dtype {caps.warm_dtype}, learned admission "
+              f"{'on' if caps.learned_admission else 'off'}")
     else:
         cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
                               threshold=args.threshold)
@@ -98,6 +107,13 @@ def main():
     print(f"{args.requests} requests in {time.perf_counter() - t0:.1f}s; "
           f"hit rate {svc.hit_rate:.1%} "
           f"({svc.stats()['hits']} LLM calls saved)")
+    if args.learned_admission:
+        st = svc.stats()
+        print(f"learned admission: {st['refits_applied']} refits from "
+              f"{st['feedback_events']} events "
+              f"({st['duplicate_events']} duplicates, "
+              f"{st['wasted_admissions']} wasted admissions); "
+              f"policies {st['learned_policies']}")
 
 
 if __name__ == "__main__":

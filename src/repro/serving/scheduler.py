@@ -79,6 +79,7 @@ class ContinuousBatcher:
         self.maintenance_max_interval = max(maintenance_max_interval, 1)
         self.maintenance_runs = 0
         self.maintenance_skips = 0
+        self.last_maintenance: Optional[object] = None
         self._ticks_since_maintenance = 0
         self.pool = init_lm_state(cfg, n_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
@@ -148,7 +149,9 @@ class ContinuousBatcher:
             overdue = (self._ticks_since_maintenance
                        >= self.maintenance_max_interval)
             if self.idle() or overdue:
-                self.maintenance()
+                # keep the hook's report (e.g. a MaintenanceReport with
+                # rebuild/refit outcomes) inspectable per tick
+                self.last_maintenance = self.maintenance()
                 self.maintenance_runs += 1
                 self._ticks_since_maintenance = 0
             else:

@@ -1,0 +1,410 @@
+"""Online per-tenant admission learning (DESIGN.md §9): the feedback
+reservoir, every refit hysteresis guard, the learned-vs-fixed claim on
+a drifting stream, refit under the batcher's maintenance tick, and the
+CI perf-trajectory gate."""
+import copy
+import json
+import pathlib
+import subprocess
+import sys
+
+import jax
+import numpy as np
+
+from repro.cache_service import (
+    CacheRequest, CacheService, FeedbackAccumulator, FeedbackConfig,
+    PolicyTable, TenantPolicy,
+)
+
+rng = np.random.default_rng(29)
+DIM = 64
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+def _fill(acc, tenant, n_dup=60, n_neg=60, dup_loc=0.88, neg_loc=0.35,
+          admitted=True):
+    """Seed a reservoir with a separable duplicate/distinct mixture."""
+    for s in rng.normal(dup_loc, 0.015, n_dup):
+        acc.observe(tenant, float(np.clip(s, -1, 1)), True, admitted)
+    for s in rng.normal(neg_loc, 0.1, n_neg):
+        acc.observe(tenant, float(np.clip(s, -1, 1)), False, admitted)
+
+
+# ---------------------------------------------------------------------------
+# reservoir
+# ---------------------------------------------------------------------------
+
+def test_reservoir_bounds_memory_and_counts_stream():
+    acc = FeedbackAccumulator(FeedbackConfig(reservoir=64))
+    for i in range(1000):
+        acc.observe(0, 0.5, i % 3 == 0, True)
+    res = acc._res[0]
+    assert res.fill == 64 and res.seen == 1000
+    assert acc.counters["events"] == 1000
+    assert acc.counters["duplicate_events"] == 334
+    assert acc.counters["wasted_admissions"] == 334
+    scores, labels = res.arrays()
+    assert len(scores) == 64 == len(labels)
+
+
+def test_reservoir_keeps_late_stream_represented():
+    """Algorithm R: after 10x capacity from a second era, the sample
+    must contain a healthy share of late events (a FIFO or a frozen
+    prefix would fail one side)."""
+    acc = FeedbackAccumulator(FeedbackConfig(reservoir=128, seed=5))
+    for _ in range(128):
+        acc.observe(0, 0.2, False, True)     # era 1: score 0.2
+    for _ in range(1280):
+        acc.observe(0, 0.8, True, True)      # era 2: score 0.8
+    scores, _ = acc._res[0].arrays()
+    late = float((scores > 0.5).mean())
+    assert 0.7 < late < 1.0, late            # ~10/11 expected, never all
+
+
+# ---------------------------------------------------------------------------
+# hysteresis guards
+# ---------------------------------------------------------------------------
+
+def test_refit_guard_min_samples_and_class_balance():
+    acc = FeedbackAccumulator(FeedbackConfig(min_samples=64, min_class=8))
+    pol = TenantPolicy(0.9, 0.02)
+    _fill(acc, 0, n_dup=10, n_neg=10)        # 20 < min_samples
+    _, rep = acc.fit(0, pol)
+    assert not rep.applied and rep.reason == "min-samples"
+    _fill(acc, 1, n_dup=2, n_neg=100)        # enough events, starved class
+    _, rep = acc.fit(1, pol)
+    assert not rep.applied and rep.reason == "class-starved"
+    assert acc.counters["refits_applied"] == 0
+    # the starved examination still consumes the refit interval: the
+    # tenant is not re-examined on every maintenance tick
+    assert not acc.refit_due(1)
+    _, rep = acc.fit(1, pol)
+    assert rep.reason == "interval"
+
+
+def test_refit_guard_max_step_walks_not_jumps():
+    """A far-away target is approached max_step per refit, with the
+    interval guard forcing new evidence between steps."""
+    cfg = FeedbackConfig(min_samples=32, min_class=8, refit_interval=16,
+                        max_step=0.02)
+    acc = FeedbackAccumulator(cfg)
+    table = PolicyTable(TenantPolicy(0.99, 0.0))
+    _fill(acc, 0)                            # duplicate mass near 0.88
+    thr_seen = [0.99]
+    for _ in range(8):
+        for rep in table.refit(acc):
+            if rep.applied:
+                assert abs(rep.new_threshold - rep.old_threshold) \
+                    <= cfg.max_step + 1e-9
+                thr_seen.append(rep.new_threshold)
+        _fill(acc, 0, n_dup=10, n_neg=10)    # fresh evidence per round
+    assert len(thr_seen) >= 3                # it moved, in steps
+    assert thr_seen[-1] < 0.95               # toward the duplicate mass
+    steps = np.diff(thr_seen)
+    assert np.all(np.abs(steps) <= cfg.max_step + 1e-9)
+
+
+def test_refit_guard_interval_spaces_examinations():
+    cfg = FeedbackConfig(min_samples=32, min_class=8, refit_interval=500)
+    acc = FeedbackAccumulator(cfg)
+    pol = TenantPolicy(0.9, 0.0)
+    _fill(acc, 0)
+    pol2, rep = acc.fit(0, pol)              # first examination: allowed
+    assert rep.reason in ("ok", "no-change")
+    _, rep = acc.fit(0, pol2)
+    assert not rep.applied and rep.reason == "interval"
+    assert not acc.refit_due(0)
+
+
+def test_refit_guard_budget_refuses_loosening_over_budget():
+    """Negatives sitting right under the current threshold: any
+    loosening breaches the observed false-hit budget and must be
+    refused outright, not clamped into."""
+    cfg = FeedbackConfig(min_samples=32, min_class=8,
+                        max_false_hit_rate=0.01, max_step=0.5,
+                        dup_coverage=1.0)
+    acc = FeedbackAccumulator(cfg)
+    # duplicates BELOW the negatives: the dup-support floor (coverage
+    # 1.0 -> min dup score ~0.6) asks to loosen into the negative mass
+    _fill(acc, 0, n_dup=50, n_neg=50, dup_loc=0.62, neg_loc=0.8)
+    pol = TenantPolicy(0.97, 0.0)
+    pol2, rep = acc.fit(0, pol)
+    if rep.applied:                          # tightening never loosens
+        assert rep.new_threshold >= pol.threshold
+    else:
+        assert rep.reason in ("budget-guard", "no-change")
+    # and the published threshold never dips below the negative mass
+    assert pol2.threshold >= 0.8
+
+
+def test_refit_floor_stops_at_duplicate_support():
+    """Even with negatives far away (budget quantile ~0.45), loosening
+    stops at the score capturing dup_coverage of observed duplicates —
+    the region below is censored, not free."""
+    cfg = FeedbackConfig(min_samples=32, min_class=8, max_step=1.0,
+                        dup_coverage=0.95)
+    acc = FeedbackAccumulator(cfg)
+    _fill(acc, 0, dup_loc=0.88, neg_loc=0.3)
+    pol2, rep = acc.fit(0, TenantPolicy(0.95, 0.0))
+    assert rep.applied
+    scores, labels = acc._res[0].arrays()
+    floor = np.quantile(scores[labels == 1], 0.05)
+    assert pol2.threshold >= floor - 1e-9
+    assert pol2.threshold < 0.95             # but it did loosen
+
+
+def test_refit_fits_margin_from_duplicate_precision():
+    cfg = FeedbackConfig(min_samples=32, min_class=8, max_step=0.05,
+                        dup_precision=0.9, max_margin=0.25)
+    acc = FeedbackAccumulator(cfg)
+    _fill(acc, 0)
+    pol2, rep = acc.fit(0, TenantPolicy(0.92, 0.0))
+    assert rep.applied
+    assert 0.0 < pol2.admission_margin <= cfg.max_margin
+    # the band ends at a score that is overwhelmingly duplicate
+    scores, labels = acc._res[0].arrays()
+    cut = pol2.threshold - pol2.admission_margin
+    band = labels[scores >= cut]
+    assert band.mean() >= 0.85, (cut, band.mean())
+
+
+# ---------------------------------------------------------------------------
+# the end-to-end claim: learned beats fixed on a drifting stream
+# ---------------------------------------------------------------------------
+
+def _drift_stream(stream_rng, intents, n_batches=21, batch=32):
+    for b in range(n_batches):
+        noise = 0.06 if b >= n_batches // 3 else 0.02
+        ids = stream_rng.integers(0, len(intents), batch)
+        embs = _unit(intents[ids] + noise * stream_rng.standard_normal(
+            (batch, DIM)).astype(np.float32))
+        yield embs, ids
+
+
+def _serve_drift(learned: bool):
+    stream_rng = np.random.default_rng(7)
+    intents = _unit(stream_rng.standard_normal((48, DIM)
+                                               ).astype(np.float32))
+    svc = CacheService(
+        dim=DIM, hot_capacity=256, warm_capacity=1024, n_clusters=16,
+        bucket=128, n_probe=4, threshold=0.95, admission_margin=0.02,
+        flush_size=64, kmeans_iters=2,
+        learned_admission=learned,
+        feedback_config=FeedbackConfig(min_samples=48, refit_interval=32,
+                                       max_step=0.03, seed=0)
+        if learned else None)
+    seen, dup_admits, admits = set(), 0, 0
+    for embs, ids in _drift_stream(stream_rng, intents):
+        plan = svc.plan(CacheRequest.build(embs))
+        svc.commit(plan, [f"ans{i}" for i in ids])
+        svc.maintenance()
+        for row in plan.miss_rows():
+            if not plan.admit[row]:
+                continue
+            admits += 1
+            if int(ids[row]) in seen:
+                dup_admits += 1
+            seen.add(int(ids[row]))
+    probe_pos = _unit(intents + 0.03 * stream_rng.standard_normal(
+        intents.shape).astype(np.float32))
+    probe_neg = _unit(stream_rng.standard_normal((64, DIM)
+                                                 ).astype(np.float32))
+    recall = float(svc.plan(CacheRequest.build(probe_pos),
+                            coalesce=False).hit.mean())
+    false_hits = int(svc.plan(CacheRequest.build(probe_neg),
+                              coalesce=False).hit.sum())
+    return svc, dup_admits, admits, recall, false_hits
+
+
+def test_learned_admission_beats_fixed_on_drifting_stream():
+    _, dup_fixed, _, recall_fixed, fh_fixed = _serve_drift(False)
+    svc, dup_learned, admits, recall_learned, fh_learned = \
+        _serve_drift(True)
+    # fewer duplicate inserts, recall held, false-hit budget held
+    assert dup_learned < dup_fixed, (dup_learned, dup_fixed)
+    assert recall_learned >= recall_fixed - 0.02, \
+        (recall_learned, recall_fixed)
+    assert fh_learned <= max(1, fh_fixed), (fh_learned, fh_fixed)
+    st = svc.stats()
+    assert st["refits_applied"] >= 1
+    assert st["duplicate_events"] > 0
+    assert svc.capabilities().learned_admission
+    # the learned operating point is visible and moved off the default
+    pol = st["learned_policies"][0]
+    assert pol["threshold"] < 0.95
+    # every applied refit respected the step guard
+    for rep in svc.feedback.refit_log:
+        if rep.applied:
+            assert abs(rep.new_threshold - rep.old_threshold) <= 0.03 + 1e-9
+
+
+def test_wasted_admissions_are_counted():
+    """A miss admitted despite its generated answer matching the
+    stored neighbour's is the signal the whole loop keys off."""
+    svc = CacheService(dim=DIM, hot_capacity=64, warm_capacity=128,
+                       n_clusters=4, bucket=32, threshold=0.99,
+                       learned_admission=True)
+    base = _unit(rng.standard_normal((1, DIM)).astype(np.float32))
+    svc.commit(svc.plan(CacheRequest.build(base)), ["same-answer"])
+    near = _unit(base + 0.05 * rng.standard_normal((1, DIM)
+                                                   ).astype(np.float32))
+    plan = svc.plan(CacheRequest.build(near))
+    assert not plan.hit[0]                   # strict threshold: a miss
+    svc.commit(plan, ["same-answer"])        # ... with the same answer
+    st = svc.stats()
+    assert st["duplicate_events"] == 1
+    assert st["wasted_admissions"] == 1
+    assert st["feedback_events"] == 2
+
+
+def test_plan_carries_margins_and_top_ids():
+    svc = CacheService(dim=DIM, hot_capacity=32, warm_capacity=64,
+                       n_clusters=4, bucket=32, threshold=0.9)
+    e = _unit(rng.standard_normal((4, DIM)).astype(np.float32))
+    svc.commit(svc.plan(CacheRequest.build(e)), [f"r{i}" for i in range(4)])
+    plan = svc.plan(CacheRequest.build(e))
+    assert plan.hit.all()
+    np.testing.assert_allclose(plan.margins, 0.9 - plan.scores, atol=1e-6)
+    assert (plan.top_value_ids >= 0).all()   # the neighbour id survives
+    # tenant with nothing cached: no neighbour, sentinel id
+    plan1 = svc.plan(CacheRequest.build(e, tenant=1))
+    assert (plan1.top_value_ids == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# refit rides the batcher's idle-tick maintenance hook
+# ---------------------------------------------------------------------------
+
+def test_refit_via_continuous_batcher_maintenance():
+    from repro.configs import get_config
+    from repro.models import init_lm, split
+    from repro.serving.scheduler import ContinuousBatcher, Request
+
+    svc = CacheService(dim=DIM, hot_capacity=64, warm_capacity=128,
+                       n_clusters=4, bucket=32, threshold=0.97,
+                       learned_admission=True,
+                       feedback_config=FeedbackConfig(
+                           min_samples=48, min_class=8, refit_interval=32,
+                           max_step=0.02, seed=0))
+    _fill(svc.feedback, 0)                   # the serving loop's deposit
+
+    cfg = get_config("phi3-mini-3.8b").reduced()
+    pv, _ = split(init_lm(cfg, jax.random.PRNGKey(0)))
+    b = ContinuousBatcher(cfg, pv, n_slots=2, max_len=64, prompt_len=8,
+                          maintenance=svc.maintenance)
+    b.submit(Request(uid=0,
+                     prompt=rng.integers(4, cfg.vocab_size, 6).astype(
+                         np.int32), max_new_tokens=3))
+    b.run(max_ticks=30)
+    assert b.maintenance_runs > 0
+    # the idle-tick hook applied a refit and reported it upward
+    assert svc.stats()["refits_applied"] >= 1
+    assert b.last_maintenance is not None
+    assert b.last_maintenance.refits_checked >= 0
+    applied = [r for r in svc.feedback.refit_log if r.applied]
+    assert applied and all(
+        abs(r.new_threshold - r.old_threshold) <= 0.02 + 1e-9
+        for r in applied)
+    # hysteresis under the hook: repeated ticks with no new evidence
+    # must not keep republishing (interval / no-change guards)
+    n_applied = svc.stats()["refits_applied"]
+    for _ in range(5):
+        svc.maintenance()
+    assert svc.stats()["refits_applied"] == n_applied
+
+
+# ---------------------------------------------------------------------------
+# the CI perf-trajectory gate
+# ---------------------------------------------------------------------------
+
+BASE_BENCH = {
+    "bench": "tiered_cascade", "backend": "cpu", "devices": 1,
+    "sizes": [4096], "q": 128, "dim": 64, "threshold": 0.9,
+    "rows": [
+        {"name": "tiered/4k/cascade_unfused", "us_per_call": 100.0,
+         "p50_us": 1000.0, "recall_at_thr": 1.0},
+        {"name": "tiered/admission_fixed", "us_per_call": 50.0,
+         "dup_admissions": 500, "false_hits_probe": 0,
+         "recall_probe": 0.94},
+        {"name": "tiered/admission_learned", "us_per_call": 50.0,
+         "dup_admissions": 50, "false_hits_probe": 0,
+         "recall_probe": 1.0},
+    ],
+}
+
+
+def _run_gate(tmp_path, baseline, fresh, *extra):
+    bp, fp = tmp_path / "base.json", tmp_path / "fresh.json"
+    bp.write_text(json.dumps(baseline))
+    fp.write_text(json.dumps(fresh))
+    script = pathlib.Path(__file__).resolve().parent.parent \
+        / "scripts" / "check_bench_trajectory.py"
+    return subprocess.run(
+        [sys.executable, str(script),
+         "--baseline", str(bp), "--fresh", str(fp), *extra],
+        capture_output=True, text=True)
+
+
+def test_trajectory_gate_green_on_identical(tmp_path):
+    r = _run_gate(tmp_path, BASE_BENCH, BASE_BENCH)
+    assert r.returncode == 0, r.stderr
+    assert "clean" in r.stdout
+
+
+def test_trajectory_gate_fails_on_recall_regression(tmp_path):
+    doctored = copy.deepcopy(BASE_BENCH)
+    doctored["rows"][0]["recall_at_thr"] = 0.80
+    r = _run_gate(tmp_path, BASE_BENCH, doctored)
+    assert r.returncode == 1
+    assert "recall_at_thr regressed" in r.stderr
+
+
+def test_trajectory_gate_fails_on_missing_row_and_p50_cliff(tmp_path):
+    doctored = copy.deepcopy(BASE_BENCH)
+    doctored["rows"][0]["p50_us"] = 10_000.0      # 10x the baseline
+    del doctored["rows"][1:]                       # admission rows gone
+    r = _run_gate(tmp_path, BASE_BENCH, doctored)
+    assert r.returncode == 1
+    assert "missing from the fresh run" in r.stderr
+    assert "exceeds" in r.stderr
+
+
+def test_trajectory_gate_skips_p50_on_fleet_mismatch(tmp_path):
+    doctored = copy.deepcopy(BASE_BENCH)
+    doctored["devices"] = 8                        # multidevice CI job
+    doctored["rows"][0]["p50_us"] = 10_000.0
+    r = _run_gate(tmp_path, BASE_BENCH, doctored)
+    assert r.returncode == 0, r.stderr
+    assert "fleet mismatch" in r.stdout
+
+
+def test_trajectory_gate_skips_size_tiers_absent_from_fresh_sweep(
+        tmp_path):
+    """A full-sweep baseline (16k/64k rows) must not fail a --smoke
+    run on rows the 4k tier cannot produce — only matching tiers and
+    size-independent rows are owed."""
+    full = copy.deepcopy(BASE_BENCH)
+    full["sizes"] = [4096, 16384]
+    full["rows"].append({"name": "tiered/16k/cascade_unfused",
+                         "us_per_call": 200.0, "p50_us": 2000.0,
+                         "recall_at_thr": 1.0})
+    r = _run_gate(tmp_path, full, BASE_BENCH)   # fresh = smoke (4k only)
+    assert r.returncode == 0, r.stderr
+    assert "not in the fresh sweep" in r.stdout
+    # but a dropped row inside a covered tier still fails
+    doctored = copy.deepcopy(BASE_BENCH)
+    doctored["rows"] = BASE_BENCH["rows"][1:]   # 4k row gone
+    r = _run_gate(tmp_path, BASE_BENCH, doctored)
+    assert r.returncode == 1
+    assert "missing from the fresh run" in r.stderr
+
+
+def test_trajectory_gate_fails_on_broken_admission_claim(tmp_path):
+    doctored = copy.deepcopy(BASE_BENCH)
+    doctored["rows"][2]["dup_admissions"] = 600    # learned >= fixed
+    r = _run_gate(tmp_path, BASE_BENCH, doctored)
+    assert r.returncode == 1
+    assert "not below fixed" in r.stderr

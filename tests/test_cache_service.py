@@ -275,6 +275,39 @@ def test_per_tenant_calibrated_thresholds():
     assert svc.policies.get(3).threshold == 0.9  # others keep the default
 
 
+def test_calibrate_rescales_admission_margin_with_threshold():
+    """Regression: PolicyTable.calibrate used to keep the stale
+    admission_margin verbatim when the threshold moved, silently
+    changing the band's width relative to the new operating point's
+    paraphrase scale (TenantPolicy.with_threshold keeps
+    margin/(1-threshold) constant)."""
+    from repro.cache_service import PolicyTable, TenantPolicy
+
+    table = PolicyTable(TenantPolicy(0.95, admission_margin=0.02))
+    # scored pairs whose budgeted threshold lands well below 0.95
+    scores = np.concatenate([rng.normal(0.6, 0.05, 400),
+                             rng.normal(0.9, 0.03, 400)])
+    labels = np.repeat([0, 1], 400).astype(np.int32)
+    cal = table.calibrate(0, scores, labels, max_false_hit_rate=0.01)
+    pol = table.get(0)
+    assert pol.threshold == cal.threshold < 0.9
+    expected = 0.02 * (1 - cal.threshold) / (1 - 0.95)
+    assert pol.admission_margin == pytest.approx(expected)
+    assert pol.admission_margin > 0.02       # looser point, wider band
+    # relative width is preserved exactly
+    assert pol.admission_margin / (1 - pol.threshold) \
+        == pytest.approx(0.02 / (1 - 0.95))
+    # degenerate old threshold ~1.0: no division blow-up, and the
+    # safety caps keep the band from swallowing the score space — a
+    # query with no similarity to the store must still be admitted
+    t2 = PolicyTable(TenantPolicy(1.0, admission_margin=0.1))
+    t2.calibrate(0, scores, labels)
+    p2 = t2.get(0)
+    assert 0.0 <= p2.admission_margin <= 0.5 * p2.threshold
+    assert t2.admit_mask(np.zeros(1, np.int32),
+                         np.zeros(1, np.float32))[0]
+
+
 # ---------------------------------------------------------------------------
 # serving wiring
 # ---------------------------------------------------------------------------

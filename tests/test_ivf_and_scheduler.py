@@ -103,6 +103,72 @@ def test_calibrate_for_false_hit_budget():
     assert (neg >= cal.threshold).mean() <= 0.025
 
 
+def test_calibrate_all_positive_labels():
+    """No negatives observed: the loosest threshold still hits every
+    positive, with a vacuously satisfied budget."""
+    scores = np.asarray([0.7, 0.8, 0.9])
+    labels = np.ones(3, np.int32)
+    for fn, kw in ((calibrate_for_false_hit_budget,
+                    {"max_false_hit_rate": 0.01}),
+                   (calibrate_for_precision, {"min_precision": 0.95})):
+        cal = fn(scores, labels, **kw)
+        assert cal.threshold <= 0.7
+        assert cal.expected_recall == 1.0
+        assert cal.false_hit_rate == 0.0
+
+
+def test_calibrate_all_negative_labels():
+    """No positives observed: the threshold must hit (almost) nothing
+    — in particular calibrate_for_precision must not return a cut
+    whose actual precision silently misses the target."""
+    scores = np.asarray([0.2, 0.5, 0.9])
+    labels = np.zeros(3, np.int32)
+    cal = calibrate_for_precision(scores, labels, min_precision=0.95)
+    assert cal.threshold > 0.9              # admits nothing
+    assert cal.false_hit_rate == 0.0
+    assert (scores >= cal.threshold).sum() == 0
+    cal = calibrate_for_false_hit_budget(scores, labels,
+                                         max_false_hit_rate=0.01)
+    assert (scores >= cal.threshold).mean() <= 0.01 + 1e-9
+    assert cal.expected_recall == 0.0
+
+
+def test_calibrate_tied_scores_at_the_cut():
+    """A threshold admits EVERY tie at its value: a cut inside a tie
+    group must not report cumulative stats the threshold cannot
+    realize."""
+    scores = np.asarray([0.9, 0.9, 0.9, 0.5])
+    labels = np.asarray([1, 1, 0, 0], np.int32)
+    cal = calibrate_for_precision(scores, labels, min_precision=0.95)
+    # the only honest cuts are >0.9 (empty) or >=0.9 (precision 2/3)
+    # or >=0.5 (precision 2/4): none reaches 0.95 except the empty one
+    pred = scores >= cal.threshold
+    emp = (pred & (labels == 1)).sum() / max(pred.sum(), 1)
+    assert emp >= 0.95 or pred.sum() == 0
+    # expected_precision reflects what the threshold actually admits
+    assert abs(cal.expected_precision - emp) < 1e-9 or pred.sum() == 0
+    cal2 = calibrate_for_precision(scores, labels, min_precision=0.6)
+    pred2 = scores >= cal2.threshold
+    emp2 = (pred2 & (labels == 1)).sum() / pred2.sum()
+    assert emp2 >= 0.6
+    assert abs(cal2.expected_precision - emp2) < 1e-9
+    # budget estimator: ties at the quantile are all excluded
+    cal3 = calibrate_for_false_hit_budget(scores, labels,
+                                          max_false_hit_rate=0.01)
+    neg = scores[labels == 0]
+    assert (neg >= cal3.threshold).mean() <= 0.01 + 1e-9
+
+
+def test_calibrate_single_sample():
+    for lab, recall in ((1, 1.0), (0, 0.0)):
+        cal = calibrate_for_false_hit_budget([0.8], [lab])
+        assert cal.expected_recall == recall
+        assert cal.false_hit_rate == 0.0
+        cal = calibrate_for_precision([0.8], [lab], min_precision=0.95)
+        assert cal.expected_recall == recall
+        assert cal.false_hit_rate == 0.0
+
+
 # ---------------------------------------------------------------------------
 # continuous batcher
 # ---------------------------------------------------------------------------
