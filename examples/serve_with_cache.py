@@ -32,6 +32,7 @@ from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core import EmbedderTrainer, FinetuneConfig, SemanticCache
 from repro.data import HashTokenizer, make_pair_dataset, make_query_stream
 from repro.models import init_lm, split
+from repro.obs import Telemetry, write_jsonl
 from repro.serving import CachedLLMService, ServeEngine
 
 
@@ -62,6 +63,11 @@ def main():
                          "margins online from observed duplicate rates "
                          "(maintenance() refits them under hysteresis "
                          "guards, DESIGN.md §9)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the telemetry registry snapshot as "
+                         "JSON-lines after the run (DESIGN.md §10.1); "
+                         "validate with python -m repro.obs.export "
+                         "--validate PATH")
     args = ap.parse_args()
     if args.flat and (args.fused or args.background_rebuild
                       or args.learned_admission):
@@ -83,9 +89,11 @@ def main():
         print("fine-tuning embedder (online contrastive, clip 0.5)...")
         trainer.fit(make_pair_dataset("medical", 1024, seed=0), tok)
 
+    telemetry = Telemetry()
     if args.flat:
         cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
-                              threshold=args.threshold)
+                              threshold=args.threshold,
+                              telemetry=telemetry)
     else:
         cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
                              warm_capacity=4096, n_clusters=32, bucket=256,
@@ -93,7 +101,8 @@ def main():
                              admission_margin=0.02, flush_size=128,
                              fused=args.fused,
                              background_rebuild=args.background_rebuild,
-                             learned_admission=args.learned_admission)
+                             learned_admission=args.learned_admission,
+                             telemetry=telemetry)
         print(f"cascade path: {'fused kernel' if cache.fused else 'four-op'}"
               f" (backend {jax.default_backend()})")
     svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
@@ -152,6 +161,38 @@ def main():
                 print(f"  tenant {t}: threshold "
                       f"{pol['threshold']:.3f}  margin "
                       f"{pol['admission_margin']:.3f}")
+
+    # --- telemetry: stage breakdown + SLO health (DESIGN.md §10) ------
+    cache.maintenance(block=True)     # final idle tick: drain SLO gauges
+    print("\n=== telemetry (DESIGN.md §10) ===")
+    print(f"maintenance calls between batches: {st['maintenance_calls']}")
+    stage_h = telemetry.stage_histogram()
+    for stage in ("embed", "plan", "generate", "commit", "maintenance"):
+        agg = stage_h.aggregate(stage=stage)
+        if agg.count:
+            print(f"  stage {stage:<12} p50 {agg.quantile(0.5) * 1e3:7.2f} "
+                  f"ms  mean {agg.mean * 1e3:7.2f} ms  x{agg.count}")
+    root = telemetry.tracer.last_root()
+    if root is not None:
+        print(f"last request span tree: {root.name} "
+              f"({root.duration_s * 1e3:.1f} ms) -> "
+              f"{' -> '.join(root.stage_names())}")
+    if telemetry.health is not None and not args.flat:
+        hs = telemetry.health.snapshot()
+        for t, s in hs["tenants"].items():
+            print(f"  tenant {t}: hit ewma {s['hit']['ewma']:.2f}  "
+                  f"dup-admission {s['wasted_admission']['windowed']:.3f}  "
+                  f"budget burn {s['budget_burn']:.2f}")
+        reb = hs["rebuild"]
+        if reb["publishes"]:
+            print(f"  rebuild overlap: {reb['overlap_plans_total']} plans "
+                  f"during shadow builds, publish stall p99 "
+                  f"{reb['stall_p99_s'] * 1e3:.2f} ms")
+    if args.metrics_json:
+        write_jsonl(args.metrics_json, telemetry.registry.snapshot(),
+                    meta={"arch": dec_cfg.name, "queries": args.queries,
+                          "flat": bool(args.flat)})
+        print(f"metrics -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

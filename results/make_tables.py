@@ -9,6 +9,9 @@ import glob
 import json
 import sys
 
+def warn(msg):
+    print(f"WARNING: {msg}", file=sys.stderr)
+
 SHAPE_ORDER = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
                "long_500k": 3}
 
@@ -66,12 +69,16 @@ def dryrun_table(rows):
 
 def cascade_table(path="results/BENCH_cascade.json"):
     """Everything renders from the bench's own JSON: lookup-path rows
-    (latency/recall), maintenance rows, and the learned-vs-fixed
+    (latency/recall), maintenance/rebuild rows, the per-stage serving
+    latency breakdown (DESIGN.md §10), and the learned-vs-fixed
     admission comparison the feedback loop (DESIGN.md §9) is judged
-    by."""
+    by.  Every row must land in some table; a leftover gets a loud
+    stderr warning instead of vanishing (a renamed bench row silently
+    falling out of EXPERIMENTS.md is exactly how a regression hides)."""
     with open(path) as f:
         data = json.load(f)
     rows = {r["name"]: r for r in data["rows"]}
+    rendered = set()
     print(f"Tiered cascade — backend {data['backend']} "
           f"x{data['devices']} device(s), sizes {data['sizes']}, "
           f"Q={data['q']}, threshold {data['threshold']}")
@@ -79,16 +86,65 @@ def cascade_table(path="results/BENCH_cascade.json"):
     print("| row | us/query | p50 ms | recall@thr | speedup vs flat |")
     print("|---|---|---|---|---|")
     for name, r in rows.items():
-        if "recall_at_thr" not in r:
+        if "us_per_query" not in r:
             continue
+        rendered.add(name)
         p50 = f"{r['p50_us']/1e3:.1f}" if "p50_us" in r else "-"
+        rec = f"{r['recall_at_thr']:.3f}" if "recall_at_thr" in r else "-"
         spd = f"{r['speedup_vs_flat']:.2f}x" if "speedup_vs_flat" in r \
             else "-"
         print(f"| {name} | {r['us_per_query']:.1f} | {p50} "
-              f"| {r['recall_at_thr']:.3f} | {spd} |")
+              f"| {rec} | {spd} |")
+
+    # maintenance / rebuild rows (DESIGN.md §7): serving-tick latency
+    # with the warm rebuild inline vs double-buffered
+    reb = [(n, r) for n, r in rows.items()
+           if "bg_rebuilds" in r or "flush_size" in r]
+    if reb:
+        print()
+        print("Maintenance (warm flush + IVF rebuild):")
+        print()
+        print("| row | us/call | tick p50 ms | tick p99 ms | "
+              "bg rebuilds |")
+        print("|---|---|---|---|---|")
+        for name, r in reb:
+            rendered.add(name)
+            p50 = f"{r['p50_us']/1e3:.1f}" if "p50_us" in r else "-"
+            p99 = f"{r['p99_us']/1e3:.1f}" if "p99_us" in r else "-"
+            bg = str(r["bg_rebuilds"]) if "bg_rebuilds" in r else "-"
+            print(f"| {name} | {r['us_per_call']:.1f} | {p50} "
+                  f"| {p99} | {bg} |")
+
+    # per-stage serving latency breakdown (DESIGN.md §10): where a
+    # cached tick actually spends its time, from the telemetry
+    # registry's stage histogram
+    stages = [(n, r) for n, r in rows.items()
+              if n.startswith("tiered/serve/stage_")]
+    if stages:
+        print()
+        print("Serving latency breakdown (per stage, from the telemetry "
+              "registry, DESIGN.md §10):")
+        print()
+        print("| stage | p50 us | mean us | ticks |")
+        print("|---|---|---|---|")
+        for name, r in stages:
+            rendered.add(name)
+            print(f"| {name.rsplit('stage_', 1)[1]} | {r['p50_us']:.0f} "
+                  f"| {r['mean_us']:.0f} | {r['count']} |")
+        over = rows.get("tiered/serve/telemetry_overhead")
+        if over:
+            rendered.add("tiered/serve/telemetry_overhead")
+            print()
+            print(f"Telemetry overhead: tick p50 {over['p50_on_us']:.0f} "
+                  f"us instrumented vs {over['p50_off_us']:.0f} us bare "
+                  f"({over['overhead_ratio']:.4f}x, paired-difference "
+                  f"estimate {over['median_extra_us']:.0f} us).")
+
     fixed = rows.get("tiered/admission_fixed")
     learned = rows.get("tiered/admission_learned")
     if fixed and learned:
+        rendered.update(("tiered/admission_fixed",
+                         "tiered/admission_learned"))
         print()
         print("Admission on the drifting stream (fixed rule vs online "
               "learned, same queries):")
@@ -109,6 +165,11 @@ def cascade_table(path="results/BENCH_cascade.json"):
               f"{drop:.0%} with probe recall "
               f"{learned['recall_probe']:.3f} (fixed: "
               f"{fixed['recall_probe']:.3f}).")
+
+    leftover = sorted(set(rows) - rendered)
+    if leftover:
+        warn(f"{len(leftover)} bench row(s) in {path} not rendered by "
+             f"any table (renamed or new row?): {', '.join(leftover)}")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,20 @@ against it so a PR cannot silently regress what the bench measures:
   * the learned-admission claim is re-checked on the artifacts: the
     ``admission_learned`` row must keep ``dup_admissions`` strictly
     below ``admission_fixed``'s and its false-hit probes at zero-ish
-    (<= the fixed row's).
+    (<= the fixed row's);
+  * the telemetry stage breakdown (``tiered/serve/stage_*``) must be
+    complete: once either run carries any serving-telemetry row, the
+    fresh run owes one row per required stage (plan / commit /
+    maintenance) — a vanished stage means an instrumentation path was
+    dropped, which no aggregate row would notice.  Stage p50s get
+    their own (tighter) ratio bound via ``--stage-p50-tolerance``,
+    because stage rows exist precisely to localise a regression the
+    end-to-end row dilutes;
+  * the ``tiered/serve/telemetry_overhead`` row's budget is re-checked
+    from the committed fields (the paired per-tick difference estimate
+    must fit in 2% of the bare p50 plus a 100us floor — the same bound
+    the bench asserts at run time), so a baseline update cannot
+    smuggle in an over-budget measurement.
 
 Exit 0 when clean; exit 1 with one line per violation.
 
@@ -43,6 +56,17 @@ import sys
 from typing import Dict, List, Tuple
 
 RECALL_FIELDS = ("recall_at_thr", "recall_probe")
+
+# Serving-telemetry rows (DESIGN.md §10).  The stage list and the
+# overhead budget mirror benchmarks/bench_tiered_cache.py and
+# repro.obs.health.check_overhead_budget; they are restated here
+# because this gate runs without PYTHONPATH=src and must not import
+# the package it is judging.
+STAGE_PREFIX = "tiered/serve/stage_"
+REQUIRED_STAGES = ("plan", "commit", "maintenance")
+OVERHEAD_ROW = "tiered/serve/telemetry_overhead"
+OVERHEAD_MAX_RATIO = 1.02
+OVERHEAD_FLOOR_US = 100.0
 
 
 def load(path: str) -> Dict[str, object]:
@@ -71,7 +95,9 @@ def _comparable(name: str, fresh_sizes) -> bool:
 
 def compare(baseline: Dict[str, object], fresh: Dict[str, object],
             recall_eps: float = 0.005,
-            p50_tolerance: float = 5.0) -> Tuple[List[str], List[str]]:
+            p50_tolerance: float = 5.0,
+            stage_p50_tolerance: float = 3.0) -> Tuple[List[str],
+                                                       List[str]]:
     """Returns (violations, notes).  Violations fail the gate; notes
     explain what was skipped or newly added."""
     violations: List[str] = []
@@ -110,10 +136,12 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
                         f"{base[field]:.4f} -> {row[field]:.4f} "
                         f"(eps {recall_eps})")
         if same_fleet and "p50_us" in base and "p50_us" in row:
-            if row["p50_us"] > base["p50_us"] * p50_tolerance:
+            tol = stage_p50_tolerance if name.startswith(STAGE_PREFIX) \
+                else p50_tolerance
+            if row["p50_us"] > base["p50_us"] * tol:
                 violations.append(
                     f"{name}: p50 {row['p50_us']:.0f}us exceeds "
-                    f"{p50_tolerance:.1f}x the baseline "
+                    f"{tol:.1f}x the baseline "
                     f"{base['p50_us']:.0f}us")
 
     for name in sorted(set(fresh_rows) - set(base_rows)):
@@ -132,6 +160,40 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
                 "admission: learned false_hits_probe "
                 f"{learned['false_hits_probe']} exceeds fixed "
                 f"{fixed['false_hits_probe']}")
+
+    # serving-telemetry completeness + overhead budget (DESIGN.md §10)
+    def _has_telemetry(rows: Dict[str, Dict[str, object]]) -> bool:
+        return OVERHEAD_ROW in rows or any(
+            n.startswith(STAGE_PREFIX) for n in rows)
+
+    if _has_telemetry(base_rows) or _has_telemetry(fresh_rows):
+        for stage in REQUIRED_STAGES:
+            if f"{STAGE_PREFIX}{stage}" not in fresh_rows:
+                violations.append(
+                    f"telemetry: required stage row "
+                    f"{STAGE_PREFIX}{stage} missing from the fresh run "
+                    "(instrumentation path dropped?)")
+        if OVERHEAD_ROW not in fresh_rows:
+            violations.append(
+                f"telemetry: {OVERHEAD_ROW} row missing from the "
+                "fresh run")
+    over = fresh_rows.get(OVERHEAD_ROW)
+    if over is not None and "median_extra_us" in over \
+            and "p50_off_us" in over:
+        # Same assertion the bench makes at run time: the *paired*
+        # per-tick difference estimate (not raw p50 on minus p50 off,
+        # which still carries uncanceled host jitter) must fit in
+        # 2% of the bare tick plus the timer-granularity floor.
+        extra = max(over["median_extra_us"], 0.0)
+        limit = over["p50_off_us"] * (OVERHEAD_MAX_RATIO - 1.0) \
+            + OVERHEAD_FLOOR_US
+        if extra > limit:
+            violations.append(
+                f"telemetry: overhead over budget — paired extra "
+                f"{extra:.0f}us per tick vs bare p50 "
+                f"{over['p50_off_us']:.0f}us (limit "
+                f"{OVERHEAD_MAX_RATIO - 1.0:.0%} + "
+                f"{OVERHEAD_FLOOR_US:.0f}us = {limit:.0f}us)")
     return violations, notes
 
 
@@ -145,11 +207,16 @@ def main(argv=None) -> int:
                     help="tolerated absolute recall drop per row")
     ap.add_argument("--p50-tolerance", type=float, default=5.0,
                     help="max fresh/baseline p50 ratio (same fleet only)")
+    ap.add_argument("--stage-p50-tolerance", type=float, default=3.0,
+                    help="max fresh/baseline p50 ratio for the per-stage "
+                         "telemetry rows (tiered/serve/stage_*; same "
+                         "fleet only)")
     args = ap.parse_args(argv)
 
     violations, notes = compare(load(args.baseline), load(args.fresh),
                                 recall_eps=args.recall_eps,
-                                p50_tolerance=args.p50_tolerance)
+                                p50_tolerance=args.p50_tolerance,
+                                stage_p50_tolerance=args.stage_p50_tolerance)
     for n in notes:
         print(f"note: {n}")
     if violations:

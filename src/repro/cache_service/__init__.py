@@ -9,13 +9,16 @@ protocol (plan/commit lifecycle, DESIGN.md §7).
 """
 from repro.cache_service.feedback import (
     FeedbackAccumulator, FeedbackConfig, RefitReport, TenantReservoir,
+    record_refit,
 )
 from repro.cache_service.policy import PolicyTable, TenantPolicy
 from repro.cache_service.protocol import (
     CacheBackend, CacheCapabilities, CachePlan, CacheRequest,
     CommitReceipt, MaintenanceReport, coalesce_misses, ungrouped_misses,
 )
-from repro.cache_service.service import CacheService
+from repro.cache_service.service import (
+    CacheService, LegacyStatsView, ServiceStats,
+)
 from repro.cache_service.tiers import (
     CascadeResult, Demoted, HotState, WarmState, cascade_lookup,
     cascade_query, demote_coldest, evict_tenant, hot_insert,
@@ -26,9 +29,10 @@ from repro.cache_service.tiers import (
 )
 
 __all__ = [
-    "CacheService", "PolicyTable", "TenantPolicy",
+    "CacheService", "ServiceStats", "LegacyStatsView",
+    "PolicyTable", "TenantPolicy",
     "FeedbackAccumulator", "FeedbackConfig", "RefitReport",
-    "TenantReservoir",
+    "TenantReservoir", "record_refit",
     "CacheBackend", "CacheCapabilities", "CachePlan", "CacheRequest",
     "CommitReceipt", "MaintenanceReport", "coalesce_misses",
     "ungrouped_misses",

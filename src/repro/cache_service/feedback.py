@@ -289,3 +289,32 @@ class FeedbackAccumulator:
             "refits_skipped": self.counters["refits_skipped"],
             "feedback_tenants": len(self._res),
         }
+
+
+def record_refit(registry, report: RefitReport) -> None:
+    """Publish one refit decision as structured registry events
+    (DESIGN.md §10.1): a per-(tenant, outcome) counter — outcome is
+    ``applied`` or the skip reason, so budget-guard refusals are
+    directly alertable — plus, for applied refits, the tenant's
+    published operating point as gauges.  ``CacheService.maintenance``
+    calls this for every report its refit pass produced."""
+    registry.counter(
+        "admission_refits_total",
+        "per-tenant refit decisions by outcome (applied | skip reason)",
+        labels=("tenant", "outcome"),
+    ).inc(1, tenant=report.tenant,
+          outcome="applied" if report.applied else report.reason)
+    if report.applied:
+        registry.gauge(
+            "admission_threshold", "published per-tenant hit threshold",
+            labels=("tenant",)).set(report.new_threshold,
+                                    tenant=report.tenant)
+        registry.gauge(
+            "admission_margin", "published per-tenant admission margin",
+            labels=("tenant",)).set(report.new_margin,
+                                    tenant=report.tenant)
+        registry.gauge(
+            "admission_observed_false_hit_rate",
+            "observed false-hit rate at the published threshold",
+            labels=("tenant",)).set(report.false_hit_rate,
+                                    tenant=report.tenant)

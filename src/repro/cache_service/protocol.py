@@ -129,6 +129,7 @@ class CachePlan:
     epoch: int = 0                   # backend epoch at plan time
     margins: Optional[np.ndarray] = None       # (B,) thr - score
     top_value_ids: Optional[np.ndarray] = None  # (B,) int64, -1 = none
+    plan_wall_s: float = 0.0         # host wall time of plan() (§10)
 
     def miss_rows(self) -> np.ndarray:
         return np.nonzero(~self.hit)[0]
@@ -170,6 +171,7 @@ class MaintenanceReport:
     rebuild_wall_s: float = 0.0      # wall time of the published rebuild
     refits_applied: int = 0          # policies republished this call (§9)
     refits_checked: int = 0          # tenants examined (incl. refusals)
+    wall_s: float = 0.0              # host wall time of this call (§10)
 
 
 @dataclass(frozen=True)
@@ -180,6 +182,8 @@ class CommitReceipt:
     evicted: int                     # host strings freed by this commit
     rebuild_due: bool = False        # obligation: call maintenance() soon
     maintenance: MaintenanceReport = field(default_factory=MaintenanceReport)
+    commit_wall_s: float = 0.0       # host wall time of commit() (§10)
+    trace_id: int = 0                # echoed from the request (§10.2)
 
 
 # ---------------------------------------------------------------------------

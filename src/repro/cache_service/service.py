@@ -37,6 +37,7 @@ from __future__ import annotations
 import threading
 import time
 import warnings
+from dataclasses import dataclass
 from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -45,13 +46,73 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache_service import tiers
-from repro.cache_service.feedback import FeedbackAccumulator, FeedbackConfig
+from repro.cache_service.feedback import (
+    FeedbackAccumulator, FeedbackConfig, record_refit,
+)
 from repro.cache_service.policy import PolicyTable, TenantPolicy
 from repro.cache_service.protocol import (
     CacheCapabilities, CachePlan, CacheRequest, CommitReceipt,
     MaintenanceReport, TenantArg, coalesce_misses, ungrouped_misses,
 )
 from repro.core.calibration import Calibration
+from repro.obs import Telemetry
+from repro.obs.registry import SCHEMA, tenant_label
+
+
+@dataclass(frozen=True)
+class ServiceStats:
+    """Typed, schema-stable ``CacheService`` snapshot (DESIGN.md §10.1).
+
+    Every count is read from the telemetry registry (the single source
+    of truth since the registry replaced the ad-hoc counter dict); the
+    grouping mirrors the metric families.  ``to_dict()`` is the wire
+    form the serve launcher emits under ``--metrics-json``.
+    """
+    schema: str                      # repro.obs/v1
+    traffic: Dict[str, int]          # plans/commits/lookup_rows/hits...
+    admission: Dict[str, int]        # admitted / skipped rows
+    tiers: Dict[str, object]         # occupancies, demotions, evictions
+    rebuild: Dict[str, object]       # rebuild counts + wall times
+    learning: Optional[Dict[str, object]]   # §9 feedback state
+    health: Optional[Dict[str, object]]     # §10.3 SLO snapshot
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "schema": self.schema, "traffic": dict(self.traffic),
+            "admission": dict(self.admission), "tiers": dict(self.tiers),
+            "rebuild": dict(self.rebuild),
+            "learning": dict(self.learning) if self.learning else None,
+            "health": dict(self.health) if self.health else None,
+        }
+
+
+class LegacyStatsView(dict):
+    """The pre-§10 flat ``stats()`` mapping, kept for one release.
+
+    Reading a key through this view warns once per process; migrate to
+    ``CacheService.stats_snapshot()`` (typed, schema-stable).  Plain
+    dict-copy operations (``{**stats}``, ``dict(stats)``) do not warn —
+    merging the mapping forward is exactly what the serving engine
+    does and is not deprecated.
+    """
+    _warned = False
+
+    @classmethod
+    def _warn(cls) -> None:
+        if not cls._warned:
+            cls._warned = True
+            warnings.warn(
+                "CacheService.stats() flat keys are deprecated; use "
+                "stats_snapshot() (see DESIGN.md §10.1 for the schema)",
+                DeprecationWarning, stacklevel=4)
+
+    def __getitem__(self, key):
+        self._warn()
+        return super().__getitem__(key)
+
+    def get(self, key, default=None):
+        self._warn()
+        return super().get(key, default)
 
 
 class CacheService:
@@ -68,7 +129,8 @@ class CacheService:
                  mesh=None, shard_axis: str = "model",
                  warm_dtype: str = "float32",
                  learned_admission: bool = False,
-                 feedback_config: Optional[FeedbackConfig] = None):
+                 feedback_config: Optional[FeedbackConfig] = None,
+                 telemetry: Optional[Telemetry] = None):
         """Build the tiered service.
 
         Tail invariant (see ``tiers.warm_query``): rows demoted into the
@@ -190,14 +252,45 @@ class CacheService:
         self._tail = tail
         self._n_probe = n_probe
         self._epoch = 0              # bumped by evict_tenant (plan staleness)
-        self._counters = {
-            "lookups": 0, "hot_hits": 0, "warm_hits": 0, "inserts": 0,
-            "admission_skips": 0, "demotions": 0, "rebuilds": 0,
-            "bg_rebuilds": 0, "evictions": 0, "plans": 0, "commits": 0,
-            "stale_commits": 0,
-        }
         self._last_rebuild_s = 0.0
         self._rebuild_total_s = 0.0
+        # counters live on the telemetry registry (DESIGN.md §10.1);
+        # the few quantities receipts/overlap accounting need even with
+        # telemetry disabled stay plain host ints
+        self._n_plans = 0
+        self._n_evictions = 0
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        if self.telemetry.health is not None and self.feedback is not None:
+            fb_cfg = self.feedback.config
+            self.telemetry.health.set_budget_source(
+                lambda t: fb_cfg.max_false_hit_rate)
+        reg = self.telemetry.registry
+        self._stage_h = self.telemetry.stage_histogram()
+        self._c_plans = reg.counter(
+            "cache_plans_total", "plan() calls").labels()
+        self._c_commits = reg.counter(
+            "cache_commits_total", "commit() calls").labels()
+        self._c_stale = reg.counter(
+            "cache_stale_commits_total",
+            "commits whose plan predates an epoch bump").labels()
+        self._c_rows = reg.counter(
+            "cache_lookup_rows_total", "rows planned").labels()
+        c_hits = reg.counter("cache_hits_total", "plan-time hits by tier",
+                             labels=("tier",))
+        self._c_hot_hits = c_hits.labels(tier="hot")
+        self._c_warm_hits = c_hits.labels(tier="warm")
+        self._m_admissions = reg.counter(
+            "cache_admissions_total", "commit-time admission decisions",
+            labels=("tenant", "decision"))
+        self._c_demotions = reg.counter(
+            "cache_demotions_total", "rows demoted hot -> warm").labels()
+        self._c_evictions = reg.counter(
+            "cache_evictions_total", "host response strings freed").labels()
+        self._c_rebuilds = reg.counter(
+            "cache_rebuilds_total",
+            "IVF re-clusters completed (published or inline)").labels()
+        self._c_shadow = reg.counter(
+            "cache_shadow_rebuilds_total", "shadow builds started").labels()
 
         # double-buffer state: the shadow thread re-clusters a snapshot;
         # the host publishes (atomic _replace of the index leaves) from
@@ -261,6 +354,7 @@ class CacheService:
         response resolution, admission pre-decision, miss coalescing
         (``coalesce=False`` skips the O(misses²) grouping when the
         caller won't use it — the legacy lookup shim does)."""
+        t0 = time.perf_counter()
         embs = jnp.asarray(request.embeddings)
         qt = request.tenants
         thr = self.policies.thresholds_for(qt)
@@ -271,36 +365,42 @@ class CacheService:
         scores = np.asarray(res.scores[:, 0])
         vids = np.asarray(res.value_ids[:, 0]).astype(np.int64)
         hot_hit = np.asarray(res.hot_hit)
-        self._counters["plans"] += 1
-        self._counters["lookups"] += len(hit)
-        self._counters["hot_hits"] += int(hot_hit.sum())
-        self._counters["warm_hits"] += int((hit & ~hot_hit).sum())
+        self._n_plans += 1
+        self._c_plans.inc()
+        self._c_rows.inc(len(hit))
+        self._c_hot_hits.inc(int(hot_hit.sum()))
+        self._c_warm_hits.inc(int((hit & ~hot_hit).sum()))
         responses = [self.responses.get(int(v)) if h else None
                      for h, v in zip(hit, vids)]
         admit = self.policies.pre_decision(qt, scores, hit)
         if self.feedback is not None:
             self.feedback.observe_plan(hit)
+        if self.telemetry.health is not None:
+            self.telemetry.health.observe_plan(qt, hit)
+        leader = coalesce_misses(request.embeddings, hit, qt, thr) \
+            if coalesce else ungrouped_misses(hit)
+        wall = time.perf_counter() - t0
+        self._stage_h.observe(wall, stage="plan", tenant=tenant_label(qt))
         return CachePlan(
             request=request, hit=hit, scores=scores,
             value_ids=np.where(hit, vids, -1), responses=responses,
-            admit=admit,
-            miss_leader=coalesce_misses(request.embeddings, hit, qt, thr)
-            if coalesce else ungrouped_misses(hit),
+            admit=admit, miss_leader=leader,
             epoch=self._epoch,
             margins=np.asarray(thr, np.float32) - scores,
-            top_value_ids=vids)
+            top_value_ids=vids, plan_wall_s=wall)
 
     def commit(self, plan: CachePlan,
                responses: Sequence[Optional[str]]) -> CommitReceipt:
         """Write side: admit planned misses (fresh value ids — a stale
         plan can never resurrect an id freed since plan time), flush if
         over the watermark, GC reported evictions."""
-        self._counters["commits"] += 1
+        t0 = time.perf_counter()
+        self._c_commits.inc()
         if plan.epoch != self._epoch:
             # an evict_tenant landed between plan and commit; admission
             # stays safe because ids are fresh and strings are only
             # freed off device eviction reports
-            self._counters["stale_commits"] += 1
+            self._c_stale.inc()
         rows = plan.miss_rows()
         admit = plan.admit[rows]
         texts: List[Optional[str]] = [responses[i] for i in rows]
@@ -316,9 +416,17 @@ class CacheService:
             self.responses[self._next_vid] = texts[pos]
             self._next_vid += 1
         n_admit = int(admit.sum())
-        self._counters["inserts"] += n_admit
-        self._counters["admission_skips"] += int((~admit).sum())
-        evicted_before = self._counters["evictions"]
+        row_tenants = plan.request.tenants[rows]
+        for tid in np.unique(row_tenants):
+            m = row_tenants == tid
+            n_a = int(admit[m].sum())
+            if n_a:
+                self._m_admissions.inc(n_a, tenant=int(tid),
+                                       decision="admitted")
+            if int(m.sum()) - n_a:
+                self._m_admissions.inc(int(m.sum()) - n_a,
+                                       tenant=int(tid), decision="skipped")
+        evicted_before = self._n_evictions
         if len(rows):
             self.hot, evicted = self._insert(
                 self.hot, jnp.asarray(plan.request.embeddings[rows]),
@@ -326,21 +434,28 @@ class CacheService:
                 jnp.asarray(plan.request.tenants[rows]))
             self._gc(evicted)
             self._maybe_flush()
+        wall = time.perf_counter() - t0
+        self._stage_h.observe(wall, stage="commit",
+                              tenant=tenant_label(plan.request.tenants))
         return CommitReceipt(
             admitted=n_admit, skipped=int((~admit).sum()),
-            evicted=self._counters["evictions"] - evicted_before,
+            evicted=self._n_evictions - evicted_before,
             # a due policy refit is a maintenance obligation exactly
             # like a due rebuild: the pipeline discharges both with one
             # maintenance() call between batches
             rebuild_due=self._rebuild_due()
-            or (self.feedback is not None and self.feedback.refit_due()))
+            or (self.feedback is not None and self.feedback.refit_due()),
+            commit_wall_s=wall, trace_id=plan.request.trace_id)
 
     def maintenance(self, block: bool = False) -> MaintenanceReport:
         """Drive the double-buffered rebuild: publish a finished shadow
         index (atomic swap), start one if the backlog calls for it.
         ``block=True`` quiesces: it joins an in-flight build and never
         starts a new one, so the service returns with no rebuild
-        running."""
+        running.  This is the idle tick (DESIGN.md §10.3): the health
+        tracker drains here — per-tenant SLO gauges, occupancy and
+        rebuild-overlap accounting all publish off the hot path."""
+        t0 = time.perf_counter()
         published = started = False
         wall = 0.0
         if self._shadow_thread is not None and (
@@ -359,32 +474,109 @@ class CacheService:
             reports = self.policies.refit(self.feedback)
             refits_checked = len(reports)
             refits_applied = sum(r.applied for r in reports)
+            for rep in reports:
+                record_refit(self.telemetry.registry, rep)
+        reg = self.telemetry.registry
+        reg.gauge("cache_hot_occupancy",
+                  "hot-tier occupancy fraction").set(self.hot_occupancy)
+        reg.gauge("cache_warm_occupancy",
+                  "warm-ring occupancy fraction").set(self.warm_occupancy)
+        reg.gauge("cache_live_responses",
+                  "host response strings held").set(len(self.responses))
+        reg.gauge("cache_warm_backlog_rows",
+                  "rows appended since the published index (demotion "
+                  "pressure vs the tail window)").set(self._backlog())
+        if self.telemetry.health is not None:
+            self.telemetry.health.drain(reg)
+        host_wall = time.perf_counter() - t0
+        self._stage_h.observe(host_wall, stage="maintenance", tenant="-")
         return MaintenanceReport(
             rebuild_started=started, rebuild_published=published,
             rebuild_in_flight=self._shadow_thread is not None,
             rebuild_wall_s=wall,
-            refits_applied=refits_applied, refits_checked=refits_checked)
+            refits_applied=refits_applied, refits_checked=refits_checked,
+            wall_s=host_wall)
 
-    def stats(self) -> Dict[str, object]:
-        """One unified snapshot: lookup/hit/admission counters plus
-        rebuild accounting (count, in-flight flag, wall times) and,
-        with learned admission on, the feedback-loop state (event and
-        refit counters, per-tenant learned operating points)."""
-        out = {
-            **self._counters,
+    def stats_snapshot(self) -> ServiceStats:
+        """The typed stats surface (DESIGN.md §10.1): every count read
+        back from the telemetry registry.  With
+        ``telemetry=Telemetry.disabled()`` the counter-derived fields
+        read 0 — disabling telemetry trades the stats surface for zero
+        recording cost (the bench's overhead guard measures that gap).
+        """
+        reg = self.telemetry.registry
+        traffic = {
+            "plans": int(reg.value("cache_plans_total")),
+            "commits": int(reg.value("cache_commits_total")),
+            "stale_commits": int(reg.value("cache_stale_commits_total")),
+            "lookup_rows": int(reg.value("cache_lookup_rows_total")),
+            "hot_hits": int(reg.value("cache_hits_total", tier="hot")),
+            "warm_hits": int(reg.value("cache_hits_total", tier="warm")),
+        }
+        admission = {
+            "admitted": int(reg.value("cache_admissions_total",
+                                      decision="admitted")),
+            "skipped": int(reg.value("cache_admissions_total",
+                                     decision="skipped")),
+        }
+        tiers_d = {
             "hot_occupancy": self.hot_occupancy,
             "warm_occupancy": self.warm_occupancy,
+            "demotions": int(reg.value("cache_demotions_total")),
+            "evictions": self._n_evictions,
             "live_responses": len(self.responses),
-            "rebuild_in_flight": self._shadow_thread is not None,
-            "last_rebuild_s": self._last_rebuild_s,
-            "rebuild_total_s": self._rebuild_total_s,
             "warm_shards": self.warm_shards,
             "warm_dtype": self.warm_dtype,
         }
+        rebuild = {
+            "rebuilds": int(reg.value("cache_rebuilds_total")),
+            "shadow_started": int(
+                reg.value("cache_shadow_rebuilds_total")),
+            "in_flight": self._shadow_thread is not None,
+            "last_wall_s": self._last_rebuild_s,
+            "total_wall_s": self._rebuild_total_s,
+        }
+        learning = None
         if self.feedback is not None:
-            out.update(self.feedback.state())
-            out["learned_policies"] = self.policies.learned_state()
-        return out
+            learning = dict(self.feedback.state())
+            learning["learned_policies"] = self.policies.learned_state()
+        health = self.telemetry.health.snapshot() \
+            if self.telemetry.health is not None else None
+        return ServiceStats(schema=SCHEMA, traffic=traffic,
+                            admission=admission, tiers=tiers_d,
+                            rebuild=rebuild, learning=learning,
+                            health=health)
+
+    def stats(self) -> Dict[str, object]:
+        """Deprecated flat snapshot (one release): the pre-§10 key set,
+        now derived from ``stats_snapshot()``.  Key *access* through
+        the returned view warns; copying/merging it does not."""
+        s = self.stats_snapshot()
+        flat = {
+            "lookups": s.traffic["lookup_rows"],
+            "hot_hits": s.traffic["hot_hits"],
+            "warm_hits": s.traffic["warm_hits"],
+            "inserts": s.admission["admitted"],
+            "admission_skips": s.admission["skipped"],
+            "demotions": s.tiers["demotions"],
+            "rebuilds": s.rebuild["rebuilds"],
+            "bg_rebuilds": s.rebuild["shadow_started"],
+            "evictions": s.tiers["evictions"],
+            "plans": s.traffic["plans"],
+            "commits": s.traffic["commits"],
+            "stale_commits": s.traffic["stale_commits"],
+            "hot_occupancy": s.tiers["hot_occupancy"],
+            "warm_occupancy": s.tiers["warm_occupancy"],
+            "live_responses": s.tiers["live_responses"],
+            "rebuild_in_flight": s.rebuild["in_flight"],
+            "last_rebuild_s": s.rebuild["last_wall_s"],
+            "rebuild_total_s": s.rebuild["total_wall_s"],
+            "warm_shards": s.tiers["warm_shards"],
+            "warm_dtype": s.tiers["warm_dtype"],
+        }
+        if s.learning is not None:
+            flat.update(s.learning)
+        return LegacyStatsView(flat)
 
     # ------------------------------------------------------------------
     # legacy serving surface (deprecated shims over plan/commit)
@@ -459,6 +651,9 @@ class CacheService:
                 score = float(plan.scores[row])
             self.feedback.observe(int(tenants[row]), score, dup,
                                   bool(admit[pos]))
+            if self.telemetry.health is not None:
+                self.telemetry.health.observe_admission(
+                    int(tenants[row]), dup, bool(admit[pos]))
 
     def _gc(self, evicted) -> int:
         """Free response strings whose ids a device op reported evicted."""
@@ -467,7 +662,8 @@ class CacheService:
         for v in ids[ids >= 0]:
             if self.responses.pop(int(v), None) is not None:
                 n += 1
-        self._counters["evictions"] += n
+        self._n_evictions += n
+        self._c_evictions.inc(n)
         return n
 
     def _backlog(self) -> int:
@@ -510,7 +706,11 @@ class CacheService:
         self._shadow_thread = threading.Thread(
             target=run, name="warm-ivf-rebuild", daemon=True)
         self._shadow_thread.start()
-        self._counters["bg_rebuilds"] += 1
+        self._c_shadow.inc()
+        if self.telemetry.health is not None:
+            # overlap accounting (§10.3): plans served between here and
+            # the publish ran against the pre-snapshot index
+            self.telemetry.health.observe_rebuild_start(self._n_plans)
 
     def _publish_shadow(self) -> float:
         """Join the shadow thread and atomically swap its index in.
@@ -522,6 +722,7 @@ class CacheService:
         the stale inverted lists).
         """
         assert self._shadow_thread is not None
+        t0 = time.perf_counter()
         self._shadow_thread.join()
         self._shadow_thread = None
         err = self._shadow_box.get("error")
@@ -529,10 +730,16 @@ class CacheService:
             raise RuntimeError("background IVF rebuild failed") from err
         shadow = self._shadow_box["warm"]
         self.warm = tiers.warm_publish_index(self.warm, shadow)
+        # the stall the serve loop actually felt: join wait + swap —
+        # near zero when the build finished before the idle tick
+        stall = time.perf_counter() - t0
         wall = float(self._shadow_box["wall"])
         self._last_rebuild_s = wall
         self._rebuild_total_s += wall
-        self._counters["rebuilds"] += 1
+        self._c_rebuilds.inc()
+        if self.telemetry.health is not None:
+            self.telemetry.health.observe_rebuild_publish(
+                self._n_plans, stall)
         return wall
 
     def _rebuild_inline(self) -> None:
@@ -540,13 +747,13 @@ class CacheService:
         self.warm = jax.block_until_ready(self._rebuild(self.warm))
         self._last_rebuild_s = time.perf_counter() - t0
         self._rebuild_total_s += self._last_rebuild_s
-        self._counters["rebuilds"] += 1
+        self._c_rebuilds.inc()
 
     def _do_flush(self, rebuild: bool) -> None:
         self.hot, dem = self._demote(self.hot)
         self.warm, evicted = self._append(self.warm, dem)
         self._gc(evicted)
-        self._counters["demotions"] += int(np.asarray(dem.mask).sum())
+        self._c_demotions.inc(int(np.asarray(dem.mask).sum()))
         # the tail window only covers the last `tail` ring writes; a
         # rebuild is forced before the unindexed backlog outgrows it,
         # else demoted rows would silently fall out of reach

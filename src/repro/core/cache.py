@@ -22,6 +22,7 @@ backend behind the same protocol.
 """
 from __future__ import annotations
 
+import time
 import warnings
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -34,11 +35,13 @@ from repro.cache_service.protocol import (
     MaintenanceReport, coalesce_misses, ungrouped_misses,
 )
 from repro.core import store as store_lib
+from repro.obs import Telemetry
 
 
 class SemanticCache:
     def __init__(self, capacity: int, dim: int, threshold: float = 0.85,
-                 topk: int = 1, ttl: Optional[int] = None):
+                 topk: int = 1, ttl: Optional[int] = None,
+                 telemetry: Optional[Telemetry] = None):
         self.capacity = capacity
         self.dim = dim
         self.threshold = threshold
@@ -46,8 +49,24 @@ class SemanticCache:
         self.ttl = ttl
         self.state = store_lib.init_store(capacity, dim)
         self.responses: List[str] = []
-        self._counters = {"lookups": 0, "hits": 0, "inserts": 0,
-                          "plans": 0, "commits": 0}
+        # counters live on the telemetry registry (DESIGN.md §10.1);
+        # the single-tenant flat store labels every stage tenant "0"
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        reg = self.telemetry.registry
+        self._stage_h = self.telemetry.stage_histogram()
+        self._c_plans = reg.counter(
+            "cache_plans_total", "plan() calls").labels()
+        self._c_commits = reg.counter(
+            "cache_commits_total", "commit() calls").labels()
+        self._c_rows = reg.counter(
+            "cache_lookup_rows_total", "rows planned").labels()
+        self._c_hits = reg.counter(
+            "cache_hits_total", "plan-time hits by tier",
+            labels=("tier",)).labels(tier="flat")
+        self._c_inserts = reg.counter(
+            "cache_admissions_total", "commit-time admission decisions",
+            labels=("tenant", "decision")).labels(tenant=0,
+                                                  decision="admitted")
         self._query = jax.jit(
             lambda st, q: store_lib.query(st, q, threshold, topk))
         self._insert = jax.jit(store_lib.insert_batch)
@@ -69,6 +88,7 @@ class SemanticCache:
         if np.any(request.tenants != 0):
             raise ValueError("SemanticCache is single-tenant; route "
                              "multi-tenant traffic to CacheService")
+        t0 = time.perf_counter()
         if self._evict is not None:
             self.state = self._evict(self.state)
         res = self._query(self.state, jnp.asarray(request.embeddings))
@@ -78,24 +98,29 @@ class SemanticCache:
         vids = np.asarray(res.value_ids[:, 0]).astype(np.int64)
         values = [self.responses[v] if h and 0 <= v < len(self.responses)
                   else None for h, v in zip(hit, vids)]
-        self._counters["plans"] += 1
-        self._counters["lookups"] += len(hit)
-        self._counters["hits"] += int(hit.sum())
+        self._c_plans.inc()
+        self._c_rows.inc(len(hit))
+        self._c_hits.inc(int(hit.sum()))
         thr = np.full(len(hit), self.threshold, np.float32)
+        leader = coalesce_misses(request.embeddings, hit,
+                                 request.tenants, thr) \
+            if coalesce else ungrouped_misses(hit)
+        wall = time.perf_counter() - t0
+        self._stage_h.observe(wall, stage="plan", tenant="0")
         return CachePlan(
             request=request, hit=hit, scores=scores,
             value_ids=np.where(hit, vids, -1), responses=values,
             admit=~hit,                       # no admission policy: cache
-            miss_leader=coalesce_misses(      # every generated miss
-                request.embeddings, hit, request.tenants, thr)
-            if coalesce else ungrouped_misses(hit),
-            epoch=0, margins=thr - scores, top_value_ids=vids)
+            miss_leader=leader,               # every generated miss
+            epoch=0, margins=thr - scores, top_value_ids=vids,
+            plan_wall_s=wall)
 
     def commit(self, plan: CachePlan,
                responses: Sequence[Optional[str]]) -> CommitReceipt:
         """Write side: append admitted miss responses and insert their
         embeddings (value ids are list positions, always fresh)."""
-        self._counters["commits"] += 1
+        t0 = time.perf_counter()
+        self._c_commits.inc()
         rows = plan.miss_rows()
         rows = rows[plan.admit[rows]]
         texts = []
@@ -109,19 +134,38 @@ class SemanticCache:
             vids = jnp.arange(base, base + len(rows), dtype=jnp.int32)
             self.state = self._insert(
                 self.state, jnp.asarray(plan.request.embeddings[rows]), vids)
-        self._counters["inserts"] += len(rows)
+        self._c_inserts.inc(len(rows))
+        wall = time.perf_counter() - t0
+        self._stage_h.observe(wall, stage="commit", tenant="0")
         return CommitReceipt(admitted=len(rows),
                              skipped=int(len(plan.miss_rows()) - len(rows)),
-                             evicted=0)
+                             evicted=0, commit_wall_s=wall,
+                             trace_id=plan.request.trace_id)
 
     def maintenance(self, block: bool = False) -> MaintenanceReport:
         """Flat store: no background obligations (TTL sweeps run at
-        plan time)."""
-        return MaintenanceReport()
+        plan time); still observes the stage so the flat backend's
+        span/stage coverage matches the tiered one."""
+        t0 = time.perf_counter()
+        reg = self.telemetry.registry
+        reg.gauge("cache_occupancy",
+                  "flat-store occupancy fraction").set(self.occupancy)
+        wall = time.perf_counter() - t0
+        self._stage_h.observe(wall, stage="maintenance", tenant="-")
+        return MaintenanceReport(wall_s=wall)
 
     def stats(self) -> Dict[str, object]:
-        return {**self._counters, "occupancy": self.occupancy,
-                "live_responses": len(self.responses)}
+        reg = self.telemetry.registry
+        return {
+            "lookups": int(reg.value("cache_lookup_rows_total")),
+            "hits": int(reg.value("cache_hits_total", tier="flat")),
+            "inserts": int(reg.value("cache_admissions_total",
+                                     decision="admitted")),
+            "plans": int(reg.value("cache_plans_total")),
+            "commits": int(reg.value("cache_commits_total")),
+            "occupancy": self.occupancy,
+            "live_responses": len(self.responses),
+        }
 
     # ------------------------------------------------------------------
     # legacy surface (deprecated shims over plan/commit)

@@ -10,6 +10,12 @@ mesh (local IVF probe per shard + tiny merge, DESIGN.md §8),
 ``--warm-dtype int8`` scans the warm panel from its quantized form,
 and ``--learned-admission`` turns the static per-tenant operating
 points into the online feedback loop (DESIGN.md §9).
+
+``--metrics-json PATH`` dumps the telemetry registry (DESIGN.md §10)
+as JSON-lines — one meta line then one line per metric series — after
+the run; ``--metrics-interval N`` additionally appends a snapshot
+every N batches, so the file holds a time series.  Validate with
+``python -m repro.obs.export --validate PATH``.
 """
 from __future__ import annotations
 
@@ -23,6 +29,7 @@ from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core import EmbedderTrainer, FinetuneConfig, SemanticCache
 from repro.data import HashTokenizer, make_pair_dataset, make_query_stream
 from repro.models import init_lm, split
+from repro.obs import Telemetry, write_jsonl
 from repro.serving import CachedLLMService, ServeEngine
 
 
@@ -50,7 +57,18 @@ def main():
                     help="learn per-tenant thresholds/admission margins "
                          "online from observed duplicate rates "
                          "(DESIGN.md §9; implies --tiered)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="write the telemetry registry snapshot as "
+                         "JSON-lines after the run (DESIGN.md §10.1; "
+                         "requires --cache)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    metavar="N",
+                    help="with --metrics-json: also append a snapshot "
+                         "every N batches (0 = final snapshot only)")
     args = ap.parse_args()
+    if args.metrics_json and not args.cache:
+        ap.error("--metrics-json instruments the cached serving path; "
+                 "add --cache")
     if args.cache_shards or args.warm_dtype != "float32" \
             or args.learned_admission:
         args.tiered = True
@@ -79,6 +97,7 @@ def main():
     trainer = EmbedderTrainer(enc_cfg, FinetuneConfig(
         epochs=1, batch_size=32, lr=5e-4, max_len=24))
     trainer.fit(make_pair_dataset("medical", 512, seed=0), tok)
+    telemetry = Telemetry()
     if args.tiered:
         from repro.cache_service import CacheService
         from repro.launch.mesh import make_cache_mesh
@@ -88,7 +107,8 @@ def main():
                              warm_capacity=4096, n_clusters=32, bucket=256,
                              threshold=args.threshold, mesh=mesh,
                              warm_dtype=args.warm_dtype,
-                             learned_admission=args.learned_admission)
+                             learned_admission=args.learned_admission,
+                             telemetry=telemetry)
         caps = cache.capabilities()
         print(f"tiered cache: warm shards "
               f"{cache.warm_shards if caps.warm_sharded else 0}, "
@@ -96,17 +116,36 @@ def main():
               f"{'on' if caps.learned_admission else 'off'}")
     else:
         cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
-                              threshold=args.threshold)
+                              threshold=args.threshold, telemetry=telemetry)
     svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
                            max_new_tokens=args.max_new_tokens)
+
+    def dump_metrics(batch_idx, append):
+        write_jsonl(args.metrics_json, telemetry.registry.snapshot(),
+                    meta={"arch": cfg.name, "batch": batch_idx,
+                          "tiered": args.tiered}, append=append)
+
     stream = [q.text for q in make_query_stream("medical", args.requests,
                                                 seed=1, repeat_frac=0.4)]
     t0 = time.perf_counter()
+    wrote = False
     for i in range(0, len(stream), args.batch):
         svc.handle(stream[i:i + args.batch])
+        b = i // args.batch
+        if args.metrics_json and args.metrics_interval \
+                and (b + 1) % args.metrics_interval == 0:
+            dump_metrics(b, append=wrote)
+            wrote = True
+    cache.maintenance(block=True)     # final idle tick: drain SLO gauges
     print(f"{args.requests} requests in {time.perf_counter() - t0:.1f}s; "
           f"hit rate {svc.hit_rate:.1%} "
-          f"({svc.stats()['hits']} LLM calls saved)")
+          f"({int(svc.stats()['hits'])} LLM calls saved)")
+    stage_h = telemetry.stage_histogram()
+    for stage in ("embed", "plan", "generate", "commit", "maintenance"):
+        agg = stage_h.aggregate(stage=stage)
+        if agg.count:
+            print(f"  stage {stage:<12} p50 {agg.quantile(0.5) * 1e3:7.2f} "
+                  f"ms  mean {agg.mean * 1e3:7.2f} ms  x{agg.count}")
     if args.learned_admission:
         st = svc.stats()
         print(f"learned admission: {st['refits_applied']} refits from "
@@ -114,6 +153,9 @@ def main():
               f"({st['duplicate_events']} duplicates, "
               f"{st['wasted_admissions']} wasted admissions); "
               f"policies {st['learned_policies']}")
+    if args.metrics_json:
+        dump_metrics(args.requests // args.batch, append=wrote)
+        print(f"metrics -> {args.metrics_json}")
 
 
 if __name__ == "__main__":

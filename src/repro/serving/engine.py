@@ -9,6 +9,7 @@ front of this engine, which is exactly the deployment the paper targets
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass
 from typing import Dict, List, Optional
 
@@ -20,6 +21,8 @@ from repro.cache_service.protocol import CacheBackend, CacheRequest
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import HashTokenizer
 from repro.models import decode_step, prefill
+from repro.obs import Telemetry
+from repro.obs.registry import tenant_label
 from repro.serving.frontend import stub_frontend_embeds
 
 
@@ -94,12 +97,21 @@ class CachedLLMService:
     def __init__(self, embed_fn, cache: CacheBackend,
                  engine: Optional[ServeEngine], tokenizer: HashTokenizer,
                  max_query_len: int = 32, max_new_tokens: int = 16,
-                 fused: Optional[bool] = None, coalesce: bool = True):
+                 fused: Optional[bool] = None, coalesce: bool = True,
+                 telemetry: Optional[Telemetry] = None):
         """``fused`` (None = leave the backend's choice) selects the
         cache's cascade execution path — the fused Pallas lookup kernel
         vs the four-op composition — when the backend's capabilities
         advertise it; ``coalesce=False`` generates per miss row even
-        for near-identical queries (the legacy behaviour)."""
+        for near-identical queries (the legacy behaviour).
+
+        ``telemetry`` (None = adopt the backend's, so the whole stack
+        shares one registry/tracer) wires the §10 spans and serving
+        counters; each ``handle`` call produces one span tree rooted at
+        ``request`` with embed/plan/generate/commit(/maintenance)
+        children, and the engine observes the embed and generate stages
+        into the shared ``stage_latency_seconds`` histogram (plan/
+        commit/maintenance are observed by the backend itself)."""
         self.embed_fn = embed_fn          # list[str] -> (B, D) unit vectors
         if not isinstance(cache, CacheBackend):
             raise TypeError(
@@ -113,9 +125,27 @@ class CachedLLMService:
         self.max_query_len = max_query_len
         self.max_new_tokens = max_new_tokens
         self.coalesce = coalesce
-        self._counters = {"requests": 0, "hits": 0, "misses": 0,
-                          "generations": 0, "coalesced_misses": 0,
-                          "maintenance_calls": 0}
+        self.telemetry = (telemetry
+                          or getattr(cache, "telemetry", None)
+                          or Telemetry())
+        reg = self.telemetry.registry
+        self._stage_h = self.telemetry.stage_histogram()
+        self._m_requests = reg.counter(
+            "serve_requests_total", "queries handled", labels=("tenant",))
+        self._m_hits = reg.counter(
+            "serve_hits_total", "queries served from cache",
+            labels=("tenant",))
+        self._m_misses = reg.counter(
+            "serve_misses_total", "queries that missed", labels=("tenant",))
+        self._c_generations = reg.counter(
+            "serve_generations_total", "LLM generations (group leaders)"
+            ).labels()
+        self._c_coalesced = reg.counter(
+            "serve_coalesced_misses_total",
+            "misses served by another row's generation").labels()
+        self._c_maintenance = reg.counter(
+            "serve_maintenance_calls_total",
+            "between-batch maintenance() calls").labels()
         self._trace = itertools.count()
         if fused is not None:
             if self.caps.fused_lookup:
@@ -139,33 +169,51 @@ class CachedLLMService:
                 f"cache backend {type(self.cache).__name__} is not "
                 "tenant-aware; serving tenant "
                 f"{tenant} through it would break isolation")
-        embs = self.embed_fn(queries)
-        plan = self.cache.plan(
-            CacheRequest.build(embs, tenant, trace_id=next(self._trace)),
-            coalesce=self.coalesce)
+        tracer = self.telemetry.tracer
+        lab = tenant_label(np.asarray(tenant))
+        trace_id = next(self._trace)
+        with tracer.span("request", tenant=lab, trace_id=trace_id,
+                         n=len(queries)):
+            t0 = time.perf_counter()
+            with tracer.span("embed", tenant=lab):
+                embs = self.embed_fn(queries)
+            self._stage_h.observe(time.perf_counter() - t0,
+                                  stage="embed", tenant=lab)
+            with tracer.span("plan", tenant=lab):
+                plan = self.cache.plan(
+                    CacheRequest.build(embs, tenant, trace_id=trace_id),
+                    coalesce=self.coalesce)
 
-        # one generation per miss-group leader serves the whole group
-        # (with coalesce=False the plan's map degenerates to one group
-        # per miss row, so this needs no special-casing)
-        leaders = plan.leader_rows()
-        answers = dict(zip(leaders,
-                           self._llm_answer([queries[i] for i in leaders])
-                           if leaders else []))
-        responses: List[Optional[str]] = [None] * len(queries)
-        for i in plan.miss_rows():
-            responses[int(i)] = answers[int(plan.miss_leader[i])]
+            # one generation per miss-group leader serves the whole
+            # group (with coalesce=False the plan's map degenerates to
+            # one group per miss row, so this needs no special-casing)
+            leaders = plan.leader_rows()
+            t0 = time.perf_counter()
+            with tracer.span("generate", tenant=lab,
+                             n_leaders=len(leaders)):
+                answers = dict(zip(
+                    leaders,
+                    self._llm_answer([queries[i] for i in leaders])
+                    if leaders else []))
+            self._stage_h.observe(time.perf_counter() - t0,
+                                  stage="generate", tenant=lab)
+            responses: List[Optional[str]] = [None] * len(queries)
+            for i in plan.miss_rows():
+                responses[int(i)] = answers[int(plan.miss_leader[i])]
 
-        receipt = self.cache.commit(plan, responses)
-        self._counters["requests"] += len(queries)
-        self._counters["hits"] += int(plan.hit.sum())
-        self._counters["misses"] += int((~plan.hit).sum())
-        self._counters["generations"] += len(leaders)
-        self._counters["coalesced_misses"] += plan.n_coalesced
-        if receipt.rebuild_due:
-            # between-batch maintenance: publish/start the background
-            # IVF rebuild without stalling any request
-            self.cache.maintenance()
-            self._counters["maintenance_calls"] += 1
+            with tracer.span("commit", tenant=lab):
+                receipt = self.cache.commit(plan, responses)
+            self._m_requests.inc(len(queries), tenant=lab)
+            self._m_hits.inc(int(plan.hit.sum()), tenant=lab)
+            self._m_misses.inc(int((~plan.hit).sum()), tenant=lab)
+            self._c_generations.inc(len(leaders))
+            self._c_coalesced.inc(plan.n_coalesced)
+            if receipt.rebuild_due:
+                # between-batch maintenance: publish/start the
+                # background IVF rebuild without stalling any request
+                with tracer.span("maintenance", tenant=lab):
+                    self.cache.maintenance()
+                self._c_maintenance.inc()
 
         out: List[Optional[ServedRequest]] = [None] * len(queries)
         for i, q in enumerate(queries):
@@ -180,11 +228,23 @@ class CachedLLMService:
         """Unified telemetry snapshot: the backend's counters (lookups,
         hit tiers, admissions, rebuild timings) overlaid with the
         serving counters — serving keys win collisions (a flat
-        backend's plan-level "hits" must not shadow the pipeline's)."""
-        return {**self.cache.stats(), **self._counters,
+        backend's plan-level "hits" must not shadow the pipeline's).
+        All counts are read back from the shared registry."""
+        reg = self.telemetry.registry
+        return {**self.cache.stats(),
+                "requests": int(reg.value("serve_requests_total")),
+                "hits": int(reg.value("serve_hits_total")),
+                "misses": int(reg.value("serve_misses_total")),
+                "generations": int(reg.value("serve_generations_total")),
+                "coalesced_misses": int(
+                    reg.value("serve_coalesced_misses_total")),
+                "maintenance_calls": int(
+                    reg.value("serve_maintenance_calls_total")),
                 "hit_rate": self.hit_rate}
 
     @property
     def hit_rate(self) -> float:
-        n = self._counters["hits"] + self._counters["misses"]
-        return self._counters["hits"] / n if n else 0.0
+        reg = self.telemetry.registry
+        hits = reg.value("serve_hits_total")
+        n = hits + reg.value("serve_misses_total")
+        return hits / n if n else 0.0

@@ -18,6 +18,7 @@ slot (that is the cost model of the paper).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -28,6 +29,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data.tokenizer import EOS
 from repro.models import decode_step, init_lm_state, prefill
+from repro.obs import Telemetry
 
 
 @dataclass
@@ -58,7 +60,8 @@ class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params, *, n_slots: int = 4,
                  max_len: int = 256, prompt_len: int = 32,
                  maintenance: Optional[Callable[[], object]] = None,
-                 maintenance_max_interval: int = 64):
+                 maintenance_max_interval: int = 64,
+                 telemetry: Optional[Telemetry] = None):
         """``maintenance`` (e.g. a cache backend's bound
         ``maintenance()``) is invoked on *idle* engine ticks — ticks
         where the pending queue is empty (every waiting request has a
@@ -67,7 +70,14 @@ class ContinuousBatcher:
         the real inter-batch gaps instead of stealing host time from
         every saturated decode step.  Starvation is bounded: under
         sustained full load the hook still runs at least every
-        ``maintenance_max_interval`` ticks."""
+        ``maintenance_max_interval`` ticks.
+
+        Maintenance accounting lives on the telemetry registry
+        (``batcher_maintenance_total{outcome=run|skip}``, DESIGN.md
+        §10.1); ``maintenance_runs``/``maintenance_skips`` remain as
+        read-only properties over those counters.  The batcher also
+        records queue depth / slot occupancy gauges per tick and an
+        admission-latency histogram (submit -> slot)."""
         if cfg.is_encoder:
             raise ValueError("decoder configs only")
         self.cfg = cfg
@@ -77,10 +87,23 @@ class ContinuousBatcher:
         self.prompt_len = prompt_len
         self.maintenance = maintenance
         self.maintenance_max_interval = max(maintenance_max_interval, 1)
-        self.maintenance_runs = 0
-        self.maintenance_skips = 0
         self.last_maintenance: Optional[object] = None
         self._ticks_since_maintenance = 0
+        self.telemetry = telemetry if telemetry is not None else Telemetry()
+        reg = self.telemetry.registry
+        m_maint = reg.counter(
+            "batcher_maintenance_total",
+            "idle-tick maintenance hook outcomes", labels=("outcome",))
+        self._c_maint_run = m_maint.labels(outcome="run")
+        self._c_maint_skip = m_maint.labels(outcome="skip")
+        self._g_queue = reg.gauge(
+            "batcher_queue_depth", "requests waiting for a slot").labels()
+        self._g_occupancy = reg.gauge(
+            "batcher_occupancy", "active slot fraction").labels()
+        self._h_admission = reg.histogram(
+            "batcher_admission_latency_seconds",
+            "submit -> slot-admission wait").labels()
+        self._submit_s: Dict[int, float] = {}
         self.pool = init_lm_state(cfg, n_slots, max_len)
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.pending: List[Request] = []
@@ -96,12 +119,16 @@ class ContinuousBatcher:
 
     # ------------------------------------------------------------------
     def submit(self, req: Request) -> None:
+        self._submit_s[req.uid] = time.perf_counter()
         self.pending.append(req)
 
     def _admit(self) -> None:
         for slot in range(self.n_slots):
             if self.slot_req[slot] is None and self.pending:
                 req = self.pending.pop(0)
+                t_sub = self._submit_s.pop(req.uid, None)
+                if t_sub is not None:
+                    self._h_admission.observe(time.perf_counter() - t_sub)
                 toks = np.full((1, self.prompt_len), EOS, np.int32)
                 n = min(len(req.prompt), self.prompt_len)
                 toks[0, :n] = req.prompt[:n]
@@ -152,11 +179,13 @@ class ContinuousBatcher:
                 # keep the hook's report (e.g. a MaintenanceReport with
                 # rebuild/refit outcomes) inspectable per tick
                 self.last_maintenance = self.maintenance()
-                self.maintenance_runs += 1
+                self._c_maint_run.inc()
                 self._ticks_since_maintenance = 0
             else:
-                self.maintenance_skips += 1
+                self._c_maint_skip.inc()
         self.ticks += 1
+        self._g_queue.set(len(self.pending))
+        self._g_occupancy.set(self.occupancy)
         return len(active)
 
     def run(self, max_ticks: int = 10_000) -> Dict[int, Request]:
@@ -169,3 +198,25 @@ class ContinuousBatcher:
     def occupancy(self) -> float:
         n = sum(r is not None for r in self.slot_req)
         return n / self.n_slots
+
+    @property
+    def maintenance_runs(self) -> int:
+        """Registry-backed (batcher_maintenance_total{outcome=run})."""
+        return self._c_maint_run.value
+
+    @property
+    def maintenance_skips(self) -> int:
+        """Registry-backed (batcher_maintenance_total{outcome=skip})."""
+        return self._c_maint_skip.value
+
+    def stats(self) -> Dict[str, object]:
+        """Batcher snapshot for the serve example / launcher."""
+        return {
+            "ticks": self.ticks,
+            "maintenance_runs": self.maintenance_runs,
+            "maintenance_skips": self.maintenance_skips,
+            "queue_depth": len(self.pending),
+            "occupancy": self.occupancy,
+            "finished": len(self.finished),
+            "admission_wait_p50_s": self._h_admission.quantile(0.5),
+        }
