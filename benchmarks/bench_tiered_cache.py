@@ -52,6 +52,18 @@ frozen at the static operating point, one with the online feedback
 loop (DESIGN.md §9) — and hard-assert the loop's claim: duplicate
 admissions drop, probe recall holds, the false-hit budget holds.
 
+The ``embedder_frozen`` / ``embedder_refreshed`` rows do the same for
+the online embedder refresh (DESIGN.md §11): two services share one
+general-purpose (quora-pretrained) compact encoder; one runs the
+maintenance-driven refresh cycle — contrastive fine-tune on pooled
+serving pairs with synthetic backfill, eval gate, shadow re-embed,
+versioned hot swap with threshold recalibration — between two phases
+of a drifting-topic medical stream.  Hard asserts: the refreshed
+service beats the frozen one on
+both hit precision and hit recall over the drifted phase, the publish
+happened (``embed_version >= 1``), and overlap recall through the hot
+swap is exactly 1.0 (no committed entry is lost by the re-embed).
+
 Rebuild-stall rows (``serve_inline_rebuild`` / ``serve_bg_rebuild``)
 time a serving loop — plan over the live CacheService each tick — in
 which one tick triggers the demotion flush + IVF re-cluster: inline
@@ -87,9 +99,14 @@ import numpy as np
 
 from benchmarks.common import fmt_derived, timed
 from repro.cache_service import (
-    CacheRequest, CacheService, FeedbackConfig, tiers,
+    CacheRequest, CacheService, EmbedderRefreshPolicy, FeedbackConfig,
+    tiers,
 )
+from repro.configs import get_config
+from repro.core import EmbedderTrainer, FinetuneConfig
 from repro.core import store as store_lib
+from repro.data import HashTokenizer, make_pair_dataset
+from repro.data.corpora import DOMAINS, render_query
 from repro.launch.mesh import make_host_mesh
 from repro.obs import Telemetry
 from repro.obs.health import check_overhead_budget
@@ -559,6 +576,172 @@ def _bench_admission_drift():
     assert learned["refits"] >= 1, "no refit was ever applied"
 
 
+def _topic_stream(rng, n_batches, batch, pool, seen, repeat):
+    """Batches of rendered medical queries over a pool of
+    (entity, aspect) topics: each query is either a paraphrase of an
+    already-seen topic (probability ``repeat`` — a cacheable repeat)
+    or a novel topic drawn from ``pool``.  ``seen`` accumulates across
+    calls so a later phase keeps revisiting earlier topics."""
+    out = []
+    for _ in range(n_batches):
+        qs = []
+        for _ in range(batch):
+            if seen and rng.random() < repeat:
+                ent, asp = seen[int(rng.integers(len(seen)))]
+            else:
+                ent, asp = pool[int(rng.integers(len(pool)))]
+                if (ent, asp) not in seen:
+                    seen.append((ent, asp))
+            qs.append(render_query(rng, "medical", ent, asp))
+        out.append(qs)
+    return out
+
+
+def _bench_embedder_refresh():
+    """Frozen vs online-refreshed embedder on a drifting-topic stream
+    (DESIGN.md §11).
+
+    Both services share one general-purpose base embedder (the compact
+    encoder pre-trained on out-of-domain quora pairs — the paper's
+    general-purpose starting point) and the same serving threshold.
+    The stream serves medical-domain traffic in two phases: phase A
+    over one topic slice feeds the pair reservoir, then the refreshed
+    service runs one ``maintenance()`` refresh cycle — contrastive
+    fine-tune on pooled+synthetic pairs, eval gate, shadow re-embed,
+    versioned publish — before phase B drifts onto unseen topics.
+    Only phase B is measured.
+
+    Hits are scored against intent ground truth (the committed
+    response encodes the query's entity+aspect): a hit that serves the
+    right intent is a true positive, the wrong intent a false
+    positive, and a miss on an already-stored intent a false negative.
+    The refresh policy recalibrates at publish — the candidate scores
+    pairs on its own scale, so the swap also remaps the serving
+    threshold to the candidate's held-out operating point instead of
+    reusing the frozen scalar (``recalibrate=True``, DESIGN.md §11).
+    The rows carry the paper's core claim as hard asserts: the
+    domain-adapted embedder beats the general-purpose one on *both*
+    hit precision and hit recall, the publish actually happened
+    (``embed_version >= 1``), and every committed entry still hits
+    after the hot swap (``overlap_recall == 1.0`` — the re-embed
+    rewrote every stored key under the new encoder).
+    """
+    enc = get_config("modernbert-149m").reduced(vocab_size=2048)
+    tok = HashTokenizer(vocab_size=enc.vocab_size)
+    base_ft = FinetuneConfig(epochs=4, batch_size=32, max_len=24,
+                             lr=5e-4, margin=0.7)
+    base = EmbedderTrainer(enc, base_ft)
+    base.fit(make_pair_dataset("quora", 1024, seed=1), tok)
+    # the serving trainer's ft drives the refresh fit (§11): a longer
+    # schedule than the base, since the candidate must overcome the
+    # quora prior from a few hundred pooled+synthetic pairs
+    serve_ft = FinetuneConfig(epochs=8, batch_size=32, max_len=24,
+                              lr=5e-4, margin=0.7)
+
+    entities, aspects = DOMAINS["medical"]
+    topics = [(entities[i], aspects[i % len(aspects)])
+              for i in range(36)]
+    threshold = 0.9
+
+    results = {}
+    for mode in ("frozen", "refreshed"):
+        refreshed = mode == "refreshed"
+        # identical stream per mode: same rng -> same queries
+        rng = np.random.default_rng(SEED + 4)
+        seen = []
+        phase_a = _topic_stream(rng, 10, 16, topics[:12], seen, 0.5)
+        phase_b = _topic_stream(rng, 24, 16, topics[12:], seen, 0.6)
+        trainer = EmbedderTrainer(enc, serve_ft, params=base.params)
+        embed = trainer.make_embed_fn(tok)
+        pol = EmbedderRefreshPolicy(
+            min_pairs=32, min_class=4, refresh_interval=64,
+            synth_domain="medical", synth_min_pairs=768,
+            min_precision=0.6, min_recall=0.6, max_f1_regression=1.0,
+            recalibrate=True)
+        svc = CacheService(
+            dim=enc.d_model, hot_capacity=512, warm_capacity=1024,
+            n_clusters=16, bucket=128, n_probe=4, threshold=threshold,
+            admission_margin=0.02, seed=SEED,
+            embedder_trainer=trainer if refreshed else None,
+            embedder_tokenizer=tok if refreshed else None,
+            refresh_policy=pol if refreshed else None)
+
+        stored, committed = set(), {}
+        cnt = {"tp": 0, "fp": 0, "fn": 0}
+        lat = []
+
+        def serve(batches, measure):
+            for qs in batches:
+                texts = [q.text for q in qs]
+                t0 = time.perf_counter()
+                plan = svc.plan(CacheRequest.build(
+                    embed(texts), 0, texts=texts), coalesce=False)
+                svc.commit(plan, [
+                    None if h else f"ans:{q.entity}|{q.aspect}"
+                    for h, q in zip(plan.hit, qs)])
+                svc.maintenance()
+                if measure:
+                    lat.append(time.perf_counter() - t0)
+                for row, q in enumerate(qs):
+                    truth = f"ans:{q.entity}|{q.aspect}"
+                    if measure:
+                        if plan.hit[row]:
+                            right = plan.responses[row] == truth
+                            cnt["tp" if right else "fp"] += 1
+                        elif (q.entity, q.aspect) in stored:
+                            cnt["fn"] += 1
+                    if plan.admit[row] and not plan.hit[row]:
+                        stored.add((q.entity, q.aspect))
+                        committed[q.text] = truth
+
+        serve(phase_a, measure=False)
+        version, refresh_wall = 0, 0.0
+        if refreshed:
+            svc.maintenance()                 # trips the refresh start
+            rep = svc.maintenance(block=True)  # join + publish
+            version = rep.embed_version
+            refresh_wall = rep.refresh_wall_s
+        serve(phase_b, measure=True)
+        svc.maintenance(block=True)           # join any trailing cycle
+
+        # overlap recall: every committed entry must still hit through
+        # (and after) the hot swap — the shadow re-embed rewrote the
+        # stored keys under whichever encoder is now live
+        probe = sorted(committed)
+        probe_plan = svc.plan(CacheRequest.build(
+            embed(probe), 0, texts=probe), coalesce=False)
+        tp, fp, fn = cnt["tp"], cnt["fp"], cnt["fn"]
+        results[mode] = {
+            "queries": 24 * 16, "tp": tp, "fp": fp, "fn": fn,
+            "hit_precision": round(tp / max(tp + fp, 1), 4),
+            "hit_recall": round(tp / max(tp + fn, 1), 4),
+            "overlap_recall": float(probe_plan.hit.mean()),
+            "entries": len(probe),
+            "embed_version": int(version),
+            "threshold_final": round(
+                float(svc.policies.get(0).threshold), 4),
+            "refresh_wall_s": round(float(refresh_wall), 3),
+            "p50_us": float(np.percentile(np.asarray(lat) * 1e6, 50)),
+        }
+        yield f"tiered/embedder_{mode}", results[mode]["p50_us"], \
+            results[mode]
+
+    frozen, refr = results["frozen"], results["refreshed"]
+    # the §11 rows exist to back these claims
+    assert refr["embed_version"] >= 1, \
+        "the refresh cycle never published a new embedder version"
+    for mode, row in results.items():
+        assert row["overlap_recall"] == 1.0, \
+            f"{mode}: committed entries lost through the hot swap " \
+            f"(overlap recall {row['overlap_recall']})"
+    assert refr["hit_precision"] > frozen["hit_precision"], \
+        f"refreshed embedder did not improve hit precision " \
+        f"({refr['hit_precision']} vs {frozen['hit_precision']})"
+    assert refr["hit_recall"] > frozen["hit_recall"], \
+        f"refreshed embedder did not improve hit recall " \
+        f"({refr['hit_recall']} vs {frozen['hit_recall']})"
+
+
 def _bench_telemetry():
     """Per-stage latency rows from the §10 registry plus the overhead
     guard: the same serving tick with the registry/tracer live must
@@ -659,6 +842,10 @@ def bench_tiered_cache():
             yield name, us, fmt_derived(derived)
     # size-independent: learned-vs-fixed admission on a drifting stream
     for name, us, derived in _bench_admission_drift():
+        rows.append({"name": name, "us_per_call": us, **derived})
+        yield name, us, fmt_derived(derived)
+    # size-independent: frozen-vs-refreshed embedder on a topic drift
+    for name, us, derived in _bench_embedder_refresh():
         rows.append({"name": name, "us_per_call": us, **derived})
         yield name, us, fmt_derived(derived)
     # size-independent: §10 stage breakdown + telemetry overhead guard

@@ -17,7 +17,9 @@ round-robin batches over N isolated logical caches,
 --background-rebuild to double-buffer the warm IVF re-cluster off the
 hot path (DESIGN.md §7), --learned-admission to refit per-tenant
 thresholds/margins online from observed duplicate rates (DESIGN.md
-§9).  Requests flow through the typed plan/commit
+§9), --learned-embedder to fine-tune the embedder itself from pooled
+serving feedback and hot-swap it with a versioned shadow re-embed
+(DESIGN.md §11).  Requests flow through the typed plan/commit
 lifecycle (near-identical misses in a batch share one generation) and
 the summary prints the protocol's unified stats() snapshot.
 """
@@ -27,7 +29,7 @@ import time
 import jax
 import numpy as np
 
-from repro.cache_service import CacheService
+from repro.cache_service import CacheService, EmbedderRefreshPolicy
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core import EmbedderTrainer, FinetuneConfig, SemanticCache
 from repro.data import HashTokenizer, make_pair_dataset, make_query_stream
@@ -63,6 +65,12 @@ def main():
                          "margins online from observed duplicate rates "
                          "(maintenance() refits them under hysteresis "
                          "guards, DESIGN.md §9)")
+    ap.add_argument("--learned-embedder", action="store_true",
+                    help="fine-tune the compact embedder online from "
+                         "pooled serving feedback; maintenance() trains "
+                         "in the background, gates on held-out eval, and "
+                         "hot-swaps with a versioned shadow re-embed "
+                         "(DESIGN.md §11)")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write the telemetry registry snapshot as "
                          "JSON-lines after the run (DESIGN.md §10.1); "
@@ -70,9 +78,10 @@ def main():
                          "--validate PATH")
     args = ap.parse_args()
     if args.flat and (args.fused or args.background_rebuild
-                      or args.learned_admission):
-        ap.error("--fused/--background-rebuild/--learned-admission "
-                 "require the tiered CacheService (drop --flat)")
+                      or args.learned_admission or args.learned_embedder):
+        ap.error("--fused/--background-rebuild/--learned-admission/"
+                 "--learned-embedder require the tiered CacheService "
+                 "(drop --flat)")
 
     # --- LLM backend (reduced variant of the assigned arch) -----------
     dec_cfg = get_config(args.arch).reduced()
@@ -95,6 +104,13 @@ def main():
                               threshold=args.threshold,
                               telemetry=telemetry)
     else:
+        # smoke-scale refresh policy: trip inside a short stream, with
+        # grammar backfill when the pooled pairs run thin (§11)
+        refresh = EmbedderRefreshPolicy(
+            min_pairs=24, min_class=4, refresh_interval=32,
+            synth_domain="medical", synth_min_pairs=128,
+            recalibrate=True,
+        ) if args.learned_embedder else None
         cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
                              warm_capacity=4096, n_clusters=32, bucket=256,
                              n_probe=4, threshold=args.threshold,
@@ -102,6 +118,11 @@ def main():
                              fused=args.fused,
                              background_rebuild=args.background_rebuild,
                              learned_admission=args.learned_admission,
+                             embedder_trainer=trainer
+                             if args.learned_embedder else None,
+                             embedder_tokenizer=tok
+                             if args.learned_embedder else None,
+                             refresh_policy=refresh,
                              telemetry=telemetry)
         print(f"cascade path: {'fused kernel' if cache.fused else 'four-op'}"
               f" (backend {jax.default_backend()})")
@@ -161,6 +182,16 @@ def main():
                 print(f"  tenant {t}: threshold "
                       f"{pol['threshold']:.3f}  margin "
                       f"{pol['admission_margin']:.3f}")
+        if args.learned_embedder:
+            cache.maintenance(block=True)   # join an in-flight refresh
+            st = svc.stats()
+            print(f"learned embedder: version {st['embed_version']} "
+                  f"({st['refreshes_published']} published, "
+                  f"{st['refreshes_rolled_back']} rolled back from "
+                  f"{st['refreshes_started']} started; "
+                  f"{st['pairs_held']} pairs pooled, "
+                  f"{st['stale_version_commits']} stale-version "
+                  f"commits)")
 
     # --- telemetry: stage breakdown + SLO health (DESIGN.md §10) ------
     cache.maintenance(block=True)     # final idle tick: drain SLO gauges

@@ -27,6 +27,14 @@ against it so a PR cannot silently regress what the bench measures:
     ``admission_learned`` row must keep ``dup_admissions`` strictly
     below ``admission_fixed``'s and its false-hit probes at zero-ish
     (<= the fixed row's);
+  * the embedder-refresh claim (DESIGN.md §11) likewise: once either
+    run carries an ``embedder_*`` row, the fresh run owes both the
+    ``embedder_frozen`` and ``embedder_refreshed`` rows, the refreshed
+    row must beat the frozen one on ``hit_precision`` AND
+    ``hit_recall``, both must hold ``overlap_recall`` at exactly 1.0
+    (a committed entry lost through a hot swap is data loss, not
+    noise), and the refreshed row must have published
+    (``embed_version >= 1``);
   * the telemetry stage breakdown (``tiered/serve/stage_*``) must be
     complete: once either run carries any serving-telemetry row, the
     fresh run owes one row per required stage (plan / commit /
@@ -160,6 +168,40 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
                 "admission: learned false_hits_probe "
                 f"{learned['false_hits_probe']} exceeds fixed "
                 f"{fixed['false_hits_probe']}")
+
+    # embedder-refresh claim (DESIGN.md §11): completeness first —
+    # once either run carries the rows, the fresh run owes both sides
+    emb_names = ("tiered/embedder_frozen", "tiered/embedder_refreshed")
+    if any(n in base_rows or n in fresh_rows for n in emb_names):
+        missing = [n for n in emb_names if n not in fresh_rows]
+        for n in missing:
+            violations.append(
+                f"embedder: required row {n} missing from the fresh "
+                "run (refresh bench path dropped?)")
+        if not missing:
+            froz = fresh_rows[emb_names[0]]
+            refr = fresh_rows[emb_names[1]]
+            if refr.get("hit_precision", 0) <= froz.get(
+                    "hit_precision", 0):
+                violations.append(
+                    "embedder: refreshed hit_precision "
+                    f"{refr.get('hit_precision')} not above frozen "
+                    f"{froz.get('hit_precision')}")
+            if refr.get("hit_recall", 0) <= froz.get("hit_recall", 0):
+                violations.append(
+                    "embedder: refreshed hit_recall "
+                    f"{refr.get('hit_recall')} not above frozen "
+                    f"{froz.get('hit_recall')}")
+            for name, row in zip(emb_names, (froz, refr)):
+                if row.get("overlap_recall") != 1.0:
+                    violations.append(
+                        f"embedder: {name} overlap_recall "
+                        f"{row.get('overlap_recall')} != 1.0 (entries "
+                        "lost through the hot swap)")
+            if refr.get("embed_version", 0) < 1:
+                violations.append(
+                    "embedder: refreshed row never published "
+                    f"(embed_version {refr.get('embed_version')})")
 
     # serving-telemetry completeness + overhead budget (DESIGN.md §10)
     def _has_telemetry(rows: Dict[str, Dict[str, object]]) -> bool:

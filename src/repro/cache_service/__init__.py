@@ -11,7 +11,10 @@ from repro.cache_service.feedback import (
     FeedbackAccumulator, FeedbackConfig, RefitReport, TenantReservoir,
     record_refit,
 )
-from repro.cache_service.policy import PolicyTable, TenantPolicy
+from repro.cache_service.feedback import PairReservoir
+from repro.cache_service.policy import (
+    EmbedderRefreshPolicy, PolicyTable, TenantPolicy,
+)
 from repro.cache_service.protocol import (
     CacheBackend, CacheCapabilities, CachePlan, CacheRequest,
     CommitReceipt, MaintenanceReport, coalesce_misses, ungrouped_misses,
@@ -23,24 +26,25 @@ from repro.cache_service.tiers import (
     CascadeResult, Demoted, HotState, WarmState, cascade_lookup,
     cascade_query, demote_coldest, evict_tenant, hot_insert,
     hot_insert_batch, hot_query, hot_touch, init_hot, init_warm,
-    init_warm_sharded, place_warm_sharded, quantize_rows, requantize,
-    stack_warm, warm_append, warm_append_sharded, warm_occupancy,
-    warm_publish_index, warm_query, warm_rebuild, warm_rebuild_sharded,
+    init_warm_sharded, place_warm_sharded, publish_reembedded_keys,
+    quantize_rows, requantize, stack_warm, warm_append,
+    warm_append_sharded, warm_occupancy, warm_publish_index, warm_query,
+    warm_rebuild, warm_rebuild_sharded,
 )
 
 __all__ = [
     "CacheService", "ServiceStats", "LegacyStatsView",
-    "PolicyTable", "TenantPolicy",
-    "FeedbackAccumulator", "FeedbackConfig", "RefitReport",
-    "TenantReservoir", "record_refit",
+    "EmbedderRefreshPolicy", "PolicyTable", "TenantPolicy",
+    "FeedbackAccumulator", "FeedbackConfig", "PairReservoir",
+    "RefitReport", "TenantReservoir", "record_refit",
     "CacheBackend", "CacheCapabilities", "CachePlan", "CacheRequest",
     "CommitReceipt", "MaintenanceReport", "coalesce_misses",
     "ungrouped_misses",
     "CascadeResult", "Demoted", "HotState", "WarmState", "cascade_lookup",
     "cascade_query", "demote_coldest", "evict_tenant", "hot_insert",
     "hot_insert_batch", "hot_query", "hot_touch", "init_hot", "init_warm",
-    "init_warm_sharded", "place_warm_sharded", "quantize_rows",
-    "requantize", "stack_warm", "warm_append", "warm_append_sharded",
-    "warm_occupancy", "warm_publish_index", "warm_query", "warm_rebuild",
-    "warm_rebuild_sharded",
+    "init_warm_sharded", "place_warm_sharded", "publish_reembedded_keys",
+    "quantize_rows", "requantize", "stack_warm", "warm_append",
+    "warm_append_sharded", "warm_occupancy", "warm_publish_index",
+    "warm_query", "warm_rebuild", "warm_rebuild_sharded",
 ]

@@ -58,6 +58,7 @@ from repro.cache_service.policy import TenantPolicy
 from repro.core.calibration import (
     calibrate_for_false_hit_budget, calibrate_for_precision,
 )
+from repro.data.corpora import PairDataset
 
 
 @dataclass(frozen=True)
@@ -75,6 +76,7 @@ class FeedbackConfig:
     dup_coverage: float = 0.95   # loosening floor: keep this dup mass
     max_margin: float = 0.25     # admission band width cap
     refit_log_cap: int = 512     # most recent decisions kept
+    pair_reservoir: int = 2048   # pooled labeled text pairs kept (§11)
     seed: int = 0
 
 
@@ -124,6 +126,65 @@ class TenantReservoir:
         return self.scores[:self.fill], self.labels[:self.fill]
 
 
+class PairReservoir:
+    """Fixed-capacity uniform sample of labeled **text** pairs pooled
+    across tenants — the same algorithm-R discipline as
+    `TenantReservoir`, but keeping ``(query, stored neighbour,
+    duplicate?)`` strings instead of scores.  These are exactly the
+    contrastive pairs the paper fine-tunes on; the §11 embedder refresh
+    trains on a split of this reservoir and holds the rest out for its
+    eval gate."""
+
+    def __init__(self, capacity: int, rng: np.random.Generator):
+        self.capacity = int(capacity)
+        self.items: List[Tuple[str, str, int]] = []
+        self.seen = 0
+        self._rng = rng
+
+    def add(self, query: str, neighbour: str, duplicate: bool) -> None:
+        self.seen += 1
+        item = (str(query), str(neighbour), 1 if duplicate else 0)
+        if len(self.items) < self.capacity:
+            self.items.append(item)
+        else:
+            i = int(self._rng.integers(self.seen))
+            if i < self.capacity:
+                self.items[i] = item
+
+    def __len__(self) -> int:
+        return len(self.items)
+
+    @property
+    def n_pos(self) -> int:
+        return sum(lab for _, _, lab in self.items)
+
+    @property
+    def n_neg(self) -> int:
+        return len(self.items) - self.n_pos
+
+    def split(self, eval_frac: float = 0.25,
+              seed: int = 0) -> Tuple[PairDataset, PairDataset]:
+        """Deterministic shuffled (train, eval) split of the current
+        sample.  The permutation is keyed on ``seed`` alone, so the
+        same reservoir state always yields the same split — the eval
+        gate judges every candidate embedder on the same held-out
+        slice it was denied at training time."""
+        n = len(self.items)
+        perm = np.random.default_rng(seed).permutation(n)
+        n_eval = int(np.ceil(n * eval_frac)) if n else 0
+        ev, tr = perm[:n_eval], perm[n_eval:]
+
+        def ds(idx: np.ndarray) -> PairDataset:
+            return PairDataset(
+                q1=[self.items[i][0] for i in idx],
+                q2=[self.items[i][1] for i in idx],
+                labels=np.asarray([self.items[i][2] for i in idx],
+                                  np.int32),
+                domain="feedback")
+
+        return ds(tr), ds(ev)
+
+
 class FeedbackAccumulator:
     """The online learning half of the admission policy: ingests the
     serving stream per tenant, answers ``refit_due()`` for the
@@ -134,11 +195,12 @@ class FeedbackAccumulator:
         self.config = config or FeedbackConfig()
         self._rng = np.random.default_rng(self.config.seed)
         self._res: Dict[int, TenantReservoir] = {}
+        self.pairs = PairReservoir(self.config.pair_reservoir, self._rng)
         self._seen_at_fit: Dict[int, int] = {}
         self.refit_log: List[RefitReport] = []
         self.counters = {
             "events": 0, "duplicate_events": 0, "wasted_admissions": 0,
-            "plan_hits": 0, "plan_misses": 0,
+            "plan_hits": 0, "plan_misses": 0, "pair_events": 0,
             "refits_applied": 0, "refits_skipped": 0,
         }
 
@@ -153,9 +215,12 @@ class FeedbackAccumulator:
         self.counters["plan_misses"] += int((~hit).sum())
 
     def observe(self, tenant: int, score: float, duplicate: bool,
-                admitted: bool) -> None:
+                admitted: bool, text: Optional[str] = None,
+                neighbour_text: Optional[str] = None) -> None:
         """One commit-time miss event; a duplicate that was admitted
-        anyway counts as a wasted admission."""
+        anyway counts as a wasted admission.  When the caller also has
+        the query/neighbour *texts* in hand (the §11 embedder loop),
+        the labeled pair feeds the pooled text reservoir."""
         t = int(tenant)
         res = self._res.get(t)
         if res is None:
@@ -163,10 +228,35 @@ class FeedbackAccumulator:
                                                  self._rng)
         res.add(float(score), bool(duplicate))
         self.counters["events"] += 1
+        if text is not None and neighbour_text is not None:
+            self.pairs.add(text, neighbour_text, duplicate)
+            self.counters["pair_events"] += 1
         if duplicate:
             self.counters["duplicate_events"] += 1
             if admitted:
                 self.counters["wasted_admissions"] += 1
+
+    def observe_hit_pair(self, query: str, neighbour: str) -> None:
+        """A served hit is the strongest online duplicate evidence: the
+        query scored above its tenant's threshold against the stored
+        neighbour and was answered from cache.  Hits never feed the
+        score reservoirs (§9's estimators rely on commit-time miss
+        labels; hit rows are served uninspected) but they are exactly
+        the positive contrastive pairs the §11 refresh trains on."""
+        self.pairs.add(query, neighbour, True)
+        self.counters["pair_events"] += 1
+
+    def reset_scores(self) -> None:
+        """Drop every tenant's score reservoir — the embedder-publish
+        path (§11): reservoir samples are cosine scores under the
+        *previous* embedder version, so any refit over them would
+        calibrate the new version's thresholds against a dead score
+        space.  The pooled text-pair reservoir survives (texts are
+        version-independent training data), and the interval clocks
+        reset so §9 re-examines each tenant only after it has seen
+        fresh post-swap evidence."""
+        self._res.clear()
+        self._seen_at_fit.clear()
 
     # ------------------------------------------------------------------
     # refit scheduling
@@ -288,6 +378,8 @@ class FeedbackAccumulator:
             "refits_applied": self.counters["refits_applied"],
             "refits_skipped": self.counters["refits_skipped"],
             "feedback_tenants": len(self._res),
+            "pair_events": self.counters["pair_events"],
+            "pairs_held": len(self.pairs),
         }
 
 

@@ -16,7 +16,7 @@ next paraphrase of that query would have hit the *existing* entry.
 from __future__ import annotations
 
 from dataclasses import dataclass, replace
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -66,6 +66,62 @@ class TenantPolicy:
                        else self.calibration)
 
 
+@dataclass(frozen=True)
+class EmbedderRefreshPolicy:
+    """Operating policy of the online embedder refresh (DESIGN.md §11).
+
+    The refresh trigger mirrors the admission-refit hysteresis: no
+    training run below ``min_pairs`` pooled labeled pairs or
+    ``min_class`` of either label, and at least ``refresh_interval``
+    *new* pair events between runs, so the background trainer never
+    thrashes.  The eval gate judges the candidate on a held-out
+    ``eval_frac`` slice of the pair reservoir: it must clear the
+    absolute precision/recall floors *and* not regress the frozen
+    embedder's F1 on the same slice by more than
+    ``max_f1_regression`` — otherwise the candidate is discarded
+    (rollback) and the live embedder keeps serving.
+
+    ``synth_domain`` enables the paper's synthetic augmentation: when
+    the training split is thinner than ``synth_min_pairs`` — or either
+    split is missing a label class — it is topped up with
+    grammar-generated paraphrase/distinct pairs from that domain
+    (`core/synth.py`), exactly the dual-labeling pass the paper uses
+    to bootstrap thin domains.  It also waives the ``min_class``
+    trigger guard: a one-sided pool (a stream where every observed
+    neighbour really was a duplicate) is precisely what the backfill
+    balances, so it must not block the refresh.
+
+    ``recalibrate`` acknowledges that a serving threshold is only
+    meaningful relative to one embedder's score distribution: a
+    published candidate scores the same pairs on a different scale, so
+    carrying the old scalar across the swap silently moves every
+    tenant to an arbitrary point on the new ROC curve.  When enabled,
+    publish remaps the default and every per-tenant threshold to the
+    candidate's best-F1 operating point on the held-out gate slice
+    (margins rescale via ``TenantPolicy.with_threshold``) and drops
+    the §9 score reservoirs, whose samples were observed in the old
+    embedder's space.
+    """
+    min_pairs: int = 64          # no refresh below this many pairs
+    min_class: int = 8           # ... or this many of either label
+    refresh_interval: int = 256  # new pair events between refreshes
+    eval_frac: float = 0.25      # held-out slice for the eval gate
+    min_precision: float = 0.5   # gate floor: candidate precision
+    min_recall: float = 0.5      # gate floor: candidate recall
+    max_f1_regression: float = 0.02  # gate: vs frozen F1 on the slice
+    synth_domain: Optional[str] = None   # grammar domain for backfill
+    synth_min_pairs: int = 256   # top training split up to this size
+    synth_seed: int = 0
+    seed: int = 0                # split permutation seed
+    recalibrate: bool = False    # remap thresholds to the candidate's
+                                 # operating point at publish
+    # clip band for the adopted threshold: the gate slice's synthetic
+    # negatives can be easier than live traffic, in which case its
+    # best-F1 point is an over-permissive operating point for a cache
+    # — the floor keeps the published version conservative
+    recalibrate_bounds: Tuple[float, float] = (0.7, 0.99)
+
+
 class PolicyTable:
     """tenant id -> TenantPolicy, with a default for unknown tenants."""
 
@@ -78,6 +134,16 @@ class PolicyTable:
 
     def set(self, tenant: int, policy: TenantPolicy) -> None:
         self._by_tenant[int(tenant)] = policy
+
+    def recalibrate_all(self, threshold: float) -> None:
+        """Move the default and every per-tenant policy to a new
+        operating point — the embedder-publish path (§11): the score
+        space just changed under every threshold in the table, learned
+        or configured, so all of them remap together (margins rescale
+        per ``with_threshold``)."""
+        self.default = self.default.with_threshold(threshold)
+        for t, pol in self._by_tenant.items():
+            self._by_tenant[t] = pol.with_threshold(threshold)
 
     def calibrate(self, tenant: int, scores, labels,
                   max_false_hit_rate: float = 0.01) -> Calibration:

@@ -38,7 +38,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import (
-    Dict, List, Optional, Protocol, Sequence, Union, runtime_checkable,
+    Dict, List, Optional, Protocol, Sequence, Tuple, Union,
+    runtime_checkable,
 )
 
 import numpy as np
@@ -65,6 +66,7 @@ class CacheCapabilities:
     warm_sharded: bool = False       # warm tier spans a mesh axis (§8)
     warm_dtype: str = "float32"      # warm scan precision (int8 = quantized)
     learned_admission: bool = False  # maintenance() refits policies (§9)
+    learned_embedder: bool = False   # maintenance() refreshes embedder (§11)
 
 
 # ---------------------------------------------------------------------------
@@ -73,14 +75,23 @@ class CacheCapabilities:
 
 @dataclass(frozen=True)
 class CacheRequest:
-    """One embedded query batch entering the cache."""
+    """One embedded query batch entering the cache.
+
+    ``texts`` (optional) carries the raw query strings alongside their
+    embeddings.  Backends that refresh their embedder online (§11)
+    retain the text of every admitted row so the corpus can be
+    re-embedded under a new embedder version; without texts the entry
+    is still served but pinned to the embedding it was admitted with.
+    """
     embeddings: np.ndarray           # (B, D) float32, unit-norm rows
     tenants: np.ndarray              # (B,)  int32 tenant per row
     trace_id: int = 0
+    texts: Optional[Tuple[str, ...]] = None   # raw query strings (§11)
 
     @classmethod
     def build(cls, embeddings, tenant: TenantArg = 0,
-              trace_id: int = 0) -> "CacheRequest":
+              trace_id: int = 0,
+              texts: Optional[Sequence[str]] = None) -> "CacheRequest":
         """Normalize a scalar-or-array tenant argument to a (B,) row."""
         embs = np.asarray(embeddings)
         t = np.asarray(tenant, np.int32)
@@ -89,7 +100,11 @@ class CacheRequest:
         if t.shape != (embs.shape[0],):
             raise ValueError(f"tenant row {t.shape} != batch "
                              f"({embs.shape[0]},)")
-        return cls(embeddings=embs, tenants=t, trace_id=trace_id)
+        if texts is not None and len(texts) != embs.shape[0]:
+            raise ValueError(f"texts row {len(texts)} != batch "
+                             f"({embs.shape[0]},)")
+        return cls(embeddings=embs, tenants=t, trace_id=trace_id,
+                   texts=tuple(texts) if texts is not None else None)
 
     def __len__(self) -> int:
         return int(self.embeddings.shape[0])
@@ -130,6 +145,7 @@ class CachePlan:
     margins: Optional[np.ndarray] = None       # (B,) thr - score
     top_value_ids: Optional[np.ndarray] = None  # (B,) int64, -1 = none
     plan_wall_s: float = 0.0         # host wall time of plan() (§10)
+    embed_version: int = 0           # embedder version at plan time (§11)
 
     def miss_rows(self) -> np.ndarray:
         return np.nonzero(~self.hit)[0]
@@ -148,7 +164,7 @@ class CachePlan:
     @classmethod
     def for_insert(cls, request: CacheRequest, admit: np.ndarray,
                    scores: Optional[np.ndarray] = None,
-                   epoch: int = 0) -> "CachePlan":
+                   epoch: int = 0, embed_version: int = 0) -> "CachePlan":
         """Plan equivalent of a legacy ``insert`` call: every row is an
         ungrouped miss, admission as given."""
         n = len(request)
@@ -159,7 +175,8 @@ class CachePlan:
                    value_ids=np.full(n, -1, np.int64),
                    responses=[None] * n,
                    admit=np.asarray(admit, bool),
-                   miss_leader=np.arange(n, dtype=np.int64), epoch=epoch)
+                   miss_leader=np.arange(n, dtype=np.int64), epoch=epoch,
+                   embed_version=embed_version)
 
 
 @dataclass(frozen=True)
@@ -172,6 +189,12 @@ class MaintenanceReport:
     refits_applied: int = 0          # policies republished this call (§9)
     refits_checked: int = 0          # tenants examined (incl. refusals)
     wall_s: float = 0.0              # host wall time of this call (§10)
+    refresh_started: bool = False    # embedder refresh kicked off (§11)
+    refresh_published: bool = False  # candidate embedder swapped in (§11)
+    refresh_rolled_back: bool = False  # candidate failed the eval gate
+    refresh_in_flight: bool = False  # train + re-embed still running
+    refresh_wall_s: float = 0.0      # wall time of the published refresh
+    embed_version: int = 0           # live embedder version after the call
 
 
 @dataclass(frozen=True)
@@ -181,6 +204,9 @@ class CommitReceipt:
     skipped: int                     # rows the admission rule dropped
     evicted: int                     # host strings freed by this commit
     rebuild_due: bool = False        # obligation: call maintenance() soon
+    embed_version: int = 0           # live embedder version at commit (§11)
+    stale_version_skipped: int = 0   # rows rejected: plan embedded under an
+                                     # older embedder version than is live
     maintenance: MaintenanceReport = field(default_factory=MaintenanceReport)
     commit_wall_s: float = 0.0       # host wall time of commit() (§10)
     trace_id: int = 0                # echoed from the request (§10.2)

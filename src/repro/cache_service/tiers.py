@@ -392,6 +392,33 @@ def warm_publish_index(current: WarmState, shadow: WarmState) -> WarmState:
                             indexed_total=shadow.indexed_total)
 
 
+def publish_reembedded_keys(hot: HotState, warm: WarmState,
+                            hot_keys: jax.Array, warm_keys: jax.Array
+                            ) -> Tuple[HotState, WarmState]:
+    """Atomically swap both tiers' key panels for re-embedded ones
+    (DESIGN.md §11).
+
+    The panels are full-capacity replacements built host-side by
+    mapping each *currently valid* row's value id to its re-embedding
+    under the candidate embedder; rows without a replacement (invalid
+    slots, padding) must carry their current key so nothing else moves.
+    Only ``keys`` (and the warm int8 mirror, requantized in the same
+    update) change: ``valid``/``tenants``/``value_ids``/ring counters
+    and the IVF leaves are untouched, so a row evicted while the shadow
+    re-embed ran can never be resurrected by the publish, and the tail
+    window / inverted-list partition is exactly as sound as before the
+    swap.  Rows are re-normalized here so the cosine geometry is
+    preserved no matter what the embedder emitted.  Works unchanged on
+    the stacked (sharded) warm form — the leading shard axis broadcasts
+    through.
+    """
+    hk = _unit(hot_keys.astype(jnp.float32))
+    wk = _unit(warm_keys.astype(jnp.float32))
+    q8, sc = quantize_rows(wk)
+    return (hot._replace(keys=hk),
+            warm._replace(keys=wk, keys_q=q8, scales=sc))
+
+
 def warm_query(state: WarmState, q: jax.Array, q_tenants: jax.Array,
                k: int = 1, n_probe: int = 8, tail: int = 0
                ) -> Tuple[jax.Array, jax.Array, jax.Array]:

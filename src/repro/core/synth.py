@@ -26,6 +26,7 @@ random, so this backend demonstrates the *system* path (prompt → sample
 from __future__ import annotations
 
 import json
+import zlib
 from dataclasses import dataclass
 from typing import List, Protocol, Sequence, Tuple
 
@@ -54,25 +55,55 @@ class GeneratorBackend(Protocol):
 
 
 class TemplateGenerator:
-    """Deterministic grammar-backed generator (default backend)."""
+    """Deterministic grammar-backed generator (default backend).
+
+    Determinism is per *call*, not per instance history: each
+    ``paraphrases``/``distinct`` call derives a fresh RNG from the
+    construction seed and a stable content hash of the query, so
+    `generate_synthetic_pairs` is bit-reproducible for a fixed seed no
+    matter how the caller orders or interleaves its queries.  (The
+    original design threaded one stateful ``rng`` through every call,
+    which made each sample depend on the entire preceding call history
+    — iterate the same query set in a different order and every output
+    changed.)
+    """
 
     def __init__(self, seed: int = 0):
-        self.rng = np.random.default_rng(seed)
+        self.seed = int(seed)
+
+    def _rng(self, q: Query, kind: str) -> np.random.Generator:
+        key = f"{kind}|{q.domain}|{q.entity}|{q.aspect}|{q.text}"
+        return np.random.default_rng(
+            [self.seed, zlib.crc32(key.encode("utf-8"))])
 
     def paraphrases(self, q: Query, n: int) -> List[Query]:
+        rng = self._rng(q, "paraphrase")
         out = []
         for _ in range(n):
-            out.append(render_query(self.rng, q.domain, q.entity, q.aspect,
+            out.append(render_query(rng, q.domain, q.entity, q.aspect,
                                     exclude_template=q.template_idx))
         return out
 
     def distinct(self, q: Query, n: int) -> List[Query]:
-        _, aspects = DOMAINS[q.domain]
-        others = [a for a in aspects if a != q.aspect]
+        """Related-but-distinct negatives across *both* confusion axes:
+        same entity with a different aspect ("different subtopics …",
+        Listing 2) and a different entity asked through the same
+        aspect's surface form.  A contrastive fit on aspect-swapped
+        negatives alone never learns that the entity tokens carry the
+        intent, and at serving time its false hits are exactly the
+        same-aspect/different-entity neighbours."""
+        rng = self._rng(q, "distinct")
+        entities, aspects = DOMAINS[q.domain]
+        other_aspects = [a for a in aspects if a != q.aspect]
+        other_entities = [e for e in entities if e != q.entity]
         out = []
         for _ in range(n):
-            aspect = str(self.rng.choice(others))
-            out.append(render_query(self.rng, q.domain, q.entity, aspect))
+            entity, aspect = q.entity, q.aspect
+            if other_entities and rng.random() < 0.25:
+                entity = str(rng.choice(other_entities))
+            else:
+                aspect = str(rng.choice(other_aspects))
+            out.append(render_query(rng, q.domain, entity, aspect))
         return out
 
 

@@ -8,8 +8,11 @@ optional semantic cache in front (the paper's deployment).
 ``--cache-shards N`` then lays its warm tier over an N-device `model`
 mesh (local IVF probe per shard + tiny merge, DESIGN.md §8),
 ``--warm-dtype int8`` scans the warm panel from its quantized form,
-and ``--learned-admission`` turns the static per-tenant operating
-points into the online feedback loop (DESIGN.md §9).
+``--learned-admission`` turns the static per-tenant operating
+points into the online feedback loop (DESIGN.md §9), and
+``--learned-embedder`` additionally fine-tunes the compact embedder
+from pooled serving feedback in the background, hot-swapping it with a
+versioned shadow re-embed of the cached corpus (DESIGN.md §11).
 
 ``--metrics-json PATH`` dumps the telemetry registry (DESIGN.md §10)
 as JSON-lines — one meta line then one line per metric series — after
@@ -57,6 +60,11 @@ def main():
                     help="learn per-tenant thresholds/admission margins "
                          "online from observed duplicate rates "
                          "(DESIGN.md §9; implies --tiered)")
+    ap.add_argument("--learned-embedder", action="store_true",
+                    help="refresh the compact embedder online from pooled "
+                         "serving feedback and hot-swap it with a "
+                         "versioned shadow re-embed (DESIGN.md §11; "
+                         "implies --tiered)")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write the telemetry registry snapshot as "
                          "JSON-lines after the run (DESIGN.md §10.1; "
@@ -70,7 +78,7 @@ def main():
         ap.error("--metrics-json instruments the cached serving path; "
                  "add --cache")
     if args.cache_shards or args.warm_dtype != "float32" \
-            or args.learned_admission:
+            or args.learned_admission or args.learned_embedder:
         args.tiered = True
 
     cfg = get_config(args.arch)
@@ -99,21 +107,35 @@ def main():
     trainer.fit(make_pair_dataset("medical", 512, seed=0), tok)
     telemetry = Telemetry()
     if args.tiered:
-        from repro.cache_service import CacheService
+        from repro.cache_service import CacheService, EmbedderRefreshPolicy
         from repro.launch.mesh import make_cache_mesh
         mesh = make_cache_mesh(args.cache_shards) if args.cache_shards \
             else None
+        # smoke-scale refresh policy: trip the trigger inside a short
+        # stream, backfill thin splits from the medical grammar (§11)
+        refresh = EmbedderRefreshPolicy(
+            min_pairs=24, min_class=4, refresh_interval=32,
+            synth_domain="medical", synth_min_pairs=128,
+            recalibrate=True,
+        ) if args.learned_embedder else None
         cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
                              warm_capacity=4096, n_clusters=32, bucket=256,
                              threshold=args.threshold, mesh=mesh,
                              warm_dtype=args.warm_dtype,
                              learned_admission=args.learned_admission,
+                             embedder_trainer=trainer
+                             if args.learned_embedder else None,
+                             embedder_tokenizer=tok
+                             if args.learned_embedder else None,
+                             refresh_policy=refresh,
                              telemetry=telemetry)
         caps = cache.capabilities()
         print(f"tiered cache: warm shards "
               f"{cache.warm_shards if caps.warm_sharded else 0}, "
               f"warm dtype {caps.warm_dtype}, learned admission "
-              f"{'on' if caps.learned_admission else 'off'}")
+              f"{'on' if caps.learned_admission else 'off'}, "
+              f"learned embedder "
+              f"{'on' if caps.learned_embedder else 'off'}")
     else:
         cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
                               threshold=args.threshold, telemetry=telemetry)
@@ -153,6 +175,16 @@ def main():
               f"({st['duplicate_events']} duplicates, "
               f"{st['wasted_admissions']} wasted admissions); "
               f"policies {st['learned_policies']}")
+    if args.learned_embedder:
+        st = svc.stats()
+        print(f"learned embedder: version {st['embed_version']} "
+              f"({st['refreshes_published']} published, "
+              f"{st['refreshes_rolled_back']} rolled back from "
+              f"{st['refreshes_started']} started; "
+              f"{st['pairs_held']} pairs pooled, "
+              f"{st['stale_version_commits']} stale-version commits; "
+              f"recalibrated threshold "
+              f"{st['recalibrated_threshold']})")
     if args.metrics_json:
         dump_metrics(args.requests // args.batch, append=wrote)
         print(f"metrics -> {args.metrics_json}")

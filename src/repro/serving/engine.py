@@ -180,8 +180,11 @@ class CachedLLMService:
             self._stage_h.observe(time.perf_counter() - t0,
                                   stage="embed", tenant=lab)
             with tracer.span("plan", tenant=lab):
+                # texts ride along so a §11 backend can retain them for
+                # re-embedding admitted rows under a refreshed embedder
                 plan = self.cache.plan(
-                    CacheRequest.build(embs, tenant, trace_id=trace_id),
+                    CacheRequest.build(embs, tenant, trace_id=trace_id,
+                                       texts=queries),
                     coalesce=self.coalesce)
 
             # one generation per miss-group leader serves the whole

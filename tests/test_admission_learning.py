@@ -408,3 +408,56 @@ def test_trajectory_gate_fails_on_broken_admission_claim(tmp_path):
     r = _run_gate(tmp_path, BASE_BENCH, doctored)
     assert r.returncode == 1
     assert "not below fixed" in r.stderr
+
+
+def _with_embedder_rows(bench):
+    out = copy.deepcopy(bench)
+    out["rows"] += [
+        {"name": "tiered/embedder_frozen", "us_per_call": 60.0,
+         "hit_precision": 0.24, "hit_recall": 0.76,
+         "overlap_recall": 1.0, "embed_version": 0},
+        {"name": "tiered/embedder_refreshed", "us_per_call": 80.0,
+         "hit_precision": 0.35, "hit_recall": 0.99,
+         "overlap_recall": 1.0, "embed_version": 1},
+    ]
+    return out
+
+
+def test_trajectory_gate_green_with_embedder_rows(tmp_path):
+    bench = _with_embedder_rows(BASE_BENCH)
+    r = _run_gate(tmp_path, bench, bench)
+    assert r.returncode == 0, r.stderr
+
+
+def test_trajectory_gate_fails_on_missing_embedder_row(tmp_path):
+    """Once the baseline carries the §11 rows, a fresh run without
+    them means the refresh bench path was dropped."""
+    bench = _with_embedder_rows(BASE_BENCH)
+    r = _run_gate(tmp_path, bench, BASE_BENCH)
+    assert r.returncode == 1
+    assert "tiered/embedder_frozen missing" in r.stderr
+    assert "tiered/embedder_refreshed missing" in r.stderr
+
+
+def test_trajectory_gate_fails_on_broken_embedder_claim(tmp_path):
+    bench = _with_embedder_rows(BASE_BENCH)
+    # refreshed no longer beats frozen on either metric
+    doctored = _with_embedder_rows(BASE_BENCH)
+    doctored["rows"][-1]["hit_precision"] = 0.24
+    doctored["rows"][-1]["hit_recall"] = 0.70
+    r = _run_gate(tmp_path, bench, doctored)
+    assert r.returncode == 1
+    assert "hit_precision" in r.stderr and "not above frozen" in r.stderr
+    assert "hit_recall" in r.stderr
+    # a hot swap that loses committed entries is data loss, not noise
+    doctored = _with_embedder_rows(BASE_BENCH)
+    doctored["rows"][-1]["overlap_recall"] = 0.97
+    r = _run_gate(tmp_path, bench, doctored)
+    assert r.returncode == 1
+    assert "overlap_recall" in r.stderr
+    # a refreshed row that never published proves nothing
+    doctored = _with_embedder_rows(BASE_BENCH)
+    doctored["rows"][-1]["embed_version"] = 0
+    r = _run_gate(tmp_path, bench, doctored)
+    assert r.returncode == 1
+    assert "never published" in r.stderr

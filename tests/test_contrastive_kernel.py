@@ -1,0 +1,136 @@
+"""Parity sweep: fused online-contrastive kernel vs the jnp oracle
+(`kernels/contrastive/ref.py`), mirroring test_cascade_kernel.py's
+interpret-mode discipline.
+
+Exactness contract:
+
+  * the mined extrema (min_neg, max_pos) are order-independent
+    reductions — **bit-exact** for every shape and dtype (both sides
+    cast to float32 before the distance);
+  * the hard-pair loss sums are bit-exact whenever one block covers
+    the batch; across blocks the kernel's SMEM partial-sum order can
+    differ from the oracle's single reduction by float-associativity
+    ulps, so multi-block sums get an ulp-level tolerance instead.
+
+The sweep covers non-multiple-of-block tails (the padded rows carry
+label -1 and must be invisible), B < block, B == block, fp32/bf16,
+and block-size independence of the padded-tail handling.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.contrastive import kernel as cl_kernel
+from repro.kernels.contrastive import ref as cl_ref
+from repro.kernels.contrastive.ops import online_contrastive_loss as ocl_op
+from repro.core.losses import online_contrastive_loss as ocl_core
+
+rng = np.random.default_rng(23)
+
+SHAPES = [
+    (1, 8, 8),        # single row
+    (7, 16, 8),       # B < block
+    (8, 16, 8),       # B == block
+    (13, 32, 8),      # tail: 13 = 8 + 5
+    (100, 64, 32),    # tail: 100 = 3*32 + 4
+    (128, 48, 128),   # one exact block, odd D
+    (256, 96, 64),    # multiple exact blocks
+    (257, 40, 64),    # tail of 1
+]
+
+
+def _pairs(B, D, dtype, label_kind="mixed"):
+    e1 = jnp.asarray(rng.standard_normal((B, D)), dtype)
+    e2 = jnp.asarray(rng.standard_normal((B, D)), dtype)
+    if label_kind == "mixed":
+        lab = np.zeros(B, np.int32)
+        lab[rng.permutation(B)[:max(B // 2, 1)]] = 1
+        if B > 1:
+            lab[0], lab[-1] = 0, 1      # both classes present
+    elif label_kind == "front-pos":
+        lab = (np.arange(B) < max(B // 3, 1)).astype(np.int32)
+    else:                               # "back-pos": whole blocks one-class
+        lab = (np.arange(B) >= B - max(B // 3, 1)).astype(np.int32)
+    return e1, e2, jnp.asarray(lab)
+
+
+@pytest.mark.parametrize("B,D,bb", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_components_parity(B, D, bb, dtype):
+    e1, e2, lab = _pairs(B, D, dtype)
+    r_pos, r_neg, r_min, r_max = cl_ref.contrastive_components(e1, e2, lab)
+    k_pos, k_neg, k_min, k_max = cl_kernel.contrastive_components(
+        e1, e2, lab, block_b=bb, interpret=True)
+    # extrema: order-independent -> bit-exact at every shape/dtype
+    np.testing.assert_array_equal(np.asarray(r_min), np.asarray(k_min))
+    np.testing.assert_array_equal(np.asarray(r_max), np.asarray(k_max))
+    if -(-B // min(bb, B)) == 1:
+        # single block: same reduction order -> sums bit-exact too
+        np.testing.assert_array_equal(np.asarray(r_pos), np.asarray(k_pos))
+        np.testing.assert_array_equal(np.asarray(r_neg), np.asarray(k_neg))
+    else:
+        # cross-block SMEM accumulation may reassociate the sum
+        np.testing.assert_allclose(float(r_pos), float(k_pos),
+                                   rtol=2e-6, atol=1e-6)
+        np.testing.assert_allclose(float(r_neg), float(k_neg),
+                                   rtol=2e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("label_kind", ["front-pos", "back-pos"])
+@pytest.mark.parametrize("B,D,bb", [(13, 32, 8), (100, 64, 32)])
+def test_one_class_blocks_parity(B, D, bb, label_kind):
+    """Blocks that contain only one label class (and padded tail rows
+    with label -1) must not perturb the other class's statistics."""
+    e1, e2, lab = _pairs(B, D, jnp.float32, label_kind)
+    ref = cl_ref.contrastive_components(e1, e2, lab)
+    ker = cl_kernel.contrastive_components(e1, e2, lab, block_b=bb,
+                                           interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref[2]), np.asarray(ker[2]))
+    np.testing.assert_array_equal(np.asarray(ref[3]), np.asarray(ker[3]))
+    np.testing.assert_allclose(float(ref[0]), float(ker[0]), rtol=2e-6)
+    np.testing.assert_allclose(float(ref[1]), float(ker[1]), rtol=2e-6)
+
+
+@pytest.mark.parametrize("B,D", [(13, 32), (100, 48)])
+def test_block_size_independence(B, D):
+    """The tail-padding scheme must make the result a function of the
+    data only: every block size (including one covering the whole
+    batch) yields the same components."""
+    e1, e2, lab = _pairs(B, D, jnp.float32)
+    outs = [cl_kernel.contrastive_components(e1, e2, lab, block_b=bb,
+                                             interpret=True)
+            for bb in (4, 8, B, 2 * B)]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(np.asarray(o[2]),
+                                      np.asarray(outs[0][2]))
+        np.testing.assert_array_equal(np.asarray(o[3]),
+                                      np.asarray(outs[0][3]))
+        np.testing.assert_allclose(float(o[0]), float(outs[0][0]),
+                                   rtol=2e-6, atol=1e-6)
+        np.testing.assert_allclose(float(o[1]), float(outs[0][1]),
+                                   rtol=2e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_bf16_and_fp32_agree_bitwise_per_distance(dtype):
+    """Both sides cast inputs to float32 before the distance, so the
+    dtype of the *inputs* never splits kernel from oracle: at a
+    single-block shape the full component vector is bit-exact."""
+    e1, e2, lab = _pairs(64, 32, dtype)
+    ref = cl_ref.contrastive_components(e1, e2, lab)
+    ker = cl_kernel.contrastive_components(e1, e2, lab, block_b=64,
+                                           interpret=True)
+    for a, b in zip(ref, ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("B", [5, 13, 96])
+def test_op_matches_core_loss_with_tails(B):
+    """The dispatch wrapper assembles the same scalar as
+    core.losses.online_contrastive_loss at tail shapes too."""
+    e1 = jnp.asarray(rng.standard_normal((B, 24)), jnp.float32)
+    e2 = jnp.asarray(rng.standard_normal((B, 24)), jnp.float32)
+    lab = jnp.asarray(rng.integers(0, 2, B), jnp.int32)
+    a = float(ocl_core(e1, e2, lab))
+    b = float(ocl_op(e1, e2, lab, use_kernel=True))
+    np.testing.assert_allclose(a, b, atol=1e-6)

@@ -1,0 +1,389 @@
+"""Online embedder refresh with versioned hot-swap re-embed (§11).
+
+Covers the full lifecycle (pair pooling -> trigger -> background train
+-> eval gate -> shadow re-embed -> atomic publish / rollback) plus the
+two §11 safety arguments:
+
+  * **no resurrection**: a tenant evicted while the refresh thread is
+    re-embedding its snapshot must stay evicted through the publish —
+    the key-panel swap never touches ``valid``/``value_ids``;
+  * **version consistency**: a plan embedded under version N commits
+    against a version-N+1 service with its admissions *rejected* (and
+    counted), never silently admitted into the wrong embedding space,
+    while entries committed before the swap keep serving at recall 1.0
+    because the panel was re-embedded into the space the live embed
+    closure now produces.
+"""
+import threading
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.cache_service.service as service_mod
+from repro.cache_service import CacheService, EmbedderRefreshPolicy, tiers
+from repro.cache_service.protocol import CacheRequest
+from repro.configs import get_config
+from repro.core import EmbedderTrainer, FinetuneConfig
+from repro.data import HashTokenizer
+
+
+def _unit(x):
+    return x / np.maximum(np.linalg.norm(x, axis=-1, keepdims=True), 1e-9)
+
+
+@pytest.fixture(scope="module")
+def enc_setup():
+    cfg = get_config("modernbert-149m").reduced(vocab_size=1024)
+    tok = HashTokenizer(vocab_size=cfg.vocab_size)
+    return cfg, tok
+
+
+# a gate that always passes (unless eval-starved) + fast synth backfill
+PERMISSIVE = dict(min_pairs=8, min_class=2, refresh_interval=8,
+                  min_precision=0.0, min_recall=0.0,
+                  max_f1_regression=10.0, synth_domain="medical",
+                  synth_min_pairs=32)
+
+
+def _service(enc_setup, **pol_kw):
+    cfg, tok = enc_setup
+    trainer = EmbedderTrainer(cfg, FinetuneConfig(
+        epochs=1, batch_size=8, max_len=12))
+    kw = dict(PERMISSIVE)
+    kw.update(pol_kw)
+    # threshold 0.9: the untrained embedder scores distinct template
+    # texts up to ~0.87 against each other — only exact repeats (cosine
+    # 1.0) may hit, so the stream below yields both hit and miss pairs
+    svc = CacheService(dim=cfg.d_model, hot_capacity=64, warm_capacity=256,
+                       n_clusters=4, bucket=32, threshold=0.9,
+                       embedder_trainer=trainer, embedder_tokenizer=tok,
+                       refresh_policy=EmbedderRefreshPolicy(**kw))
+    return svc, trainer, trainer.make_embed_fn(tok)
+
+
+def _drive(svc, emb, texts, tenant=0):
+    plan = svc.plan(CacheRequest.build(emb(texts), tenant, texts=texts),
+                    coalesce=False)
+    resp = [None if h else f"r({t})" for h, t in zip(plan.hit, texts)]
+    return plan, svc.commit(plan, resp)
+
+
+def _stream(svc, emb, n=24, tenant=0, prefix="drug"):
+    """Mixed stream: repeats (-> hits, positive pairs) + fresh queries
+    (-> misses with a same-tenant neighbour, negative pairs)."""
+    texts = [f"what dose of {prefix} {i % 6} should the patient take"
+             for i in range(n)]
+    for i in range(0, n, 4):
+        _drive(svc, emb, texts[i:i + 4], tenant)
+    return texts
+
+
+# ---------------------------------------------------------------------------
+# ctor / capability surface
+# ---------------------------------------------------------------------------
+
+def test_ctor_validation_and_caps(enc_setup):
+    svc, _, _ = _service(enc_setup)
+    caps = svc.capabilities()
+    assert caps.learned_embedder and not caps.learned_admission
+    with pytest.raises(ValueError):
+        CacheService(dim=16, learned_embedder=True)
+
+
+# ---------------------------------------------------------------------------
+# tiers-level: the atomic key-panel swap primitive
+# ---------------------------------------------------------------------------
+
+def test_publish_reembedded_keys_swaps_only_keys():
+    rng = np.random.default_rng(3)
+    D, Nh, Nw = 16, 8, 32
+    hot = tiers.init_hot(Nh, D)._replace(
+        keys=jnp.asarray(_unit(rng.standard_normal((Nh, D))), jnp.float32),
+        valid=jnp.asarray(rng.random(Nh) > 0.4),
+        value_ids=jnp.asarray(rng.integers(0, 99, Nh), jnp.int32))
+    warm = tiers.init_warm(Nw, D, 4, 8)._replace(
+        keys=jnp.asarray(_unit(rng.standard_normal((Nw, D))), jnp.float32),
+        valid=jnp.asarray(rng.random(Nw) > 0.4),
+        value_ids=jnp.asarray(rng.integers(100, 199, Nw), jnp.int32),
+        cursor=jnp.asarray(7, jnp.int32), total=jnp.asarray(19, jnp.int32))
+    nh = rng.standard_normal((Nh, D)).astype(np.float32) * 3.0
+    nw = rng.standard_normal((Nw, D)).astype(np.float32) * 3.0
+    h2, w2 = tiers.publish_reembedded_keys(hot, warm, jnp.asarray(nh),
+                                           jnp.asarray(nw))
+    # keys swapped in re-normalized; int8 shadow requantized to match
+    np.testing.assert_allclose(np.asarray(h2.keys), _unit(nh), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(w2.keys), _unit(nw), atol=1e-6)
+    q8, sc = tiers.quantize_rows(jnp.asarray(_unit(nw)))
+    np.testing.assert_array_equal(np.asarray(w2.keys_q), np.asarray(q8))
+    np.testing.assert_allclose(np.asarray(w2.scales), np.asarray(sc),
+                               atol=1e-7)
+    # liveness, identity and ring position are untouchable by a re-embed
+    for a, b in [(hot.valid, h2.valid), (hot.value_ids, h2.value_ids),
+                 (warm.valid, w2.valid), (warm.value_ids, w2.value_ids),
+                 (warm.cursor, w2.cursor), (warm.total, w2.total),
+                 (warm.centroids, w2.centroids)]:
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# trigger + synth backfill
+# ---------------------------------------------------------------------------
+
+def test_trigger_min_pairs_guard(enc_setup):
+    svc, _, emb = _service(enc_setup, min_pairs=10**6)
+    assert not svc._refresh_due()            # empty pool
+    _stream(svc, emb, n=16)
+    assert len(svc.feedback.pairs) > 0       # the stream did pool pairs
+    assert not svc._refresh_due()            # but never enough
+
+
+def test_trigger_min_class_guard_and_synth_waiver(enc_setup):
+    # a hits-only stream pools positives exclusively: without a synth
+    # domain the class guard must block the trigger forever
+    svc, _, emb = _service(enc_setup, min_pairs=4, min_class=2,
+                           synth_domain=None)
+    for _ in range(6):
+        _drive(svc, emb, ["repeat me exactly", "repeat me exactly also"])
+    pairs = svc.feedback.pairs
+    assert pairs.n_pos >= 4 and pairs.n_neg == 0
+    assert not svc._refresh_due()
+    # the same pool with a synth domain: backfill waives the guard
+    svc._refresh_policy = EmbedderRefreshPolicy(**PERMISSIVE)
+    assert svc._refresh_due()
+
+
+def test_synth_backfill_balances_and_is_deterministic():
+    from repro.data.corpora import PairDataset
+    pol = EmbedderRefreshPolicy(**PERMISSIVE)
+    one_class = PairDataset(q1=["a", "b"], q2=["c", "d"],
+                            labels=np.ones(2, np.int32), domain="feedback")
+    empty = PairDataset(q1=[], q2=[], labels=np.zeros(0, np.int32),
+                        domain="feedback")
+    tr, ev = service_mod._synth_backfill(one_class, empty, pol)
+    assert len(tr.labels) + len(ev.labels) >= pol.synth_min_pairs
+    assert len(set(np.asarray(tr.labels).tolist())) == 2   # balanced now
+    assert len(set(np.asarray(ev.labels).tolist())) == 2
+    assert list(tr.q1[:2]) == ["a", "b"]                   # originals kept
+    tr2, ev2 = service_mod._synth_backfill(one_class, empty, pol)
+    assert list(tr.q1) == list(tr2.q1) and list(ev.q2) == list(ev2.q2)
+    np.testing.assert_array_equal(tr.labels, tr2.labels)
+    # a balanced eval slice is left untouched (gate stays serving-only)
+    balanced = PairDataset(q1=["a", "b"], q2=["c", "d"],
+                           labels=np.asarray([0, 1], np.int32),
+                           domain="feedback")
+    _, ev3 = service_mod._synth_backfill(one_class, balanced, pol)
+    assert list(ev3.q1) == ["a", "b"]
+
+
+# ---------------------------------------------------------------------------
+# full lifecycle: publish, hot swap, recall through the overlap
+# ---------------------------------------------------------------------------
+
+def test_refresh_publishes_and_recall_survives(enc_setup):
+    svc, trainer, emb = _service(enc_setup)
+    texts = _stream(svc, emb, n=24)
+    assert svc._refresh_due()
+    rep = svc.maintenance()
+    assert rep.refresh_started and rep.refresh_in_flight
+    old_hot_keys = np.asarray(svc.hot.keys).copy()
+    rep = svc.maintenance(block=True)
+    assert rep.refresh_published and not rep.refresh_rolled_back
+    assert rep.embed_version == 1 and svc._embed_version == 1
+    st = svc.stats_snapshot().refresh
+    assert st["refreshes_published"] == 1 and st["embed_version"] == 1
+    assert not st["refresh_in_flight"] and st["last_refresh_s"] > 0
+    # the panel actually moved: valid hot rows were re-embedded
+    valid = np.asarray(svc.hot.valid)
+    assert valid.any()
+    assert not np.allclose(np.asarray(svc.hot.keys)[valid],
+                           old_hot_keys[valid])
+    # recall 1.0 on committed entries THROUGH the swap: the live embed
+    # closure reads the refreshed params and the panel was re-embedded
+    # into the same space, so every previously-committed query (cosine
+    # 1.0 against its own stored key) still hits
+    uniq = sorted(set(texts))
+    plan = svc.plan(CacheRequest.build(emb(uniq), 0, texts=uniq),
+                    coalesce=False)
+    assert plan.hit.all(), plan.scores
+    assert all(r is not None for r in plan.responses)
+    assert plan.embed_version == 1
+    # receipts stamp the live version
+    _, rc = _drive(svc, emb, ["a brand new post-swap query"])
+    assert rc.embed_version == 1 and rc.stale_version_skipped == 0
+
+
+def test_rollback_keeps_live_embedder_and_panel(enc_setup):
+    svc, trainer, emb = _service(enc_setup, min_precision=1.01)
+    _stream(svc, emb, n=24)
+    keys_before = np.asarray(svc.hot.keys).copy()
+    old_params = trainer.params
+    assert svc.maintenance().refresh_started
+    rep = svc.maintenance(block=True)
+    assert rep.refresh_rolled_back and not rep.refresh_published
+    assert svc._embed_version == 0
+    assert trainer.params is old_params              # never touched
+    np.testing.assert_array_equal(np.asarray(svc.hot.keys), keys_before)
+    st = svc.stats_snapshot().refresh
+    assert st["refreshes_rolled_back"] == 1
+    assert st["refreshes_started"] == 1
+
+
+def test_eval_starved_fails_closed(enc_setup):
+    """No synth domain + a one-class eval slice: the gate must refuse
+    to judge and roll back rather than publish unjudged."""
+    svc, _, emb = _service(enc_setup, synth_domain=None, min_class=0,
+                           min_pairs=4)
+    for _ in range(4):                    # hits only -> all-positive pool
+        _drive(svc, emb, ["repeat me exactly", "repeat me exactly also"])
+    assert svc.feedback.pairs.n_neg == 0 and svc._refresh_due()
+    svc.maintenance()
+    rep = svc.maintenance(block=True)
+    assert rep.refresh_rolled_back and svc._embed_version == 0
+
+
+# ---------------------------------------------------------------------------
+# version consistency: stale plans rejected at commit, not mis-scored
+# ---------------------------------------------------------------------------
+
+def test_stale_version_plan_rejected_at_commit(enc_setup):
+    svc, _, emb = _service(enc_setup)
+    _stream(svc, emb, n=24)
+    stale_texts = ["an in-flight query planned under version zero"]
+    stale_plan = svc.plan(CacheRequest.build(emb(stale_texts), 0,
+                                             texts=stale_texts),
+                          coalesce=False)
+    assert stale_plan.embed_version == 0 and stale_plan.admit.any()
+    svc.maintenance()
+    svc.maintenance(block=True)           # publish: version -> 1
+    assert svc._embed_version == 1
+    live = len(svc.responses)
+    rc = svc.commit(stale_plan, ["stale response"])
+    assert rc.admitted == 0
+    assert rc.stale_version_skipped == 1
+    assert rc.embed_version == 1
+    assert len(svc.responses) == live     # nothing entered the store
+    assert svc.stats_snapshot().refresh["stale_version_commits"] == 1
+    # the same query replanned under the live version commits fine
+    plan2, rc2 = _drive(svc, emb, stale_texts)
+    assert plan2.embed_version == 1
+    assert rc2.stale_version_skipped == 0 and rc2.admitted == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: evict-tenant during the shadow re-embed (no resurrection)
+# ---------------------------------------------------------------------------
+
+def test_evict_during_shadow_reembed_no_resurrection(enc_setup,
+                                                     monkeypatch):
+    svc, _, emb = _service(enc_setup)
+    _stream(svc, emb, n=16, tenant=0)
+    doomed = _stream(svc, emb, n=8, tenant=1, prefix="other drug")
+    assert svc._refresh_due()
+
+    gate = threading.Event()
+    real = service_mod._reembed_snapshot
+
+    def gated(*a, **kw):
+        assert gate.wait(timeout=120), "test gate never opened"
+        return real(*a, **kw)
+
+    # the refresh thread resolves the name at call time, so patching
+    # the module global parks it right before the snapshot re-embed
+    monkeypatch.setattr(service_mod, "_reembed_snapshot", gated)
+    assert svc.maintenance().refresh_started
+
+    # mid-flight: drop tenant 1 entirely (its vids are in the snapshot)
+    t1_mask = np.asarray(svc.hot.tenants) == 1
+    freed = set(np.asarray(svc.hot.value_ids)[
+        t1_mask & np.asarray(svc.hot.valid)].tolist())
+    assert freed
+    assert svc.evict_tenant(1) >= len(freed)
+    assert not (np.asarray(svc.hot.valid)
+                & (np.asarray(svc.hot.tenants) == 1)).any()
+
+    gate.set()
+    rep = svc.maintenance(block=True)
+    assert rep.refresh_published and svc._embed_version == 1
+
+    # no resurrection: the freed rows stayed invalid through the swap
+    live = {int(v) for v in svc._live_vids()}
+    assert not (live & freed)
+    dt = sorted(set(doomed))
+    plan = svc.plan(CacheRequest.build(emb(dt), 1, texts=dt),
+                    coalesce=False)
+    assert not plan.hit.any()
+    assert all(r is None for r in plan.responses)
+    # and the surviving tenant still serves at full recall
+    t0 = sorted({f"what dose of drug {i % 6} should the patient take"
+                 for i in range(16)})
+    plan0 = svc.plan(CacheRequest.build(emb(t0), 0, texts=t0),
+                     coalesce=False)
+    assert plan0.hit.all()
+
+
+# ---------------------------------------------------------------------------
+# publish-time threshold recalibration (§11)
+# ---------------------------------------------------------------------------
+
+def test_policy_table_recalibrate_all_moves_every_tenant():
+    from repro.cache_service.policy import PolicyTable, TenantPolicy
+    table = PolicyTable(TenantPolicy(0.9, 0.02))
+    table.set(5, TenantPolicy(0.95, 0.01))
+    table.recalibrate_all(0.8)
+    assert table.default.threshold == 0.8
+    assert table.get(5).threshold == 0.8
+    assert table.get(7).threshold == 0.8          # unknown -> default
+    # margins rescaled through with_threshold, not carried verbatim
+    assert table.default.admission_margin == pytest.approx(
+        TenantPolicy(0.9, 0.02).with_threshold(0.8).admission_margin)
+    assert table.get(5).admission_margin == pytest.approx(
+        TenantPolicy(0.95, 0.01).with_threshold(0.8).admission_margin)
+
+
+def test_publish_recalibrates_thresholds_and_resets_scores(enc_setup):
+    svc, _, emb = _service(enc_setup, recalibrate=True)
+    svc.set_tenant_policy(9, threshold=0.95, admission_margin=0.01)
+    _stream(svc, emb, n=24)
+    assert svc.feedback._res                      # §9 reservoirs fed
+    svc.maintenance()
+    rep = svc.maintenance(block=True)
+    assert rep.refresh_published
+    new_thr = svc.policies.get(0).threshold
+    lo, hi = svc._refresh_policy.recalibrate_bounds
+    assert lo <= new_thr <= hi
+    assert svc.policies.get(9).threshold == new_thr  # every tenant moved
+    st = svc.stats_snapshot().refresh
+    assert st["recalibrated_threshold"] == pytest.approx(new_thr)
+    # old-space score reservoirs dropped; version-free pair texts kept
+    assert not svc.feedback._res
+    assert len(svc.feedback.pairs) > 0
+
+
+def test_publish_without_recalibrate_keeps_thresholds(enc_setup):
+    svc, _, emb = _service(enc_setup)             # recalibrate defaults off
+    _stream(svc, emb, n=24)
+    svc.maintenance()
+    assert svc.maintenance(block=True).refresh_published
+    assert svc.policies.get(0).threshold == 0.9
+    assert svc.stats_snapshot().refresh["recalibrated_threshold"] is None
+
+
+def test_rollback_never_recalibrates(enc_setup):
+    svc, _, emb = _service(enc_setup, recalibrate=True, min_precision=1.01)
+    _stream(svc, emb, n=24)
+    assert svc.feedback._res
+    svc.maintenance()
+    assert svc.maintenance(block=True).refresh_rolled_back
+    assert svc.policies.get(0).threshold == 0.9   # untouched
+    assert svc.feedback._res                      # reservoirs survive
+    assert svc.stats_snapshot().refresh["recalibrated_threshold"] is None
+
+
+def test_texts_gc_with_responses(enc_setup):
+    """Retained query texts are freed with the entry (no host leak)."""
+    svc, _, emb = _service(enc_setup)
+    _stream(svc, emb, n=16, tenant=3, prefix="leaky")
+    assert svc._texts
+    svc.evict_tenant(3)
+    assert not svc._texts

@@ -1,0 +1,240 @@
+"""Property tests for the online feedback loop (DESIGN.md §9/§11).
+
+Two invariant families the unit tests in test_admission_learning.py
+don't pin down:
+
+  * **reservoir uniformity** — both reservoirs (scores and text pairs)
+    run Vitter's algorithm R; every streamed event must be retained
+    with equal probability C/N regardless of arrival position, or a
+    drifting stream would bias every refit toward one era.
+  * **"no refit fires"** — each hysteresis guard (`min_samples`,
+    `min_class`, `refit_interval`, `max_step`) must *individually*
+    suppress or bound a refit: a fit attempt under a tripped guard
+    returns the caller's policy unchanged, and an applied refit never
+    moves the threshold further than `max_step`.
+
+Fuzzed with hypothesis when it is installed; otherwise each property
+runs over a fixed deterministic case grid, so the invariants are
+exercised in tier-1 either way.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.cache_service.feedback import (
+    FeedbackAccumulator, FeedbackConfig, PairReservoir, TenantReservoir,
+)
+from repro.cache_service.policy import TenantPolicy
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def fuzz(fallback_cases, *strategies):
+    """``@given(*strategies)`` when hypothesis is available, else a
+    parametrize over ``fallback_cases`` (tuples of the same arity)."""
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(**SETTINGS)(given(*strategies)(fn))
+
+        def run(case):
+            fn(*case)
+        run.__name__ = fn.__name__      # not functools.wraps: pytest
+        run.__doc__ = fn.__doc__        # would introspect __wrapped__
+        return pytest.mark.parametrize("case", fallback_cases)(run)
+    return deco
+
+
+# ---------------------------------------------------------------------------
+# reservoir bookkeeping invariants (any capacity, any stream length)
+# ---------------------------------------------------------------------------
+
+_FILL_CASES = [(1, 0, 0), (1, 7, 1), (8, 8, 2), (8, 300, 3),
+               (64, 17, 4), (64, 300, 5), (33, 100, 6)]
+_fill_strategies = (st.integers(1, 64), st.integers(0, 300),
+                    st.integers(0, 10**6)) if HAVE_HYPOTHESIS else ()
+
+
+@fuzz(_FILL_CASES, *_fill_strategies)
+def test_tenant_reservoir_fill_and_seen(cap, n, seed):
+    res = TenantReservoir(cap, np.random.default_rng(seed))
+    for i in range(n):
+        res.add(i / max(n, 1), i % 2 == 0)
+    assert res.seen == n
+    assert res.fill == min(n, cap)
+    scores, labels = res.arrays()
+    assert len(scores) == len(labels) == res.fill
+    assert np.all(scores <= 1.0) and np.all(scores >= -1.0)
+
+
+@fuzz(_FILL_CASES, *_fill_strategies)
+def test_pair_reservoir_fill_and_content(cap, n, seed):
+    res = PairReservoir(cap, np.random.default_rng(seed))
+    streamed = set()
+    for i in range(n):
+        res.add(f"q{i}", f"n{i}", i % 3 == 0)
+        streamed.add((f"q{i}", f"n{i}", 1 if i % 3 == 0 else 0))
+    assert res.seen == n
+    assert len(res) == min(n, cap)
+    assert res.n_pos + res.n_neg == len(res)
+    # the sample is a subset of the stream, labels intact
+    assert set(res.items) <= streamed
+
+
+_SPLIT_CASES = [(2, 0.5, 0), (5, 0.25, 1), (17, 0.1, 2), (40, 0.6, 3),
+                (9, 0.33, 4)]
+_split_strategies = (st.integers(2, 40), st.floats(0.05, 0.6),
+                     st.integers(0, 10**6)) if HAVE_HYPOTHESIS else ()
+
+
+@fuzz(_SPLIT_CASES, *_split_strategies)
+def test_pair_reservoir_split_partitions(n, eval_frac, seed):
+    res = PairReservoir(64, np.random.default_rng(seed))
+    for i in range(n):
+        res.add(f"q{i}", f"n{i}", i % 2 == 0)
+    train, ev = res.split(eval_frac, seed=seed)
+    assert len(ev.labels) == int(np.ceil(len(res) * eval_frac))
+    assert len(train.labels) + len(ev.labels) == len(res)
+    # deterministic: the same reservoir state yields the same split
+    train2, ev2 = res.split(eval_frac, seed=seed)
+    assert list(train.q1) == list(train2.q1)
+    assert list(ev.q1) == list(ev2.q1)
+    # disjoint partition of the sample
+    assert set(zip(train.q1, train.q2)) | set(zip(ev.q1, ev.q2)) \
+        == {(q, nb) for q, nb, _ in res.items}
+
+
+# ---------------------------------------------------------------------------
+# algorithm-R uniformity (deterministic statistical check: the property
+# is about inclusion frequency *across* seeds)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("reservoir_cls", [TenantReservoir, PairReservoir])
+def test_reservoir_uniform_over_stream(reservoir_cls):
+    cap, n, trials = 32, 128, 400
+    counts = np.zeros(n)
+    for t in range(trials):
+        res = reservoir_cls(cap, np.random.default_rng(t))
+        for i in range(n):
+            if reservoir_cls is TenantReservoir:
+                res.add(i / n, False)
+            else:
+                res.add(str(i), str(i), False)
+        if reservoir_cls is TenantReservoir:
+            kept = np.rint(res.arrays()[0] * n).astype(int)
+        else:
+            kept = [int(q) for q, _, _ in res.items]
+        counts[kept] += 1
+    freq = counts / trials
+    expect = cap / n
+    # per-item inclusion frequency: ~5.5 sd tolerance at 400 trials
+    assert np.all(np.abs(freq - expect) < 0.12), \
+        f"max dev {np.abs(freq - expect).max():.3f}"
+    # no era bias: first and second half of the stream carry equal mass
+    assert abs(freq[:n // 2].mean() - freq[n // 2:].mean()) < 0.03
+
+
+# ---------------------------------------------------------------------------
+# "no refit fires" under each hysteresis guard
+# ---------------------------------------------------------------------------
+
+def _feed(acc, tenant, scores, labels):
+    for s, d in zip(scores, labels):
+        acc.observe(tenant, float(s), bool(d), admitted=True)
+
+
+def _policy():
+    return TenantPolicy(threshold=0.85, admission_margin=0.02)
+
+
+@fuzz([(0, 0), (1, 1), (16, 2), (31, 3)],
+      *((st.integers(0, 31), st.integers(0, 10**6))
+        if HAVE_HYPOTHESIS else ()))
+def test_guard_min_samples(n, seed):
+    """Below min_samples no refit is due and a forced fit is refused."""
+    cfg = FeedbackConfig(min_samples=32, seed=seed)
+    acc = FeedbackAccumulator(cfg)
+    rng = np.random.default_rng(seed)
+    _feed(acc, 0, rng.random(n), rng.integers(0, 2, n))
+    assert not acc.refit_due(0)
+    pol = _policy()
+    out, rep = acc.fit(0, pol)
+    assert not rep.applied and rep.reason == "min-samples"
+    assert out is pol
+
+
+@fuzz([(0, 0), (3, 1), (7, 2), (5, 3)],
+      *((st.integers(0, 7), st.integers(0, 10**6))
+        if HAVE_HYPOTHESIS else ()))
+def test_guard_min_class(n_dup, seed):
+    """Enough events but one starved class: the fit is refused."""
+    cfg = FeedbackConfig(min_samples=16, min_class=8, refit_interval=1,
+                         seed=seed)
+    acc = FeedbackAccumulator(cfg)
+    rng = np.random.default_rng(seed)
+    n = 64
+    labels = np.zeros(n, bool)
+    labels[:n_dup] = True           # fewer duplicates than min_class
+    _feed(acc, 0, rng.random(n), labels)
+    pol = _policy()
+    out, rep = acc.fit(0, pol)
+    assert not rep.applied and rep.reason == "class-starved"
+    assert out is pol
+
+
+@fuzz([(0, 0), (1, 1), (30, 2), (63, 3)],
+      *((st.integers(0, 63), st.integers(0, 10**6))
+        if HAVE_HYPOTHESIS else ()))
+def test_guard_refit_interval(n_new, seed):
+    """After one examination, fewer than refit_interval new events
+    means the tenant is not re-examined."""
+    cfg = FeedbackConfig(min_samples=16, min_class=4, refit_interval=64,
+                         seed=seed)
+    acc = FeedbackAccumulator(cfg)
+    rng = np.random.default_rng(seed)
+    scores = np.concatenate([rng.uniform(0.8, 1.0, 32),
+                             rng.uniform(0.0, 0.5, 32)])
+    labels = np.concatenate([np.ones(32, bool), np.zeros(32, bool)])
+    _feed(acc, 0, scores, labels)
+    pol, _ = acc.fit(0, _policy())         # first examination
+    _feed(acc, 0, rng.random(n_new), rng.integers(0, 2, n_new))
+    assert not acc.refit_due(0)            # n_new < refit_interval
+    out, rep = acc.fit(0, pol)
+    assert not rep.applied and rep.reason == "interval"
+    assert out is pol
+
+
+@fuzz([(32, 0.5, 0), (64, 0.2, 1), (200, 0.8, 2), (100, 0.5, 3),
+       (50, 0.95, 4), (50, 0.05, 5)],
+      *((st.integers(32, 200), st.floats(0.0, 1.0),
+         st.integers(0, 10**6)) if HAVE_HYPOTHESIS else ()))
+def test_guard_max_step_bounds_any_applied_refit(n, dup_frac, seed):
+    """Whatever the reservoir says, one applied refit never moves the
+    threshold more than max_step, and a loosening never breaches the
+    observed false-hit budget."""
+    cfg = FeedbackConfig(min_samples=16, min_class=4, refit_interval=1,
+                         max_step=0.02, seed=seed)
+    acc = FeedbackAccumulator(cfg)
+    rng = np.random.default_rng(seed)
+    labels = rng.random(n) < dup_frac
+    # duplicates score high-ish, distincts low-ish, with overlap
+    scores = np.where(labels, rng.uniform(0.5, 1.0, n),
+                      rng.uniform(0.0, 0.8, n))
+    _feed(acc, 0, scores, labels)
+    pol = _policy()
+    out, rep = acc.fit(0, pol)
+    if not rep.applied:
+        assert out is pol
+        assert rep.new_threshold == rep.old_threshold
+        return
+    assert abs(rep.new_threshold - rep.old_threshold) <= cfg.max_step + 1e-9
+    assert out.threshold == rep.new_threshold
+    if rep.new_threshold < rep.old_threshold:
+        res_scores, res_labels = acc._res[0].arrays()
+        neg = res_scores[res_labels == 0]
+        assert (neg >= rep.new_threshold).mean() <= cfg.max_false_hit_rate
+    assert 0.0 <= out.admission_margin <= cfg.max_margin
