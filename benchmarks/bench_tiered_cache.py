@@ -20,6 +20,11 @@ Cascade paths compared per size:
   * ``cascade_fused_kernel``  — the Pallas kernel forced on
     (interpret mode off-TPU; correctness-path timing, not the CPU
     production path).
+  * ``cascade_fused_blockwise`` — the kernel again, but streaming the
+    warm panel in ``warm_block_n``-row blocks with a running argmax
+    (DESIGN.md §12) — the residency mode that lets the warm slice
+    exceed VMEM.  Asserted bit-exact against the unfused cascade like
+    the other fp32 fused rows.
   * ``cascade_int8``          — the warm panel scanned from its int8
     symmetric quantization, selected rows re-scored exactly
     (DESIGN.md §8); recall must stay within 0.5% of fp32.
@@ -45,6 +50,21 @@ Every row also lands in a machine-readable ``BENCH_cascade.json``
 have a perf trajectory to diff against — CI enforces the diff via
 ``scripts/check_bench_trajectory.py`` (recall must not regress vs the
 committed baseline, p50 ratios bounded on a matching fleet).
+
+The ``tiered/cold/*`` rows grow the corpus past device memory
+(DESIGN.md §12): the device keeps a fixed hot+warm slice while the
+rest of the corpus lives only in the host-RAM cold tier (int8 panel,
+coarse routing, budgeted fetch + exact device re-score).  At each
+cold size — 1M rows by default, ``BENCH_COLD_SIZES`` to override,
+64k under ``--smoke`` — a warm-only service and a cold-enabled
+service share byte-identical device states, and the bench
+hard-asserts the subsystem's reason to exist: at equal device
+memory, cold-enabled recall is *strictly* above warm-only recall.
+The ``cold_enabled`` row also carries the cold hit rate and fetch
+accounting, ``promotion`` times one maintenance-tick drain of queued
+re-hot rows, and ``tiered/cold/p50_ratio`` bounds the overhead the
+cold path adds at a warm-only-feasible size (where every query is
+answerable on-device, the router should decline almost every fetch).
 
 The ``admission_fixed`` / ``admission_learned`` rows run a drifting
 paraphrase stream through two otherwise-identical CacheServices — one
@@ -99,8 +119,8 @@ import numpy as np
 
 from benchmarks.common import fmt_derived, timed
 from repro.cache_service import (
-    CacheRequest, CacheService, EmbedderRefreshPolicy, FeedbackConfig,
-    tiers,
+    CacheRequest, CacheService, ColdRoutingPolicy, EmbedderRefreshPolicy,
+    FeedbackConfig, tiers,
 )
 from repro.configs import get_config
 from repro.core import EmbedderTrainer, FinetuneConfig
@@ -129,6 +149,11 @@ DEFAULT_SIZES = [1 << 14, 1 << 16, 1 << 18]
 # maintenance-heavy rows (flush+rebuild, rebuild-stall serving) only
 # run at or below this size unless BENCH_TIERED_SIZES opts in
 MAINT_MAX = 1 << 16
+# cold-tier rows: the device keeps this fixed hot+warm slice while the
+# rest of the corpus lives only in host RAM (DESIGN.md §12)
+COLD_HOT = 1 << 10
+COLD_WARM = 1 << 14
+COLD_DEFAULT_SIZES = [1 << 20]     # 1M-row corpus; --smoke drops to 64k
 
 
 def _unit(x):
@@ -209,6 +234,13 @@ def _sizes():
     return [int(s) for s in env.split(",") if s.strip()]
 
 
+def _cold_sizes():
+    env = os.environ.get("BENCH_COLD_SIZES")
+    if env is None:
+        return list(COLD_DEFAULT_SIZES)
+    return [int(s) for s in env.split(",") if s.strip()]
+
+
 def _maintenance_rows_enabled(n_total):
     return n_total <= MAINT_MAX or bool(os.environ.get("BENCH_TIERED_SIZES"))
 
@@ -244,6 +276,9 @@ def _bench_one_size(n_total):
     thresholds = jnp.full((Q,), THRESHOLD, jnp.float32)
 
     flat_fn = jax.jit(lambda st, qq: store_lib.query(st, qq, THRESHOLD, 1))
+    # stream the warm panel in 4 blocks — the §12 residency mode where
+    # the warm slice need not fit VMEM at once
+    warm_block = max((n_total - HOT + 3) // 4, 256)
     paths = {
         "cascade_unfused": jax.jit(partial(
             tiers.cascade_query, k=1, n_probe=N_PROBE, tail=0, fused=False)),
@@ -252,6 +287,9 @@ def _bench_one_size(n_total):
         "cascade_fused_kernel": jax.jit(partial(
             tiers.cascade_query, k=1, n_probe=N_PROBE, tail=0, fused=True,
             use_kernel=True)),
+        "cascade_fused_blockwise": jax.jit(partial(
+            tiers.cascade_query, k=1, n_probe=N_PROBE, tail=0, fused=True,
+            use_kernel=True, warm_block_n=warm_block)),
         "cascade_int8": jax.jit(partial(
             tiers.cascade_query, k=1, n_probe=N_PROBE, tail=0, fused=True,
             quantized=True)),
@@ -281,7 +319,9 @@ def _bench_one_size(n_total):
         yield f"{tag}/{name}", us / Q, {
             "n": n_total, "us_per_query": us / Q, "p50_us": p50,
             "recall_at_thr": recall, "spurious_hits": spurious,
-            "speedup_vs_flat": speedup}
+            "speedup_vs_flat": speedup,
+            **({"warm_block_n": warm_block}
+               if name == "cascade_fused_blockwise" else {})}
         if name == "cascade_int8":
             # quantized selection may flip candidates inside the error
             # bound; the budget is 0.5% of the fp32 recall
@@ -296,7 +336,8 @@ def _bench_one_size(n_total):
     # kernel is a correctness path and must not mask a regression here
     if n_total >= 1 << 16:
         prod = {n: s for n, s in speedups.items()
-                if n != "cascade_fused_kernel"}
+                if n not in ("cascade_fused_kernel",
+                             "cascade_fused_blockwise")}
         assert max(prod.values()) > 1.0, \
             f"{tag}: no production cascade path beats flat ({prod})"
 
@@ -304,7 +345,8 @@ def _bench_one_size(n_total):
     # cascade bit-exactly (scores, ids, hit set); the int8 row is
     # excluded — its parity budget is the 0.5% recall assert above
     base = results["cascade_unfused"]
-    for name in ("cascade_fused", "cascade_fused_kernel"):
+    for name in ("cascade_fused", "cascade_fused_kernel",
+                 "cascade_fused_blockwise"):
         for field in tiers.CascadeResult._fields:
             np.testing.assert_array_equal(
                 np.asarray(getattr(base, field)),
@@ -478,6 +520,208 @@ def _bench_rebuild_stall(n_total, n_clusters, bucket, iters):
               f"serving p99 (inline {p99s['inline']:.0f}us vs bg "
               f"{p99s['bg']:.0f}us, rebuild {walls['inline']:.2f}s)",
               file=sys.stderr)
+
+
+def _device_states(device_keys, vid0, hot_n, n_clusters, bucket, iters):
+    """Bulk hot + warm states over ``device_keys`` whose value ids are
+    the *global* corpus indices ``vid0..vid0+len`` — the device slice
+    of a corpus whose remainder lives only in the cold tier."""
+    n = len(device_keys)
+    warm_n = n - hot_n
+    vids = jnp.arange(vid0, vid0 + n, dtype=jnp.int32)
+    warm = tiers.init_warm(warm_n, DIM, n_clusters, bucket)._replace(
+        keys=jnp.asarray(device_keys[:warm_n]),
+        valid=jnp.ones((warm_n,), bool),
+        tenants=jnp.zeros((warm_n,), jnp.int32),
+        value_ids=vids[:warm_n],
+        write_seq=jnp.arange(1, warm_n + 1, dtype=jnp.int32),
+        total=jnp.asarray(warm_n, jnp.int32))
+    warm = jax.jit(partial(tiers.warm_rebuild, iters=iters, seed=SEED))(warm)
+    warm = tiers.requantize(warm)
+    hot = tiers.init_hot(hot_n, DIM)._replace(
+        keys=jnp.asarray(device_keys[warm_n:]),
+        valid=jnp.ones((hot_n,), bool),
+        tenants=jnp.zeros((hot_n,), jnp.int32),
+        last_used=jnp.arange(1, hot_n + 1, dtype=jnp.int32),
+        value_ids=vids[warm_n:],
+        clock=jnp.asarray(hot_n, jnp.int32))
+    return hot, warm
+
+
+def _cold_service(keys, hot_n, warm_n, n_clusters, bucket, iters,
+                  cold_policy=None):
+    """A live CacheService whose device tiers hold only the *last*
+    ``hot_n + warm_n`` corpus rows; with ``cold_policy`` the remaining
+    rows are bulk-loaded into the host-RAM cold tier (equal device
+    memory either way — the cold rows never touch HBM)."""
+    n = len(keys)
+    warm_lo = n - hot_n - warm_n
+    hot, warm = _device_states(keys[warm_lo:], warm_lo, hot_n,
+                               n_clusters, bucket, iters)
+    svc = CacheService(dim=DIM, hot_capacity=hot_n, warm_capacity=warm_n,
+                       n_clusters=n_clusters, bucket=bucket,
+                       n_probe=N_PROBE, threshold=THRESHOLD,
+                       flush_size=256, kmeans_iters=iters, seed=SEED,
+                       cold_capacity=warm_lo if cold_policy else 0,
+                       cold_policy=cold_policy)
+    svc.hot, svc.warm = hot, warm
+    svc._next_vid = n
+    if cold_policy is not None and warm_lo:
+        svc.cold.bulk_load(keys[:warm_lo],
+                           np.arange(warm_lo, dtype=np.int64),
+                           np.zeros(warm_lo, np.int32))
+    return svc, warm_lo
+
+
+def _exact_hit_mask(keys, qn):
+    """Exact max-sim >= THRESHOLD per query over the full corpus,
+    chunked on the host (the corpus deliberately exceeds what the flat
+    device store should be asked to hold)."""
+    best = np.full(len(qn), -1.0, np.float32)
+    for lo in range(0, len(keys), 1 << 18):
+        best = np.maximum(best, (qn @ keys[lo:lo + (1 << 18)].T
+                                 ).max(axis=1))
+    return best >= THRESHOLD
+
+
+def _cold_queries(rng, keys, warm_lo, exclude=None):
+    """Half near-duplicates of cold-resident rows, a quarter of
+    device-resident rows, a quarter novel — the mix that separates
+    warm-only recall from cold-enabled recall."""
+    pool = np.arange(warm_lo)
+    if exclude is not None:
+        pool = np.setdiff1d(pool, exclude)
+    ci = rng.choice(pool, Q // 2, replace=False)
+    di = warm_lo + rng.choice(len(keys) - warm_lo, Q // 4, replace=False)
+    pos = keys[np.concatenate([ci, di])]
+    pos = _unit(pos + 0.05 * rng.standard_normal(pos.shape
+                                                 ).astype(np.float32))
+    neg = _unit(rng.standard_normal((Q - len(pos), DIM)).astype(np.float32))
+    return np.concatenate([pos, neg]).astype(np.float32), ci
+
+
+def _bench_cold_tier(n_total):
+    """Warm-only vs cold-enabled recall at equal device memory, cold
+    hit-rate/fetch accounting, and one timed promotion drain
+    (DESIGN.md §12).  The device slice is fixed at COLD_HOT + COLD_WARM
+    rows regardless of ``n_total`` — past 64k the corpus mostly lives
+    in host RAM, which is the whole point."""
+    tag = f"tiered/cold/{n_total // 1024}k"
+    n_groups = max(n_total // 64, 64)
+    rng = np.random.default_rng(SEED + 5)
+    keys = _corpus(rng, n_total, n_groups)
+    cold_n = n_total - COLD_HOT - COLD_WARM
+    assert cold_n > 0, f"cold bench needs > {COLD_HOT + COLD_WARM} rows"
+    # the router gate self-calibrates to the corpus's cluster spread
+    # at route-fit time (cold.rebuild_routes); only the shape knobs
+    # scale with the corpus here
+    pol = ColdRoutingPolicy(
+        n_probe=8, fetch_budget=64, promote_max=512,
+        n_clusters=min(256, max(64, cold_n // 4096)),
+        kmeans_iters=4, kmeans_sample=1 << 16,
+        route_rebuild_every=1 << 30, seed=SEED)
+    q, cold_idx = _cold_queries(rng, keys, cold_n)
+    exact_hit = _exact_hit_mask(keys, q)
+    req = CacheRequest.build(q)
+
+    recalls = {}
+    for mode, policy in (("warm_only", None), ("cold_enabled", pol)):
+        svc, warm_lo = _cold_service(keys, COLD_HOT, COLD_WARM,
+                                     *SIZES[COLD_WARM], cold_policy=policy)
+        plan = svc.plan(req, coalesce=False)
+        recall, spurious = _recall(plan, exact_hit)
+        recalls[mode] = recall
+        p50, us = _timed_p50(lambda: svc.plan(req, coalesce=False),
+                             repeats=5)
+        derived = {
+            "n": n_total, "device_rows": COLD_HOT + COLD_WARM,
+            "cold_rows": warm_lo if policy else 0,
+            "us_per_query": us / Q, "p50_us": p50,
+            "recall_at_thr": recall, "spurious_hits": spurious,
+            "hits": int(plan.hit.sum())}
+        if policy is not None:
+            st = svc.stats_snapshot().tiers["cold"]
+            consulted = max(st["cold_fetches"], 1)
+            derived.update({
+                "cold_hits": st["cold_hits"],
+                "cold_hit_rate": round(st["cold_hits"] / consulted, 4),
+                "cold_fetches": st["cold_fetches"],
+                "cold_fetched_rows": st["cold_fetched_rows"],
+                "cold_router_skips": st["cold_router_skips"],
+                "cold_route_slack": st["cold_route_slack"]})
+        yield f"{tag}/{mode}", us / Q, derived
+
+        if policy is None:
+            continue
+        # the row this subsystem exists for: at byte-identical device
+        # tiers, the cold fallback must strictly lift recall
+        assert recalls["cold_enabled"] > recalls["warm_only"], \
+            f"{tag}: cold tier did not lift recall " \
+            f"({recalls['cold_enabled']} vs {recalls['warm_only']} " \
+            f"warm-only at equal device memory)"
+        assert st["cold_hits"] > 0, f"{tag}: no cold hits recorded"
+
+        # promotion drain: warm up the append path on the first batch
+        # of queued re-hot rows, then time a fresh drain end to end
+        svc.maintenance()
+        q2, _ = _cold_queries(np.random.default_rng(SEED + 6), keys,
+                              cold_n, exclude=cold_idx)
+        svc.plan(CacheRequest.build(q2), coalesce=False)
+        pending = svc.cold.pending_promotions
+        t0 = time.perf_counter()
+        rep = svc.maintenance()
+        wall_us = (time.perf_counter() - t0) * 1e6
+        assert rep.cold_promoted > 0, f"{tag}: promotion drain was empty"
+        assert svc.cold.pending_promotions == 0
+        yield f"{tag}/promotion", wall_us, {
+            "promoted": rep.cold_promoted, "pending_before": pending,
+            "wall_us": wall_us,
+            "us_per_row": wall_us / rep.cold_promoted}
+
+
+def _bench_cold_overhead():
+    """p50 ratio of the served path with the cold tier enabled vs
+    disabled at a warm-only-feasible size: every query is answerable
+    on-device, so the cold path's only job is to get out of the way —
+    the tight default router margin declines the novel-query fetches.
+    The ratio is bounded here and tracked by the trajectory gate."""
+    n, hot_n = 1 << 13, COLD_HOT
+    n_clusters, bucket, iters = 64, 256, 2
+    rng = np.random.default_rng(SEED + 7)
+    keys = _corpus(rng, n, n // 64)
+    q = np.asarray(_queries(rng, keys))
+    req = CacheRequest.build(q)
+
+    p50s = {}
+    for mode, policy in (("off", None),
+                         ("on", ColdRoutingPolicy(seed=SEED))):
+        hot, warm = _device_states(keys, 0, hot_n, n_clusters, bucket,
+                                   iters)
+        svc = CacheService(dim=DIM, hot_capacity=hot_n,
+                           warm_capacity=n - hot_n,
+                           n_clusters=n_clusters, bucket=bucket,
+                           n_probe=N_PROBE, threshold=THRESHOLD,
+                           flush_size=256, kmeans_iters=iters, seed=SEED,
+                           cold_capacity=n if policy else 0,
+                           cold_policy=policy)
+        svc.hot, svc.warm = hot, warm
+        svc._next_vid = n
+        if policy is not None:
+            # a full copy of the corpus in cold — the worst case for
+            # router work on every below-threshold query
+            svc.cold.bulk_load(keys, np.arange(n, dtype=np.int64),
+                               np.zeros(n, np.int32))
+        p50s[mode], _ = _timed_p50(
+            lambda: svc.plan(req, coalesce=False), repeats=15)
+    ratio = p50s["on"] / max(p50s["off"], 1e-9)
+    # generous hard bound — the trajectory gate holds the tight one
+    # (CPU runners are contended; a genuine regression blows past 2.5x)
+    assert ratio < 2.5, \
+        f"cold tier inflates warm-feasible serving p50 {ratio:.2f}x " \
+        f"({p50s['on']:.0f}us vs {p50s['off']:.0f}us)"
+    yield "tiered/cold/p50_ratio", p50s["on"], {
+        "n": n, "p50_on_us": p50s["on"], "p50_off_us": p50s["off"],
+        "p50_ratio": round(ratio, 4)}
 
 
 def _drift_stream(rng, intents, n_batches=24, batch=32):
@@ -840,6 +1084,14 @@ def bench_tiered_cache():
         for name, us, derived in _bench_one_size(n_total):
             rows.append({"name": name, "us_per_call": us, **derived})
             yield name, us, fmt_derived(derived)
+    # host-RAM cold tier: recall past device memory + overhead guard
+    for n_total in _cold_sizes():
+        for name, us, derived in _bench_cold_tier(n_total):
+            rows.append({"name": name, "us_per_call": us, **derived})
+            yield name, us, fmt_derived(derived)
+    for name, us, derived in _bench_cold_overhead():
+        rows.append({"name": name, "us_per_call": us, **derived})
+        yield name, us, fmt_derived(derived)
     # size-independent: learned-vs-fixed admission on a drifting stream
     for name, us, derived in _bench_admission_drift():
         rows.append({"name": name, "us_per_call": us, **derived})
@@ -860,6 +1112,7 @@ def bench_tiered_cache():
             "backend": jax.default_backend(),
             "devices": len(jax.devices()),
             "sizes": _sizes(),
+            "cold_sizes": _cold_sizes(),
             "q": Q, "dim": DIM, "threshold": THRESHOLD,
             "rows": rows,
         }, indent=1) + "\n")
@@ -876,10 +1129,12 @@ def main() -> None:
 
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny-corpus run (4k entries) for CI")
+                    help="tiny-corpus run (4k entries, 64k cold tier) "
+                         "for CI")
     args = ap.parse_args()
     if args.smoke:
         os.environ["BENCH_TIERED_SIZES"] = str(1 << 12)
+        os.environ.setdefault("BENCH_COLD_SIZES", str(1 << 16))
     print("name,us_per_call,derived")
     for name, us, derived in bench_tiered_cache():
         print(f"{name},{us:.1f},{derived}", flush=True)

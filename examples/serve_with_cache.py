@@ -19,7 +19,10 @@ hot path (DESIGN.md §7), --learned-admission to refit per-tenant
 thresholds/margins online from observed duplicate rates (DESIGN.md
 §9), --learned-embedder to fine-tune the embedder itself from pooled
 serving feedback and hot-swap it with a versioned shadow re-embed
-(DESIGN.md §11).  Requests flow through the typed plan/commit
+(DESIGN.md §11), --cold-capacity N to back the warm ring with a
+host-RAM cold tier that catches demotions and serves them back through
+budgeted fetches + async promotion (DESIGN.md §12).  Requests flow
+through the typed plan/commit
 lifecycle (near-identical misses in a batch share one generation) and
 the summary prints the protocol's unified stats() snapshot.
 """
@@ -71,6 +74,15 @@ def main():
                          "in the background, gates on held-out eval, and "
                          "hot-swaps with a versioned shadow re-embed "
                          "(DESIGN.md §11)")
+    ap.add_argument("--cold-capacity", type=int, default=0,
+                    help="host-RAM cold-tier rows behind the warm ring: "
+                         "warm evictions demote instead of dropping, "
+                         "below-threshold queries fall through to a "
+                         "budgeted cold fetch, maintenance() promotes "
+                         "re-hot rows back (0 = off; DESIGN.md §12)")
+    ap.add_argument("--warm-block", type=int, default=0,
+                    help="stream the fused kernel's warm panel in "
+                         "N-row blocks (0 = whole-panel; DESIGN.md §12)")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write the telemetry registry snapshot as "
                          "JSON-lines after the run (DESIGN.md §10.1); "
@@ -78,10 +90,11 @@ def main():
                          "--validate PATH")
     args = ap.parse_args()
     if args.flat and (args.fused or args.background_rebuild
-                      or args.learned_admission or args.learned_embedder):
+                      or args.learned_admission or args.learned_embedder
+                      or args.cold_capacity or args.warm_block):
         ap.error("--fused/--background-rebuild/--learned-admission/"
-                 "--learned-embedder require the tiered CacheService "
-                 "(drop --flat)")
+                 "--learned-embedder/--cold-capacity/--warm-block "
+                 "require the tiered CacheService (drop --flat)")
 
     # --- LLM backend (reduced variant of the assigned arch) -----------
     dec_cfg = get_config(args.arch).reduced()
@@ -123,6 +136,8 @@ def main():
                              embedder_tokenizer=tok
                              if args.learned_embedder else None,
                              refresh_policy=refresh,
+                             cold_capacity=args.cold_capacity,
+                             warm_block=args.warm_block or None,
                              telemetry=telemetry)
         print(f"cascade path: {'fused kernel' if cache.fused else 'four-op'}"
               f" (backend {jax.default_backend()})")
@@ -173,6 +188,15 @@ def main():
         print(f"admission skips: {st['admission_skips']}  "
               f"responses GC'd: {st['evictions']}  live: "
               f"{st['live_responses']}")
+        if args.cold_capacity:
+            cd = cache.stats_snapshot().tiers["cold"]
+            print(f"cold tier: {cd['cold_rows']} rows "
+                  f"({cd['cold_occupancy']:.0%}), hits {cd['cold_hits']} "
+                  f"from {cd['cold_fetches']} fetches "
+                  f"({cd['cold_fetched_rows']} rows shipped, "
+                  f"{cd['cold_router_skips']} router skips); promoted "
+                  f"{cd['cold_promoted']}, final drops "
+                  f"{cd['cold_dropped']}")
         if args.learned_admission:
             print(f"learned admission: {st['refits_applied']} refits "
                   f"from {st['feedback_events']} events "
@@ -198,7 +222,8 @@ def main():
     print("\n=== telemetry (DESIGN.md §10) ===")
     print(f"maintenance calls between batches: {st['maintenance_calls']}")
     stage_h = telemetry.stage_histogram()
-    for stage in ("embed", "plan", "generate", "commit", "maintenance"):
+    for stage in ("embed", "plan", "cold_fetch", "generate", "commit",
+                  "maintenance"):
         agg = stage_h.aggregate(stage=stage)
         if agg.count:
             print(f"  stage {stage:<12} p50 {agg.quantile(0.5) * 1e3:7.2f} "

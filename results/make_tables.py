@@ -72,9 +72,10 @@ def cascade_table(path="results/BENCH_cascade.json"):
     (latency/recall), maintenance/rebuild rows, the per-stage serving
     latency breakdown (DESIGN.md §10), and the learned-vs-fixed
     admission comparison the feedback loop (DESIGN.md §9) is judged
-    by.  Every row must land in some table; a leftover gets a loud
-    stderr warning instead of vanishing (a renamed bench row silently
-    falling out of EXPERIMENTS.md is exactly how a regression hides)."""
+    by, the embedder-refresh comparison (§11), and the cold-tier rows
+    (§12).  Every row must land in some table; a leftover fails the
+    run (a renamed bench row silently falling out of EXPERIMENTS.md is
+    exactly how a regression hides)."""
     with open(path) as f:
         data = json.load(f)
     rows = {r["name"]: r for r in data["rows"]}
@@ -86,8 +87,8 @@ def cascade_table(path="results/BENCH_cascade.json"):
     print("| row | us/query | p50 ms | recall@thr | speedup vs flat |")
     print("|---|---|---|---|---|")
     for name, r in rows.items():
-        if "us_per_query" not in r:
-            continue
+        if "us_per_query" not in r or name.startswith("tiered/cold/"):
+            continue           # cold rows get their own table below
         rendered.add(name)
         p50 = f"{r['p50_us']/1e3:.1f}" if "p50_us" in r else "-"
         rec = f"{r['recall_at_thr']:.3f}" if "recall_at_thr" in r else "-"
@@ -140,6 +141,67 @@ def cascade_table(path="results/BENCH_cascade.json"):
                   f"({over['overhead_ratio']:.4f}x, paired-difference "
                   f"estimate {over['median_extra_us']:.0f} us).")
 
+    # host-RAM cold tier (DESIGN.md §12): recall past device memory at
+    # equal device bytes, plus promotion drain + overhead guard rows
+    cold = [(n, r) for n, r in rows.items()
+            if n.startswith("tiered/cold/") and "recall_at_thr" in r]
+    if cold:
+        print()
+        print("Cold tier (host-RAM, equal device memory, DESIGN.md §12):")
+        print()
+        print("| row | corpus | device rows | cold rows | us/query "
+              "| recall@thr | cold hit rate | rows fetched | "
+              "router skips |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for name, r in cold:
+            rendered.add(name)
+            hr = f"{r['cold_hit_rate']:.2f}" if "cold_hit_rate" in r \
+                else "-"
+            fetched = str(r.get("cold_fetched_rows", "-"))
+            skips = str(r.get("cold_router_skips", "-"))
+            print(f"| {name} | {r['n']} | {r['device_rows']} "
+                  f"| {r['cold_rows']} | {r['us_per_query']:.1f} "
+                  f"| {r['recall_at_thr']:.3f} | {hr} | {fetched} "
+                  f"| {skips} |")
+        for name, r in rows.items():
+            if name.startswith("tiered/cold/") \
+                    and name.endswith("/promotion"):
+                rendered.add(name)
+                print()
+                print(f"Promotion drain ({name}): {r['promoted']} rows "
+                      f"in {r['wall_us']/1e3:.1f} ms "
+                      f"({r['us_per_row']:.0f} us/row) on one "
+                      "maintenance tick.")
+        ratio = rows.get("tiered/cold/p50_ratio")
+        if ratio:
+            rendered.add("tiered/cold/p50_ratio")
+            print()
+            print(f"Cold-path overhead at a warm-feasible size "
+                  f"(n={ratio['n']}): serving p50 "
+                  f"{ratio['p50_on_us']/1e3:.1f} ms cold-enabled vs "
+                  f"{ratio['p50_off_us']/1e3:.1f} ms disabled "
+                  f"({ratio['p50_ratio']:.2f}x — the router declines "
+                  "the fetches the device already answered).")
+
+    # online embedder refresh (DESIGN.md §11): frozen vs refreshed on
+    # the drifted phase, intent-ground-truth scoring
+    emb = [(m, rows.get(f"tiered/embedder_{m}"))
+           for m in ("frozen", "refreshed")]
+    if all(r is not None for _, r in emb):
+        rendered.update(f"tiered/embedder_{m}" for m, _ in emb)
+        print()
+        print("Embedder refresh on the drifting-topic stream (frozen "
+              "vs online-refreshed, same queries, DESIGN.md §11):")
+        print()
+        print("| embedder | hit precision | hit recall | overlap "
+              "recall | version | final thr | refresh wall s |")
+        print("|---|---|---|---|---|---|---|")
+        for mode, r in emb:
+            print(f"| {mode} | {r['hit_precision']:.3f} "
+                  f"| {r['hit_recall']:.3f} | {r['overlap_recall']:.2f} "
+                  f"| {r['embed_version']} | {r['threshold_final']} "
+                  f"| {r['refresh_wall_s']} |")
+
     fixed = rows.get("tiered/admission_fixed")
     learned = rows.get("tiered/admission_learned")
     if fixed and learned:
@@ -168,8 +230,11 @@ def cascade_table(path="results/BENCH_cascade.json"):
 
     leftover = sorted(set(rows) - rendered)
     if leftover:
+        # a renamed bench row silently falling out of EXPERIMENTS.md is
+        # exactly how a regression hides — fail, don't just warn
         warn(f"{len(leftover)} bench row(s) in {path} not rendered by "
              f"any table (renamed or new row?): {', '.join(leftover)}")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

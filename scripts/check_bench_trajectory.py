@@ -47,7 +47,19 @@ against it so a PR cannot silently regress what the bench measures:
     from the committed fields (the paired per-tick difference estimate
     must fit in 2% of the bare p50 plus a 100us floor — the same bound
     the bench asserts at run time), so a baseline update cannot
-    smuggle in an over-budget measurement.
+    smuggle in an over-budget measurement;
+  * the cold-tier claims (DESIGN.md §12) likewise: for every cold size
+    tier the fresh sweep covers (``cold_sizes`` meta), the fresh run
+    owes the ``warm_only`` / ``cold_enabled`` / ``promotion`` rows and
+    the ``tiered/cold/p50_ratio`` row; ``cold_enabled`` recall must
+    sit *strictly* above ``warm_only`` at equal device memory with at
+    least one cold hit; ``cold_hit_rate`` must not fall more than
+    ``--cold-hit-eps`` below the baseline's; and the committed
+    ``p50_ratio`` (cold-enabled vs disabled at a warm-feasible size)
+    must stay under a fixed 2.0x bound.  Baseline cold rows at sizes
+    the fresh sweep does not cover (e.g. the committed 1M tier vs a
+    64k ``--smoke`` run) are skipped with a note, like the size-tier
+    rule above.
 
 Exit 0 when clean; exit 1 with one line per violation.
 
@@ -76,6 +88,12 @@ OVERHEAD_ROW = "tiered/serve/telemetry_overhead"
 OVERHEAD_MAX_RATIO = 1.02
 OVERHEAD_FLOOR_US = 100.0
 
+# Cold-tier rows (DESIGN.md §12): same restatement rule as above.
+COLD_PREFIX = "tiered/cold/"
+COLD_RATIO_ROW = "tiered/cold/p50_ratio"
+COLD_P50_RATIO_MAX = 2.0
+COLD_REQUIRED = ("warm_only", "cold_enabled", "promotion")
+
 
 def load(path: str) -> Dict[str, object]:
     with open(path) as f:
@@ -87,14 +105,18 @@ def _rows(data: Dict[str, object]) -> Dict[str, Dict[str, object]]:
 
 
 _SIZE_RE = re.compile(r"^tiered/(\d+)k/")
+_COLD_SIZE_RE = re.compile(r"^tiered/cold/(\d+)k/")
 
 
-def _comparable(name: str, fresh_sizes) -> bool:
+def _comparable(name: str, fresh_sizes, fresh_cold_sizes) -> bool:
     """A baseline row is only owed by the fresh run when the fresh
     sweep covers its size tier: a full-sweep baseline (16k/64k/256k
-    rows) must not make every --smoke run (4k only) fail on rows the
-    smoke tier can never produce.  Size-independent rows (admission,
-    …) are always owed."""
+    rows, 1M cold rows) must not make every --smoke run (4k + 64k
+    cold) fail on rows the smoke tier can never produce.
+    Size-independent rows (admission, …) are always owed."""
+    m = _COLD_SIZE_RE.match(name)
+    if m is not None:
+        return int(m.group(1)) * 1024 in set(fresh_cold_sizes or [])
     m = _SIZE_RE.match(name)
     if m is None:
         return True
@@ -104,8 +126,9 @@ def _comparable(name: str, fresh_sizes) -> bool:
 def compare(baseline: Dict[str, object], fresh: Dict[str, object],
             recall_eps: float = 0.005,
             p50_tolerance: float = 5.0,
-            stage_p50_tolerance: float = 3.0) -> Tuple[List[str],
-                                                       List[str]]:
+            stage_p50_tolerance: float = 3.0,
+            cold_hit_eps: float = 0.1) -> Tuple[List[str],
+                                                List[str]]:
     """Returns (violations, notes).  Violations fail the gate; notes
     explain what was skipped or newly added."""
     violations: List[str] = []
@@ -122,10 +145,12 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
             f"x{fresh.get('devices')}): p50 ratios not compared")
 
     fresh_sizes = fresh.get("sizes", [])
+    fresh_cold_sizes = fresh.get("cold_sizes", [])
     for name, base in base_rows.items():
-        if not _comparable(name, fresh_sizes):
+        if not _comparable(name, fresh_sizes, fresh_cold_sizes):
             notes.append(f"{name}: size tier not in the fresh sweep "
-                         f"{fresh_sizes}; skipped")
+                         f"(sizes {fresh_sizes}, cold {fresh_cold_sizes});"
+                         " skipped")
             continue
         row = fresh_rows.get(name)
         if row is None:
@@ -236,6 +261,56 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
                 f"{over['p50_off_us']:.0f}us (limit "
                 f"{OVERHEAD_MAX_RATIO - 1.0:.0%} + "
                 f"{OVERHEAD_FLOOR_US:.0f}us = {limit:.0f}us)")
+
+    # cold-tier claims (DESIGN.md §12): completeness per fresh cold
+    # size tier, the strict recall lift, hit-rate non-regression, and
+    # the committed overhead ratio bound
+    def _has_cold(rows: Dict[str, Dict[str, object]]) -> bool:
+        return any(n.startswith(COLD_PREFIX) for n in rows)
+
+    if _has_cold(base_rows) or _has_cold(fresh_rows):
+        for n_sz in fresh_cold_sizes:
+            tagk = f"{COLD_PREFIX}{n_sz // 1024}k"
+            tier = {part: fresh_rows.get(f"{tagk}/{part}")
+                    for part in COLD_REQUIRED}
+            for part, row in tier.items():
+                if row is None:
+                    violations.append(
+                        f"cold: required row {tagk}/{part} missing from "
+                        "the fresh run (cold bench path dropped?)")
+            warm, cold = tier["warm_only"], tier["cold_enabled"]
+            if warm is not None and cold is not None:
+                if cold.get("recall_at_thr", 0.0) \
+                        <= warm.get("recall_at_thr", 1.0):
+                    violations.append(
+                        f"cold: {tagk} cold_enabled recall "
+                        f"{cold.get('recall_at_thr')} not strictly above "
+                        f"warm_only {warm.get('recall_at_thr')} at equal "
+                        "device memory")
+                if cold.get("cold_hits", 0) <= 0:
+                    violations.append(
+                        f"cold: {tagk}/cold_enabled recorded no cold "
+                        "hits")
+                base_cold = base_rows.get(f"{tagk}/cold_enabled")
+                if base_cold is not None \
+                        and "cold_hit_rate" in base_cold \
+                        and cold.get("cold_hit_rate", 0.0) \
+                        < base_cold["cold_hit_rate"] - cold_hit_eps:
+                    violations.append(
+                        f"cold: {tagk} cold_hit_rate regressed "
+                        f"{base_cold['cold_hit_rate']:.3f} -> "
+                        f"{cold.get('cold_hit_rate'):.3f} "
+                        f"(eps {cold_hit_eps})")
+        if fresh_cold_sizes and COLD_RATIO_ROW not in fresh_rows:
+            violations.append(
+                f"cold: {COLD_RATIO_ROW} row missing from the fresh run")
+    ratio = fresh_rows.get(COLD_RATIO_ROW)
+    if ratio is not None and "p50_ratio" in ratio \
+            and ratio["p50_ratio"] > COLD_P50_RATIO_MAX:
+        violations.append(
+            f"cold: serving p50 with the cold tier enabled is "
+            f"{ratio['p50_ratio']:.2f}x the disabled p50 at a "
+            f"warm-feasible size (bound {COLD_P50_RATIO_MAX}x)")
     return violations, notes
 
 
@@ -253,12 +328,16 @@ def main(argv=None) -> int:
                     help="max fresh/baseline p50 ratio for the per-stage "
                          "telemetry rows (tiered/serve/stage_*; same "
                          "fleet only)")
+    ap.add_argument("--cold-hit-eps", type=float, default=0.1,
+                    help="tolerated absolute cold_hit_rate drop vs the "
+                         "baseline cold_enabled row")
     args = ap.parse_args(argv)
 
     violations, notes = compare(load(args.baseline), load(args.fresh),
                                 recall_eps=args.recall_eps,
                                 p50_tolerance=args.p50_tolerance,
-                                stage_p50_tolerance=args.stage_p50_tolerance)
+                                stage_p50_tolerance=args.stage_p50_tolerance,
+                                cold_hit_eps=args.cold_hit_eps)
     for n in notes:
         print(f"note: {n}")
     if violations:

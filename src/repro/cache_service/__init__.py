@@ -12,8 +12,9 @@ from repro.cache_service.feedback import (
     record_refit,
 )
 from repro.cache_service.feedback import PairReservoir
+from repro.cache_service.cold import ColdFetch, ColdTier, Promotion
 from repro.cache_service.policy import (
-    EmbedderRefreshPolicy, PolicyTable, TenantPolicy,
+    ColdRoutingPolicy, EmbedderRefreshPolicy, PolicyTable, TenantPolicy,
 )
 from repro.cache_service.protocol import (
     CacheBackend, CacheCapabilities, CachePlan, CacheRequest,
@@ -34,6 +35,7 @@ from repro.cache_service.tiers import (
 
 __all__ = [
     "CacheService", "ServiceStats", "LegacyStatsView",
+    "ColdFetch", "ColdRoutingPolicy", "ColdTier", "Promotion",
     "EmbedderRefreshPolicy", "PolicyTable", "TenantPolicy",
     "FeedbackAccumulator", "FeedbackConfig", "PairReservoir",
     "RefitReport", "TenantReservoir", "record_refit",

@@ -1,0 +1,439 @@
+"""Host-RAM cold tier: the memory level below the warm ring.
+
+DESIGN.md §12.  The warm ring used to be the end of the line — a ring
+overwrite dropped the evicted row's response forever.  The cold tier
+catches those demotions in *host* memory, so corpus size is bounded by
+host RAM (multi-million entries), not device HBM:
+
+  * storage is the int8 symmetric per-row quantization the warm tier
+    already maintains (`tiers.quantize_rows` — the PR 4 path): the key
+    panel arrives pre-quantized from the warm ring's ``keys_q``/
+    ``scales``, plus value ids and tenant ids, in flat pre-allocated
+    numpy arrays (the host-pinned stand-in; a TPU runtime would place
+    the same buffers in ``pinned_host`` memory so the fetch DMAs
+    straight from them).  4 bytes/row of scale + D bytes/row of key:
+    a 1M-row, 64-dim corpus is ~68 MB of host RAM;
+  * routing is a coarse IVF of its own: spherical k-means centroids
+    (fit on a bounded sample, host-side) plus a per-row cluster
+    assignment maintained incrementally on insert — no inverted-list
+    surgery, membership is recovered by a vectorized scan at lookup;
+  * lookup is *budgeted and conditional*: the service consults the
+    cold tier only for queries whose warm/hot verdict fell below
+    threshold AND whose best cold-centroid similarity clears
+    ``threshold - router_margin - route_slack`` (the router's
+    is-the-fetch-worth-it rule).  ``route_slack`` is *calibrated at
+    route-fit time*: a coarse centroid only bounds its members' query
+    similarity up to the cluster's own spread, so ``rebuild_routes``
+    measures the 10th-percentile member→centroid cosine and widens the
+    gate by ``1 - q10`` — tight clusters give a selective router,
+    loose clusters open it rather than falsely skipping reachable
+    hits.  ``router_margin`` stays the fixed conservatism knob on top.
+    Consulted queries gather the member rows of their
+    ``n_probe`` nearest clusters, rank them by the approximate int8
+    score on the host, and ship only the top ``fetch_budget`` rows per
+    query to the device for an exact fp32 re-score of the dequantized
+    keys (exact in fp32 over the stored representation; the stored
+    representation itself carries the §8 quantization error bound
+    ``amax·sqrt(D)/254`` — a cold hit's score is within that bound of
+    the fp32-key cosine);
+  * promotion is asynchronous: a cold row that produces a hit is
+    queued, and the service's ``maintenance()`` idle tick drains the
+    queue back into the *warm ring* (the same ``warm_append`` path as
+    a demotion flush), invalidating the cold copy — re-hot rows climb
+    back up the hierarchy without ever blocking a plan.
+
+Eviction: the cold tier is itself a ring; overwriting a valid cold row
+is the one place in the hierarchy where a response is finally dropped
+(the service GCs the string and counts it under
+``cold_evictions_dropped``).  ``evict_tenant`` invalidates a tenant's
+cold rows *and* purges its pending promotions, so a tenant evicted
+mid-demotion can never resurrect through the promotion path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache_service.policy import ColdRoutingPolicy
+
+NEG = -1e30
+
+
+class ColdFetch(NamedTuple):
+    """Per-batch result of a budgeted cold lookup.
+
+    ``consulted`` marks queries whose fetch the router approved;
+    non-consulted rows carry score NEG / vid -1.  ``scores`` are exact
+    fp32 cosines of the *dequantized* keys (device re-score)."""
+    scores: np.ndarray       # (Q,) float32, NEG where no candidate
+    value_ids: np.ndarray    # (Q,) int64, -1 where no candidate
+    slots: np.ndarray        # (Q,) int32 cold row of the best candidate
+    consulted: np.ndarray    # (Q,) bool — router approved the fetch
+    fetched_rows: int        # candidate rows shipped to device
+    router_skips: int        # needy queries the router turned down
+
+
+class Promotion(NamedTuple):
+    """A drained promotion batch, ready for `tiers.warm_append`."""
+    keys: np.ndarray         # (m, D) float32 dequantized keys
+    value_ids: np.ndarray    # (m,) int32
+    tenants: np.ndarray      # (m,) int32
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _rescore_device(qn, panel, mask):
+    """Exact fp32 re-score of the fetched panel on device.
+
+    qn: (Q, D) unit queries; panel: (Q, B, D) dequantized candidate
+    keys; mask: (Q, B) live-candidate mask.  Returns (best score (Q,),
+    best column (Q,)).
+    """
+    s = jnp.einsum("qd,qbd->qb", qn, panel)
+    s = jnp.where(mask, s, NEG)
+    best = jnp.argmax(s, axis=1)
+    return s[jnp.arange(qn.shape[0]), best], best
+
+
+def _kmeans_np(x: np.ndarray, k: int, iters: int, seed: int) -> np.ndarray:
+    """Host-side spherical k-means (unit rows in, unit centroids out).
+
+    Bounded-cost routing fit: the caller samples rows before fitting;
+    assignment of the full corpus happens once, chunked, afterwards.
+    """
+    n = x.shape[0]
+    rng = np.random.default_rng(seed)
+    if n <= k:
+        cent = np.zeros((k, x.shape[1]), np.float32)
+        cent[:n] = x
+        return cent
+    cent = x[rng.choice(n, k, replace=False)].copy()
+    for _ in range(iters):
+        a = np.argmax(x @ cent.T, axis=1)
+        sums = np.zeros_like(cent)
+        np.add.at(sums, a, x)
+        norms = np.linalg.norm(sums, axis=1, keepdims=True)
+        live = norms[:, 0] > 1e-9
+        cent[live] = (sums / np.maximum(norms, 1e-9))[live]
+    return cent.astype(np.float32)
+
+
+class ColdTier:
+    """Host-RAM int8 ring with coarse IVF routing (DESIGN.md §12).
+
+    Host-side and single-writer by design: every mutating call happens
+    on the service thread (commit flushes, maintenance drains), and the
+    only device work is the jitted exact re-score of fetched panels.
+    """
+
+    def __init__(self, capacity: int, dim: int, *,
+                 policy: Optional[ColdRoutingPolicy] = None):
+        if capacity <= 0:
+            raise ValueError(f"cold capacity must be positive: {capacity}")
+        self.capacity = int(capacity)
+        self.dim = int(dim)
+        self.policy = policy or ColdRoutingPolicy()
+        # pre-allocated host panels (the pinned-host stand-in)
+        self.keys_q = np.zeros((capacity, dim), np.int8)
+        self.scales = np.zeros((capacity,), np.float32)
+        self.value_ids = np.full((capacity,), -1, np.int64)
+        self.tenants = np.full((capacity,), -1, np.int32)
+        self.valid = np.zeros((capacity,), bool)
+        self._cursor = 0
+        # coarse routing state: centroids + incremental row assignment;
+        # route_slack is the calibrated cluster spread the router gate
+        # must absorb (module docstring) — 0 until the first fit
+        self.centroids: Optional[np.ndarray] = None    # (Kc, D) unit
+        self.route_slack = 0.0
+        self._assign = np.full((capacity,), -1, np.int32)
+        self._inserts_since_route = 0
+        # pending promotions keyed by value id (dedup across lookups)
+        self._promote: Dict[int, int] = {}             # vid -> cold slot
+        # counters (mirrored into the telemetry registry by the service)
+        self.n_inserted = 0
+        self.n_dropped = 0          # cold-ring overwrites (final drops)
+        self.n_fetches = 0          # consulted queries
+        self.n_fetched_rows = 0
+        self.n_hits = 0
+        self.n_promoted = 0
+        self.n_router_skips = 0
+        self.n_route_rebuilds = 0
+
+    # ------------------------------------------------------------------
+    # occupancy / introspection
+    # ------------------------------------------------------------------
+    def __len__(self) -> int:
+        return int(self.valid.sum())
+
+    @property
+    def occupancy(self) -> float:
+        return float(self.valid.mean())
+
+    @property
+    def pending_promotions(self) -> int:
+        return len(self._promote)
+
+    @property
+    def maintenance_due(self) -> bool:
+        """An idle tick now would do cold work: drain queued
+        promotions and/or re-fit the coarse routing."""
+        return bool(self._promote) or self._route_due()
+
+    def _dequant(self, slots: np.ndarray) -> np.ndarray:
+        return self.keys_q[slots].astype(np.float32) \
+            * self.scales[slots, None]
+
+    # ------------------------------------------------------------------
+    # writes: demotion insert / bulk load / eviction
+    # ------------------------------------------------------------------
+    def insert(self, keys_q: np.ndarray, scales: np.ndarray,
+               value_ids: np.ndarray, tenants: np.ndarray) -> np.ndarray:
+        """Ring-append pre-quantized rows (the warm ring's own int8
+        panel — demotion never re-quantizes).  Returns the value ids of
+        overwritten valid cold rows (the hierarchy's final drops) for
+        host GC; empty when the ring had room.
+        """
+        n = len(value_ids)
+        if n == 0:
+            return np.empty((0,), np.int64)
+        if n > self.capacity:
+            # only the last `capacity` rows can survive a ring this size
+            drop_head = np.asarray(value_ids[:n - self.capacity], np.int64)
+            tail = self.insert(keys_q[n - self.capacity:],
+                               scales[n - self.capacity:],
+                               value_ids[n - self.capacity:],
+                               tenants[n - self.capacity:])
+            self.n_dropped += len(drop_head)
+            return np.concatenate([drop_head, tail])
+        pos = (self._cursor + np.arange(n)) % self.capacity
+        overwritten = self.valid[pos]
+        dropped = np.asarray(self.value_ids[pos][overwritten], np.int64)
+        # an overwritten row's pending promotion must die with it
+        for v in dropped:
+            self._promote.pop(int(v), None)
+        self.keys_q[pos] = keys_q
+        self.scales[pos] = scales
+        self.value_ids[pos] = value_ids
+        self.tenants[pos] = tenants
+        self.valid[pos] = True
+        if self.centroids is not None:
+            sims = (keys_q.astype(np.float32) * scales[:, None]) \
+                @ self.centroids.T
+            self._assign[pos] = np.argmax(sims, axis=1).astype(np.int32)
+        else:
+            self._assign[pos] = -1
+        self._cursor = int((self._cursor + n) % self.capacity)
+        self.n_inserted += n
+        self.n_dropped += len(dropped)
+        self._inserts_since_route += n
+        if self._route_due():
+            self.rebuild_routes()
+        return dropped
+
+    def bulk_load(self, keys: np.ndarray, value_ids: np.ndarray,
+                  tenants: np.ndarray) -> np.ndarray:
+        """Quantize (the §8 path) and insert fp32 keys, then rebuild
+        the routing — for benches/migration, not the serving path."""
+        from repro.cache_service import tiers
+        kn = np.asarray(keys, np.float32)
+        kn /= np.maximum(np.linalg.norm(kn, axis=1, keepdims=True), 1e-9)
+        k8, sc = tiers.quantize_rows(jnp.asarray(kn))
+        dropped = self.insert(np.asarray(k8), np.asarray(sc),
+                              np.asarray(value_ids, np.int64),
+                              np.asarray(tenants, np.int32))
+        self.rebuild_routes()
+        return dropped
+
+    def evict_tenant(self, tenant: int) -> np.ndarray:
+        """Invalidate one tenant's cold rows and purge its pending
+        promotions.  Returns the freed value ids for host GC."""
+        kill = self.valid & (self.tenants == tenant)
+        vids = np.asarray(self.value_ids[kill], np.int64)
+        self.valid[kill] = False
+        for v in vids:
+            self._promote.pop(int(v), None)
+        return vids
+
+    # ------------------------------------------------------------------
+    # routing
+    # ------------------------------------------------------------------
+    def _route_due(self) -> bool:
+        return (self.centroids is None
+                and len(self) >= self.policy.min_rows_for_routing) \
+            or self._inserts_since_route >= self.policy.route_rebuild_every
+
+    def rebuild_routes(self) -> None:
+        """Re-fit the coarse centroids (bounded sample) and re-assign
+        every valid row.  Host-only; the service calls it from the
+        maintenance tick or it self-triggers on insert cadence."""
+        live = np.flatnonzero(self.valid)
+        self._inserts_since_route = 0
+        if len(live) < self.policy.min_rows_for_routing:
+            return
+        pol = self.policy
+        rng = np.random.default_rng(pol.seed + self.n_route_rebuilds)
+        fit = live if len(live) <= pol.kmeans_sample \
+            else rng.choice(live, pol.kmeans_sample, replace=False)
+        x = self._dequant(fit)
+        x /= np.maximum(np.linalg.norm(x, axis=1, keepdims=True), 1e-9)
+        self.centroids = _kmeans_np(x, pol.n_clusters, pol.kmeans_iters,
+                                    pol.seed)
+        own = np.empty((len(live),), np.float32)
+        for lo in range(0, len(live), 1 << 16):
+            chunk = live[lo:lo + (1 << 16)]
+            rows = self._dequant(chunk)
+            rows /= np.maximum(
+                np.linalg.norm(rows, axis=1, keepdims=True), 1e-9)
+            sims = rows @ self.centroids.T
+            self._assign[chunk] = np.argmax(sims, axis=1).astype(np.int32)
+            own[lo:lo + (1 << 16)] = sims.max(axis=1)
+        # calibrate the router gate to the observed cluster spread: 90%
+        # of members sit within `route_slack` of their centroid, so a
+        # centroid more than margin+slack below threshold makes a hit
+        # implausible — and a loose clustering opens the gate instead
+        # of falsely skipping reachable rows (module docstring)
+        self.route_slack = float(np.clip(1.0 - np.quantile(own, 0.1),
+                                         0.0, 2.0))
+        self.n_route_rebuilds += 1
+
+    # ------------------------------------------------------------------
+    # budgeted lookup
+    # ------------------------------------------------------------------
+    def lookup(self, qn: np.ndarray, q_tenants: np.ndarray,
+               thresholds: np.ndarray, need: np.ndarray) -> ColdFetch:
+        """Consult the cold tier for the ``need`` queries (warm/hot
+        verdict below threshold).  Router rule, budgeted host gather,
+        one device re-score — see the module docstring."""
+        qn = np.asarray(qn, np.float32)
+        Q = qn.shape[0]
+        out = ColdFetch(scores=np.full((Q,), NEG, np.float32),
+                        value_ids=np.full((Q,), -1, np.int64),
+                        slots=np.full((Q,), -1, np.int32),
+                        consulted=np.zeros((Q,), bool),
+                        fetched_rows=0, router_skips=0)
+        need = np.asarray(need, bool)
+        if not need.any() or not self.valid.any():
+            return out
+        pol = self.policy
+        B = pol.fetch_budget
+        thresholds = np.asarray(thresholds, np.float32)
+        if self.centroids is not None:
+            csims = qn @ self.centroids.T                       # (Q, Kc)
+            n_probe = min(pol.n_probe, self.centroids.shape[0])
+            probes = np.argpartition(-csims, n_probe - 1,
+                                     axis=1)[:, :n_probe]
+            # router: the best centroid bounds the best member row's
+            # cosine within the calibrated cluster spread; a centroid
+            # further than margin+slack below threshold makes a hit
+            # implausible (module docstring)
+            worth = csims.max(axis=1) \
+                >= thresholds - pol.router_margin - self.route_slack
+        else:
+            probes = None
+            worth = np.ones((Q,), bool)     # unrouted: small corpus
+        sel = need & worth
+        skips = int((need & ~worth).sum())
+        if not sel.any():
+            self.n_router_skips += skips
+            return out._replace(router_skips=skips)
+        # membership scan: one vectorized pass per distinct probed
+        # cluster in the batch (assignment array, no inverted lists)
+        members: Dict[int, np.ndarray] = {}
+        if probes is not None:
+            for c in np.unique(probes[sel]):
+                members[int(c)] = np.flatnonzero(
+                    self.valid & (self._assign == c))
+        else:
+            members[-1] = np.flatnonzero(self.valid)
+        slots = np.full((Q, B), -1, np.int64)
+        fetched = 0
+        for q in np.flatnonzero(sel):
+            cl = probes[q] if probes is not None else [-1]
+            cand = np.concatenate([members[int(c)] for c in cl]) \
+                if len(cl) > 1 else members[int(cl[0])]
+            cand = cand[self.tenants[cand] == q_tenants[q]]
+            if len(cand) == 0:
+                continue
+            if len(cand) > B:
+                # approximate int8 ranking picks the budgeted subset;
+                # the device re-score below is what produces the score
+                approx = self._dequant(cand) @ qn[q]
+                cand = cand[np.argpartition(-approx, B - 1)[:B]]
+            slots[q, :len(cand)] = cand
+            fetched += len(cand)
+        consulted = slots[:, 0] >= 0
+        if not consulted.any():
+            self.n_router_skips += skips
+            return out._replace(router_skips=skips)
+        # exact fp32 re-score of the dequantized fetch panel, on device
+        safe = np.maximum(slots, 0)
+        panel = self._dequant(safe.ravel()).reshape(Q, B, self.dim)
+        best_s, best_c = _rescore_device(jnp.asarray(qn),
+                                         jnp.asarray(panel),
+                                         jnp.asarray(slots >= 0))
+        best_s = np.asarray(best_s)
+        best_slot = slots[np.arange(Q), np.asarray(best_c)]
+        best_slot = np.where(consulted, best_slot, -1).astype(np.int32)
+        vids = np.where(best_slot >= 0,
+                        self.value_ids[np.maximum(best_slot, 0)], -1)
+        self.n_fetches += int(consulted.sum())
+        self.n_fetched_rows += fetched
+        self.n_router_skips += skips
+        # queue re-hot rows for async promotion at the next idle tick
+        hits = consulted & (best_s >= thresholds)
+        self.n_hits += int(hits.sum())
+        for q in np.flatnonzero(hits):
+            self._promote[int(vids[q])] = int(best_slot[q])
+        return ColdFetch(
+            scores=np.where(consulted, best_s, NEG).astype(np.float32),
+            value_ids=vids.astype(np.int64), slots=best_slot,
+            consulted=consulted, fetched_rows=fetched, router_skips=skips)
+
+    # ------------------------------------------------------------------
+    # async promotion (drained by the service's maintenance tick)
+    # ------------------------------------------------------------------
+    def take_promotions(self, max_rows: int) -> Optional[Promotion]:
+        """Pop up to ``max_rows`` pending re-hot rows and invalidate
+        their cold copies (they move to the warm ring — one live copy
+        per value id).  Entries whose cold row was overwritten or
+        tenant-evicted since they queued are silently dropped.  Returns
+        None when nothing is pending."""
+        taken: List[Tuple[int, int]] = []
+        while self._promote and len(taken) < max_rows:
+            vid, slot = self._promote.popitem()
+            if self.valid[slot] and int(self.value_ids[slot]) == vid:
+                taken.append((vid, slot))
+        if not taken:
+            return None
+        slots = np.asarray([s for _, s in taken])
+        keys = self._dequant(slots)
+        keys /= np.maximum(np.linalg.norm(keys, axis=1, keepdims=True),
+                           1e-9)
+        prom = Promotion(keys=keys.astype(np.float32),
+                         value_ids=np.asarray([v for v, _ in taken],
+                                              np.int32),
+                         tenants=self.tenants[slots].copy())
+        self.valid[slots] = False
+        self.n_promoted += len(taken)
+        return prom
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, object]:
+        return {
+            "cold_occupancy": self.occupancy,
+            "cold_rows": len(self),
+            "cold_inserted": self.n_inserted,
+            "cold_dropped": self.n_dropped,
+            "cold_fetches": self.n_fetches,
+            "cold_fetched_rows": self.n_fetched_rows,
+            "cold_hits": self.n_hits,
+            "cold_promoted": self.n_promoted,
+            "cold_pending_promotions": self.pending_promotions,
+            "cold_router_skips": self.n_router_skips,
+            "cold_route_rebuilds": self.n_route_rebuilds,
+            "cold_routed": self.centroids is not None,
+            "cold_route_slack": round(self.route_slack, 4),
+        }

@@ -122,6 +122,46 @@ class EmbedderRefreshPolicy:
     recalibrate_bounds: Tuple[float, float] = (0.7, 0.99)
 
 
+@dataclass(frozen=True)
+class ColdRoutingPolicy:
+    """Operating policy of the host-RAM cold tier (DESIGN.md §12).
+
+    The router's decision rule — consult the cold tier only when the
+    warm/hot verdict missed AND the best cold-centroid similarity
+    clears ``threshold - router_margin - route_slack`` — makes the
+    host→device fetch conditional on a plausible hit: a coarse
+    centroid that far below the operating point bounds every member
+    row away from it, so the fetch would be wasted motion.  The slack
+    term is *calibrated by the tier at route-fit time* (the observed
+    q10 member→centroid spread, `ColdTier.rebuild_routes`), so the
+    gate tracks how coarse the clustering actually is;
+    ``router_margin`` is the fixed conservatism added on top — raise
+    it to fetch more speculatively, at host-scan and PCIe cost.
+    ``fetch_budget`` caps the rows any
+    single query ships to the device for the exact re-score (the
+    approximate int8 host ranking picks which), keeping plan-time cold
+    cost O(budget·D) per consulted query regardless of corpus size.
+
+    Routing maintenance is bounded: centroids fit on at most
+    ``kmeans_sample`` sampled rows, re-fit every
+    ``route_rebuild_every`` inserts (or at first crossing of
+    ``min_rows_for_routing`` — below that the corpus is scanned
+    unrouted, which is cheaper than maintaining an index for it).
+    ``promote_max`` caps how many re-hot rows one maintenance tick
+    drains back into the warm ring.
+    """
+    n_probe: int = 4             # coarse clusters consulted per query
+    fetch_budget: int = 32       # device re-score rows per query
+    router_margin: float = 0.05  # consult if csim >= thr-margin-slack
+    promote_max: int = 64        # promotions drained per idle tick
+    n_clusters: int = 64
+    kmeans_iters: int = 6
+    kmeans_sample: int = 65536   # routing fit sample bound
+    route_rebuild_every: int = 8192   # inserts between route re-fits
+    min_rows_for_routing: int = 512   # below: brute-force, no index
+    seed: int = 0
+
+
 class PolicyTable:
     """tenant id -> TenantPolicy, with a default for unknown tenants."""
 

@@ -67,6 +67,7 @@ class CacheCapabilities:
     warm_dtype: str = "float32"      # warm scan precision (int8 = quantized)
     learned_admission: bool = False  # maintenance() refits policies (§9)
     learned_embedder: bool = False   # maintenance() refreshes embedder (§11)
+    cold_tier: bool = False          # host-RAM cold tier below warm (§12)
 
 
 # ---------------------------------------------------------------------------
@@ -195,6 +196,8 @@ class MaintenanceReport:
     refresh_in_flight: bool = False  # train + re-embed still running
     refresh_wall_s: float = 0.0      # wall time of the published refresh
     embed_version: int = 0           # live embedder version after the call
+    cold_promoted: int = 0           # re-hot rows promoted cold -> warm (§12)
+    cold_route_rebuilt: bool = False  # cold routing re-fit this tick (§12)
 
 
 @dataclass(frozen=True)
@@ -204,6 +207,10 @@ class CommitReceipt:
     skipped: int                     # rows the admission rule dropped
     evicted: int                     # host strings freed by this commit
     rebuild_due: bool = False        # obligation: call maintenance() soon
+    demoted_cold: int = 0            # warm-ring evictions captured by the
+                                     # cold tier this commit (§12)
+    cold_maintenance_due: bool = False  # obligation: pending cold
+                                     # promotions / routing refit (§12)
     embed_version: int = 0           # live embedder version at commit (§11)
     stale_version_skipped: int = 0   # rows rejected: plan embedded under an
                                      # older embedder version than is live

@@ -46,11 +46,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache_service import tiers
+from repro.cache_service.cold import ColdTier
 from repro.cache_service.feedback import (
     FeedbackAccumulator, FeedbackConfig, record_refit,
 )
 from repro.cache_service.policy import (
-    EmbedderRefreshPolicy, PolicyTable, TenantPolicy,
+    ColdRoutingPolicy, EmbedderRefreshPolicy, PolicyTable, TenantPolicy,
 )
 from repro.cache_service.protocol import (
     CacheCapabilities, CachePlan, CacheRequest, CommitReceipt,
@@ -137,6 +138,9 @@ class CacheService:
                  learned_embedder: bool = False,
                  embedder_trainer=None, embedder_tokenizer=None,
                  refresh_policy: Optional[EmbedderRefreshPolicy] = None,
+                 cold_capacity: int = 0,
+                 cold_policy: Optional[ColdRoutingPolicy] = None,
+                 warm_block: Optional[int] = None,
                  telemetry: Optional[Telemetry] = None):
         """Build the tiered service.
 
@@ -208,9 +212,32 @@ class CacheService:
         candidate that fails the held-out eval gate is rolled back
         (discarded) without ever becoming visible.  ``refresh_policy``
         tunes the trigger/gate (implies ``learned_embedder``).
+
+        ``cold_capacity > 0`` adds the host-RAM cold tier (DESIGN.md
+        §12): warm-ring overwrites demote their int8 rows into it
+        instead of dropping them, plan-time lookups consult it for
+        below-threshold queries the router deems worth a budgeted
+        host→device fetch, and ``maintenance()`` asynchronously
+        promotes re-hot rows back into the warm ring.  ``cold_policy``
+        tunes the router (implies a cold tier of its default capacity
+        when ``cold_capacity`` is 0).  The cold tier piggybacks on the
+        *unsharded* warm ring's quantized panel; combine it with
+        ``mesh`` and construction raises.
+
+        ``warm_block`` streams the warm panel through the fused kernel
+        in blocks of that many rows (DESIGN.md §12), lifting the
+        single-block VMEM ceiling on warm capacity; None keeps the
+        whole-panel residency.  Results are bit-identical either way.
         """
         sharded = mesh is not None
         shards = int(mesh.shape[shard_axis]) if sharded else 1
+        if cold_policy is not None and cold_capacity <= 0:
+            cold_capacity = 4 * warm_capacity
+        if cold_capacity > 0 and sharded:
+            raise ValueError(
+                "cold_capacity > 0 requires the unsharded warm tier: "
+                "demotion capture reads the single warm ring's int8 "
+                "panel (DESIGN.md §12)")
         if warm_dtype not in ("float32", "int8"):
             raise ValueError(f"warm_dtype must be float32|int8, "
                              f"got {warm_dtype!r}")
@@ -255,6 +282,10 @@ class CacheService:
         self._mesh = mesh
         self._shard_axis = shard_axis
         self._flush_local = flush_local
+        self.warm_block = warm_block
+        self.cold: Optional[ColdTier] = \
+            ColdTier(cold_capacity, dim, policy=cold_policy) \
+            if cold_capacity > 0 else None
 
         self.hot = tiers.init_hot(hot_capacity, dim)
         if sharded:
@@ -306,6 +337,7 @@ class CacheService:
         # telemetry disabled stay plain host ints
         self._n_plans = 0
         self._n_evictions = 0
+        self._n_demoted_cold = 0
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         if self.telemetry.health is not None and self.feedback is not None:
             fb_cfg = self.feedback.config
@@ -326,6 +358,7 @@ class CacheService:
                              labels=("tier",))
         self._c_hot_hits = c_hits.labels(tier="hot")
         self._c_warm_hits = c_hits.labels(tier="warm")
+        self._c_cold_hits = c_hits.labels(tier="cold")
         self._m_admissions = reg.counter(
             "cache_admissions_total", "commit-time admission decisions",
             labels=("tenant", "decision"))
@@ -333,6 +366,37 @@ class CacheService:
             "cache_demotions_total", "rows demoted hot -> warm").labels()
         self._c_evictions = reg.counter(
             "cache_evictions_total", "host response strings freed").labels()
+        # §12 eviction split: a warm-ring overwrite either *demotes*
+        # (cold tier captured the row — nothing was lost) or *drops*
+        # (no cold tier — the string is freed).  With a cold tier the
+        # dropped count must stay zero; the final drops of the
+        # hierarchy happen on cold-ring overwrites instead.
+        self._c_ev_demoted = reg.counter(
+            "cache_evictions_demoted_total",
+            "warm-ring overwrites captured into the cold tier").labels()
+        self._c_ev_dropped = reg.counter(
+            "cache_evictions_dropped_total",
+            "warm-ring overwrites freed with no cold tier to catch "
+            "them").labels()
+        self._c_cold_evictions = reg.counter(
+            "cache_cold_evictions_total",
+            "cold-ring overwrites — the hierarchy's final drops"
+        ).labels()
+        self._c_cold_promotions = reg.counter(
+            "cache_cold_promotions_total",
+            "re-hot rows promoted cold -> warm by maintenance()"
+        ).labels()
+        self._c_cold_fetches = reg.counter(
+            "cache_cold_fetches_total",
+            "queries whose cold fetch the router approved").labels()
+        self._c_cold_fetched_rows = reg.counter(
+            "cache_cold_fetched_rows_total",
+            "candidate rows shipped host -> device for the exact "
+            "re-score").labels()
+        self._c_cold_router_skips = reg.counter(
+            "cache_cold_router_skips_total",
+            "below-threshold queries whose cold fetch the router "
+            "declined as not worth the transfer").labels()
         self._c_rebuilds = reg.counter(
             "cache_rebuilds_total",
             "IVF re-clusters completed (published or inline)").labels()
@@ -384,7 +448,8 @@ class CacheService:
             tiers.cascade_query, k=self.topk, n_probe=self._n_probe,
             tail=self._tail, fused=self.fused,
             quantized=self.warm_dtype == "int8",
-            mesh=self._mesh, axis=self._shard_axis))
+            mesh=self._mesh, axis=self._shard_axis,
+            warm_block_n=self.warm_block))
 
     # ------------------------------------------------------------------
     # tenant policy surface
@@ -411,7 +476,8 @@ class CacheService:
                                  warm_sharded=self._mesh is not None,
                                  warm_dtype=self.warm_dtype,
                                  learned_admission=self.learned_admission,
-                                 learned_embedder=self.trainer is not None)
+                                 learned_embedder=self.trainer is not None,
+                                 cold_tier=self.cold is not None)
 
     def plan(self, request: CacheRequest, *,
              coalesce: bool = True) -> CachePlan:
@@ -435,6 +501,30 @@ class CacheService:
         self._c_rows.inc(len(hit))
         self._c_hot_hits.inc(int(hot_hit.sum()))
         self._c_warm_hits.inc(int((hit & ~hot_hit).sum()))
+        if self.cold is not None and bool((~hit).any()):
+            # §12 cold fallback: only the below-threshold rows are
+            # offered, and the cold tier's own router decides which of
+            # those justify a host->device fetch.  Verdicts merge
+            # *before* the pre-decision/feedback/coalescing below, so
+            # a cold hit is a hit everywhere downstream.
+            tc = time.perf_counter()
+            qn = np.asarray(embs, np.float32)
+            qn = qn / np.maximum(
+                np.linalg.norm(qn, axis=1, keepdims=True), 1e-9)
+            cf = self.cold.lookup(qn, np.asarray(qt),
+                                  np.asarray(thr, np.float32), ~hit)
+            self._stage_h.observe(time.perf_counter() - tc,
+                                  stage="cold_fetch",
+                                  tenant=tenant_label(qt))
+            self._c_cold_fetches.inc(int(cf.consulted.sum()))
+            self._c_cold_fetched_rows.inc(cf.fetched_rows)
+            self._c_cold_router_skips.inc(cf.router_skips)
+            chit = cf.consulted & (cf.scores >= np.asarray(thr, np.float32))
+            if bool(chit.any()):
+                self._c_cold_hits.inc(int(chit.sum()))
+                hit = hit | chit
+                scores = np.where(chit, cf.scores, scores)
+                vids = np.where(chit, cf.value_ids, vids)
         responses = [self.responses.get(int(v)) if h else None
                      for h, v in zip(hit, vids)]
         admit = self.policies.pre_decision(qt, scores, hit)
@@ -509,6 +599,7 @@ class CacheService:
                 self._m_admissions.inc(int(m.sum()) - n_a,
                                        tenant=int(tid), decision="skipped")
         evicted_before = self._n_evictions
+        demoted_cold_before = self._n_demoted_cold
         if len(rows):
             self.hot, evicted = self._insert(
                 self.hot, jnp.asarray(plan.request.embeddings[rows]),
@@ -532,7 +623,10 @@ class CacheService:
             or self._refresh_thread is not None or self._refresh_due(),
             commit_wall_s=wall, trace_id=plan.request.trace_id,
             embed_version=self._embed_version,
-            stale_version_skipped=n_stale_ver)
+            stale_version_skipped=n_stale_ver,
+            demoted_cold=self._n_demoted_cold - demoted_cold_before,
+            cold_maintenance_due=self.cold is not None
+            and self.cold.maintenance_due)
 
     def maintenance(self, block: bool = False) -> MaintenanceReport:
         """Drive the double-buffered rebuild: publish a finished shadow
@@ -576,6 +670,24 @@ class CacheService:
             refits_applied = sum(r.applied for r in reports)
             for rep in reports:
                 record_refit(self.telemetry.registry, rep)
+        cold_promoted = 0
+        cold_route_rebuilt = False
+        if self.cold is not None:
+            # §12 async promotion: re-hot cold rows climb back into the
+            # warm ring here, never on the plan path.  The drain is
+            # bounded by the policy's promote_max per tick.
+            prom = self.cold.take_promotions(self.cold.policy.promote_max)
+            if prom is not None:
+                self._promote_into_warm(prom)
+                cold_promoted = len(prom.value_ids)
+                self._c_cold_promotions.inc(cold_promoted)
+                if self._backlog() > self._tail:
+                    # promotions are ring appends like any flush: the
+                    # tail window must keep covering them
+                    self._rebuild_inline()
+            if self.cold._route_due():
+                self.cold.rebuild_routes()
+                cold_route_rebuilt = True
         reg = self.telemetry.registry
         reg.gauge("cache_hot_occupancy",
                   "hot-tier occupancy fraction").set(self.hot_occupancy)
@@ -590,6 +702,13 @@ class CacheService:
             reg.gauge("cache_embed_version",
                       "published embedder version (§11)"
                       ).set(self._embed_version)
+        if self.cold is not None:
+            reg.gauge("cache_cold_occupancy",
+                      "cold-tier occupancy fraction"
+                      ).set(self.cold.occupancy)
+            reg.gauge("cache_cold_pending_promotions",
+                      "re-hot cold rows queued for warm promotion"
+                      ).set(self.cold.pending_promotions)
         if self.telemetry.health is not None:
             self.telemetry.health.drain(reg)
         host_wall = time.perf_counter() - t0
@@ -603,7 +722,9 @@ class CacheService:
             refresh_started=r_started, refresh_published=r_published,
             refresh_rolled_back=r_rolled,
             refresh_in_flight=self._refresh_thread is not None,
-            refresh_wall_s=r_wall, embed_version=self._embed_version)
+            refresh_wall_s=r_wall, embed_version=self._embed_version,
+            cold_promoted=cold_promoted,
+            cold_route_rebuilt=cold_route_rebuilt)
 
     def stats_snapshot(self) -> ServiceStats:
         """The typed stats surface (DESIGN.md §10.1): every count read
@@ -620,6 +741,7 @@ class CacheService:
             "lookup_rows": int(reg.value("cache_lookup_rows_total")),
             "hot_hits": int(reg.value("cache_hits_total", tier="hot")),
             "warm_hits": int(reg.value("cache_hits_total", tier="warm")),
+            "cold_hits": int(reg.value("cache_hits_total", tier="cold")),
         }
         admission = {
             "admitted": int(reg.value("cache_admissions_total",
@@ -632,10 +754,16 @@ class CacheService:
             "warm_occupancy": self.warm_occupancy,
             "demotions": int(reg.value("cache_demotions_total")),
             "evictions": self._n_evictions,
+            "evictions_demoted": int(
+                reg.value("cache_evictions_demoted_total")),
+            "evictions_dropped": int(
+                reg.value("cache_evictions_dropped_total")),
             "live_responses": len(self.responses),
             "warm_shards": self.warm_shards,
             "warm_dtype": self.warm_dtype,
         }
+        if self.cold is not None:
+            tiers_d["cold"] = self.cold.stats()
         rebuild = {
             "rebuilds": int(reg.value("cache_rebuilds_total")),
             "shadow_started": int(
@@ -743,7 +871,12 @@ class CacheService:
         self._epoch += 1
         self.hot, self.warm, h_ev, w_ev = self._evict_tenant(
             self.hot, self.warm, jnp.asarray(tenant, jnp.int32))
-        return self._gc(h_ev) + self._gc(w_ev)
+        n = self._gc(h_ev) + self._gc(w_ev)
+        if self.cold is not None:
+            # also purges the tenant's queued promotions: an evicted
+            # tenant must not resurrect through the async drain (§12)
+            n += self._gc(self.cold.evict_tenant(int(tenant)))
+        return n
 
     # ------------------------------------------------------------------
     # internals
@@ -1065,10 +1198,68 @@ class CacheService:
         self._rebuild_total_s += self._last_rebuild_s
         self._c_rebuilds.inc()
 
+    def _capture_and_append(self, dem: tiers.Demoted) -> None:
+        """Land a batch on the warm ring; route its overwrites.
+
+        Without a cold tier a ring overwrite is the end of the line:
+        GC the reported value ids and count them dropped.  With one,
+        the rows about to be overwritten demote instead (§12): their
+        ring positions are recomputed host-side from the pre-append
+        cursor (the same arithmetic as `tiers.warm_append`, sound
+        because `demote_coldest` keeps ``mask`` a True-prefix), their
+        int8 panel rows are captured into the cold ring *before* the
+        jitted append lands, and only the cold ring's own overwrites —
+        the hierarchy's final drops — are GC'd.
+        """
+        if self.cold is None:
+            self.warm, evicted = self._append(self.warm, dem)
+            self._c_ev_dropped.inc(self._gc(evicted))
+            return
+        n = int(np.asarray(dem.mask).sum())
+        if n:
+            cap = self.warm.keys.shape[0]
+            pos = (int(np.asarray(self.warm.cursor))
+                   + np.arange(n)) % cap
+            pos = pos[np.asarray(self.warm.valid)[pos]]
+            if len(pos):
+                dropped = self.cold.insert(
+                    np.asarray(self.warm.keys_q)[pos],
+                    np.asarray(self.warm.scales)[pos],
+                    np.asarray(self.warm.value_ids)[pos].astype(np.int64),
+                    np.asarray(self.warm.tenants)[pos])
+                self._c_ev_demoted.inc(len(pos))
+                self._n_demoted_cold += len(pos)
+                self._c_cold_evictions.inc(self._gc(dropped))
+        # the append's own eviction report covers exactly the captured
+        # rows — their strings stay alive behind the cold copies
+        self.warm, _ = self._append(self.warm, dem)
+
+    def _promote_into_warm(self, prom) -> None:
+        """Append a drained cold `Promotion` to the warm ring through
+        the same jitted ``flush_size``-shaped path as a demotion flush
+        (chunks pad with masked rows, so no new shape is traced).
+        Ring rows a promotion overwrites demote straight back into the
+        cold tier — promotion must never become a covert drop path."""
+        m = self.flush_size
+        for lo in range(0, len(prom.value_ids), m):
+            keys = np.asarray(prom.keys[lo:lo + m], np.float32)
+            v = np.asarray(prom.value_ids[lo:lo + m], np.int32)
+            t = np.asarray(prom.tenants[lo:lo + m], np.int32)
+            pad = m - len(v)
+            dem = tiers.Demoted(
+                keys=jnp.asarray(np.concatenate(
+                    [keys, np.zeros((pad, self.dim), np.float32)])),
+                value_ids=jnp.asarray(np.concatenate(
+                    [v, np.full(pad, -1, np.int32)])),
+                tenants=jnp.asarray(np.concatenate(
+                    [t, np.full(pad, -1, np.int32)])),
+                mask=jnp.asarray(np.concatenate(
+                    [np.ones(len(v), bool), np.zeros(pad, bool)])))
+            self._capture_and_append(dem)
+
     def _do_flush(self, rebuild: bool) -> None:
         self.hot, dem = self._demote(self.hot)
-        self.warm, evicted = self._append(self.warm, dem)
-        self._gc(evicted)
+        self._capture_and_append(dem)
         self._c_demotions.inc(int(np.asarray(dem.mask).sum()))
         # the tail window only covers the last `tail` ring writes; a
         # rebuild is forced before the unindexed backlog outgrows it,
@@ -1120,8 +1311,9 @@ class CacheService:
         return n / (self.hot_capacity + self.warm_capacity)
 
     def __len__(self) -> int:
-        return int(np.asarray(self.hot.valid).sum()) \
+        n = int(np.asarray(self.hot.valid).sum()) \
             + int(np.asarray(self.warm.valid).sum())
+        return n + len(self.cold) if self.cold is not None else n
 
 
 # ---------------------------------------------------------------------------

@@ -196,15 +196,22 @@ def hot_query(state: HotState, q: jax.Array, q_tenants: jax.Array,
 def demote_coldest(state: HotState, m: int) -> Tuple[HotState, Demoted]:
     """Pop the m least-recently-used valid rows for warm-tier flush.
 
-    Returned ``mask`` is False on padding rows (fewer than m valid).
+    Ties in ``last_used`` — common after a batched `hot_touch`, which
+    stamps every hit slot with the same clock — break on the insertion
+    sequence (oldest ``inserted_at`` demotes first), NOT on slot index:
+    slot-order tie-breaking systematically churned low-index slots
+    under uniform traffic.  Remaining ties (same touch clock, same
+    insert clock) fall back to slot order, which is then genuinely
+    arbitrary.  Returned ``mask`` is False on padding rows (fewer than
+    m valid).
     """
-    sentinel = jnp.iinfo(jnp.int32).min
+    big = jnp.iinfo(jnp.int32).max
     # int32 throughout: a float32 cast would blur LRU ordering once the
-    # clock passes 2^24 (valid rows have last_used >= 1, so -last_used
-    # never collides with the sentinel)
-    coldness = jnp.where(state.valid, -state.last_used, sentinel)
-    top, idx = jax.lax.top_k(coldness, m)                         # coldest
-    mask = top > sentinel
+    # clock passes 2^24; invalid rows sort last via the sentinel
+    lu = jnp.where(state.valid, state.last_used, big)
+    ins = jnp.where(state.valid, state.inserted_at, big)
+    idx = jnp.lexsort((ins, lu))[:m]                              # coldest
+    mask = state.valid[idx]
     new_valid = state.valid.at[idx].set(
         jnp.where(mask, False, state.valid[idx]))
     dem = Demoted(keys=state.keys[idx], value_ids=state.value_ids[idx],
@@ -499,7 +506,7 @@ def cascade_lookup(hot: HotState, warm: WarmState, q: jax.Array,
 
 
 def _cascade_ops(hot: HotState, warm: WarmState, qn, qt, thr, k, n_probe,
-                 tail, use_kernel, quantized):
+                 tail, use_kernel, quantized, warm_block_n=None):
     """Flat-array cascade through the kernel-package dispatch; returns
     the 6-tuple (scores, vids, warm_slots, hot_slots, hot_hit, hit)."""
     from repro.kernels.cascade_lookup import ops as _casc_ops
@@ -509,7 +516,7 @@ def _cascade_ops(hot: HotState, warm: WarmState, qn, qt, thr, k, n_probe,
         warm.write_seq, warm.centroids, warm.members,
         warm.cursor, warm.indexed_total, warm.keys_q, warm.scales,
         k=k, n_probe=n_probe, tail=tail, quantized=quantized,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, warm_block_n=warm_block_n)
 
 
 def _rescore_exact(qn, keys, s, wslots):
@@ -524,7 +531,8 @@ def _rescore_exact(qn, keys, s, wslots):
 
 
 def _shard_cascade(hot: HotState, warm: WarmState, qn, qt, thr, k, n_probe,
-                   tail, use_kernel, quantized, shard_index):
+                   tail, use_kernel, quantized, shard_index,
+                   warm_block_n=None):
     """One shard's candidates for the sharded cascade (DESIGN.md §8).
 
     The hot tier is replicated but *attributed to shard 0* (its valid
@@ -535,7 +543,8 @@ def _shard_cascade(hot: HotState, warm: WarmState, qn, qt, thr, k, n_probe,
     """
     hot = hot._replace(valid=hot.valid & (shard_index == 0))
     s, vids, wslots, hslots, _, _ = _cascade_ops(
-        hot, warm, qn, qt, thr, k, n_probe, tail, use_kernel, quantized)
+        hot, warm, qn, qt, thr, k, n_probe, tail, use_kernel, quantized,
+        warm_block_n)
     if quantized:
         s = _rescore_exact(qn, warm.keys, s, wslots)
     is_hot = ((wslots < 0) & (s > NEG / 2)).astype(jnp.int32)
@@ -543,8 +552,8 @@ def _shard_cascade(hot: HotState, warm: WarmState, qn, qt, thr, k, n_probe,
 
 
 def _cascade_sharded_oracle(hot: HotState, swarm: WarmState, qn, qt, thr,
-                            k, n_probe, tail, use_kernel,
-                            quantized) -> CascadeResult:
+                            k, n_probe, tail, use_kernel, quantized,
+                            warm_block_n=None) -> CascadeResult:
     """Single-device emulation of the sharded schedule — the bit-exact
     oracle the shard_map path is tested against.  Shard s's candidates
     occupy columns [s·k, (s+1)·k) of the merge panel, exactly like the
@@ -554,7 +563,7 @@ def _cascade_sharded_oracle(hot: HotState, swarm: WarmState, qn, qt, thr,
     per = [_shard_cascade(hot,
                           jax.tree_util.tree_map(lambda x, i=i: x[i], swarm),
                           qn, qt, thr, k, n_probe, tail, use_kernel,
-                          quantized, i)
+                          quantized, i, warm_block_n)
            for i in range(shards)]
     s, vids, is_hot = merge_stacked_topk(
         k, jnp.stack([p[0] for p in per]), jnp.stack([p[1] for p in per]),
@@ -567,7 +576,7 @@ def _cascade_sharded_oracle(hot: HotState, swarm: WarmState, qn, qt, thr,
 
 def _cascade_sharded(hot: HotState, swarm: WarmState, qn, qt, thr, k,
                      n_probe, tail, use_kernel, quantized, mesh,
-                     axis) -> CascadeResult:
+                     axis, warm_block_n=None) -> CascadeResult:
     """shard_map execution of the sharded cascade: warm leaves split on
     their leading shard axis over ``axis``, hot/queries replicated, one
     (Q, k·shards) all-gather merge (`core.distrib.merge_local_topk`)."""
@@ -581,7 +590,7 @@ def _cascade_sharded(hot: HotState, swarm: WarmState, qn, qt, thr, k,
         warm_local = jax.tree_util.tree_map(lambda x: x[0], swarm_)
         s, vids, is_hot, hslots = _shard_cascade(
             hot_, warm_local, qn_, qt_, thr_, k, n_probe, tail,
-            use_kernel, quantized, i)
+            use_kernel, quantized, i, warm_block_n)
         sm, vm, hm = merge_local_topk(axis, k, s, vids, is_hot)
         hit = sm[:, 0] >= thr_
         hot_hit = hit & (hm[:, 0] != 0)
@@ -608,7 +617,8 @@ def cascade_query(hot: HotState, warm: WarmState, q: jax.Array,
                   fused: bool = False,
                   use_kernel: bool | None = None,
                   quantized: bool = False,
-                  mesh=None, axis: str = "model") -> CascadeResult:
+                  mesh=None, axis: str = "model",
+                  warm_block_n: int | None = None) -> CascadeResult:
     """Cascade lookup with a selectable execution path.
 
     ``fused=False`` runs the original four-op XLA composition
@@ -629,7 +639,11 @@ def cascade_query(hot: HotState, warm: WarmState, q: jax.Array,
     results bit-for-bit).  ``tail`` is then the *per-shard* tail
     window.  ``quantized=True`` scans the warm panel from its int8
     form and re-scores the selected rows exactly (scores in the result
-    are true fp32 cosines either way).
+    are true fp32 cosines either way).  ``warm_block_n`` streams the
+    warm panel through the fused kernel in blocks of that many rows
+    (DESIGN.md §12) so a shard's warm slice may exceed its VMEM budget;
+    results are bit-identical for every block count (and the flag is a
+    no-op on the four-op / oracle paths).
     """
     sharded = warm.keys.ndim == 3
     if mesh is not None and not sharded:
@@ -642,16 +656,17 @@ def cascade_query(hot: HotState, warm: WarmState, q: jax.Array,
         thr = jnp.asarray(thresholds, jnp.float32)
         if mesh is None:
             return _cascade_sharded_oracle(hot, warm, qn, qt, thr, k,
-                                           n_probe, tail, uk, quantized)
+                                           n_probe, tail, uk, quantized,
+                                           warm_block_n)
         return _cascade_sharded(hot, warm, qn, qt, thr, k, n_probe, tail,
-                                uk, quantized, mesh, axis)
+                                uk, quantized, mesh, axis, warm_block_n)
     if not fused and not quantized:
         return cascade_lookup(hot, warm, q, q_tenants, thresholds, k=k,
                               n_probe=n_probe, tail=tail)
     qn = _unit(q.astype(jnp.float32))
     s, vids, wslots, hslots, hot_hit, hit = _cascade_ops(
         hot, warm, qn, q_tenants.astype(jnp.int32), thresholds, k,
-        n_probe, tail, uk, quantized)
+        n_probe, tail, uk, quantized, warm_block_n)
     if quantized:
         # exact re-score may reorder the k selected candidates
         s = _rescore_exact(qn, warm.keys, s, wslots)

@@ -7,46 +7,49 @@ which dominates warm-tier latency.  This kernel extends
 `kernels/cosine_topk`'s streaming running-top-k to the whole cascade in
 one `pallas_call`:
 
-  * grid steps 0..nb-1 stream the HOT tier through VMEM in
+  * grid steps 0..nh-1 stream the HOT tier through VMEM in
     (BLOCK_N × D) tiles, carrying a tenant-masked running top-k in
     scratch exactly like `cosine_topk`;
-  * the last grid step runs the WARM side entirely in VMEM: centroid
-    matmul, per-query probe selection (masked-argmax rounds), the IVF
-    bucket gather done as in-kernel index arithmetic over the inverted
-    lists (`members[probe]` row ids -> key gather -> (Q, bucket) score
-    panel, one probe at a time so only one panel is ever live), the
-    unindexed-tail scan (ring positions derived from `cursor` in
-    SMEM-style meta), and the best-of-tiers merge — so neither the
-    (Q × candidates) score matrix nor the gathered key panels ever
-    materialize in HBM.
+  * grid steps nh..nh+nw-1 stream the WARM key panel through VMEM in
+    (WARM_BLOCK_N × D) tiles.  Each step recomputes the (tiny) probe
+    selection — centroid matmul + masked-argmax rounds over the
+    VMEM-resident centroids — then scores the IVF candidates and
+    unindexed-tail candidates *that live in the current block* via
+    in-kernel index arithmetic over the inverted lists, merging them
+    into a warm running top-k carried in scratch.  Neither the
+    (Q × candidates) score matrix nor any gathered key panel ever
+    materializes in HBM, and no step holds more than one key block
+    plus one (Q, bucket, D) gather panel in VMEM;
+  * the final grid step merges the two accumulators (best-of-tiers,
+    hot candidates first so ties stay hot) and maps slots to value ids.
 
 Candidate ordering matches `jax.lax.top_k` tie-breaking (lowest panel
-index wins): within a panel, masked argmax picks the first occurrence;
-across panels, the accumulator (earlier candidates) is concatenated
-first.  That makes the kernel bit-compatible with the four-op path —
-`ref.py` — including tenant masking, invalid slots and the tail window.
+index wins) exactly: the hot stream visits slots in index order with
+the accumulator concatenated first, and the warm accumulator carries
+each candidate's *flat panel position* (probe-major, tail last — the
+position it occupies in the oracle's single gathered panel) as an
+explicit tie key, so streaming the blocks in any order is
+bit-compatible with the four-op path — `ref.py` — including tenant
+masking, invalid slots and the tail window.
 
-``quantized=True`` swaps the VMEM-resident warm panel for its int8
+``quantized=True`` swaps the streamed warm blocks for their int8
 symmetric per-row quantization (``warm_keys`` arrives as int8 plus a
-(cap,) fp32 scale vector): each (Q, bucket) panel is dequantized only
-transiently, scores accumulate in fp32, and both VMEM residency and
-the HBM→VMEM stream for the warm corpus shrink 4x (DESIGN.md §8).  The
-returned ``warm_slots`` let the caller re-score the few selected rows
-exactly from the fp32 panel at merge time.
+per-row fp32 scale vector, both streamed blockwise): each (Q, bucket)
+panel is dequantized only transiently, scores accumulate in fp32, and
+both VMEM residency and the HBM→VMEM stream for the warm corpus shrink
+4x (DESIGN.md §8).  The returned ``warm_slots`` let the caller re-score
+the few selected rows exactly from the fp32 panel at merge time.
 
-VMEM budget: the warm corpus, centroids and inverted lists are held as
-single VMEM-resident blocks.  At ~16 MB VMEM/core that caps the warm
-slice around a few tens of thousands of rows at D=64 fp32 (4x more
-quantized) — keys alone are cap·D·4 bytes (cap·D int8), plus one
-(Q, bucket, D) panel — so production deployment runs the kernel on the
-per-shard warm slice of the sharded tier (DESIGN.md §8), which is
-exactly the size this budget was designed for; larger single-core
-tiers need the warm keys streamed blockwise like the hot tier, which
-this kernel does not do yet.  Valid masks travel as int32 and the hit
-flags return as int32 (bool VMEM refs are a Mosaic lowering hazard);
-`interpret=True` runs the same dataflow as pure XLA ops for CPU tests
-— the only mode exercised in this repo's CPU CI, as with the other
-kernel packages.
+VMEM budget: only the centroids, inverted lists and the per-slot warm
+metadata columns ((cap,) int32 each) are held whole; the key panels —
+the VMEM hog — stream.  ``warm_block_n`` therefore bounds residency at
+``warm_block_n·D`` key bytes regardless of warm capacity: a shard's
+warm slice may exceed the old single-block design size (DESIGN.md §12)
+at the cost of one extra probe-panel pass per additional block.  Valid
+masks travel as int32 and the hit flags return as int32 (bool VMEM refs
+are a Mosaic lowering hazard); `interpret=True` runs the same dataflow
+as pure XLA ops for CPU tests — the only mode exercised in this repo's
+CPU CI, as with the other kernel packages.
 """
 from __future__ import annotations
 
@@ -59,6 +62,9 @@ from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
 DEFAULT_BLOCK_N = 512
+# tie-key sentinel for consumed / masked candidates: larger than any
+# real flat panel position (n_probe·bucket + tail << 2^30)
+POS_PAD = 2 ** 30
 
 
 def _select_topk(scores, idx, k):
@@ -83,11 +89,43 @@ def _merge(acc_s, acc_i, blk_s, blk_i, k):
     return _select_topk(cand_s, cand_i, k)
 
 
+def _select_topk_pos(scores, pos, slot, k):
+    """Top-k by score with ties broken by the lowest ``pos`` — the flat
+    candidate-panel position each entry occupies in the oracle's single
+    gathered panel.  Masked / already-consumed entries carry POS_PAD,
+    so among equal (e.g. all-NEG) scores the selection order is
+    ascending panel position: exactly `lax.top_k`'s stable
+    lowest-index-first order, independent of the order blocks streamed
+    their candidates in."""
+    rows = jnp.arange(scores.shape[0])
+    out_s, out_p, out_i = [], [], []
+    for _ in range(k):
+        m = jnp.max(scores, axis=-1, keepdims=True)
+        tie_pos = jnp.where(scores >= m, pos, POS_PAD)
+        col = jnp.argmin(tie_pos, axis=-1)
+        out_s.append(scores[rows, col])
+        out_p.append(pos[rows, col])
+        out_i.append(slot[rows, col])
+        scores = scores.at[rows, col].set(NEG_INF)
+        pos = pos.at[rows, col].set(POS_PAD)
+    return (jnp.stack(out_s, -1), jnp.stack(out_p, -1),
+            jnp.stack(out_i, -1))
+
+
+def _merge_pos(acc_s, acc_p, acc_i, blk_s, blk_p, blk_i, k):
+    """Running top-k merge keyed on (score, panel position)."""
+    cand_s = jnp.concatenate([acc_s, blk_s], axis=-1)
+    cand_p = jnp.concatenate([acc_p, blk_p], axis=-1)
+    cand_i = jnp.concatenate([acc_i, blk_i], axis=-1)
+    return _select_topk_pos(cand_s, cand_p, cand_i, k)
+
+
 def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
             wk_ref, wscale_ref, wv_ref, wt_ref, wvid_ref, wseq_ref,
             cent_ref, mem_ref, meta_ref, out_s_ref, out_v_ref,
             out_wslot_ref, out_hslot_ref, out_flag_ref,
-            acc_s, acc_i, *, k: int, block_n: int, n_hot: int,
+            acc_s, acc_i, wacc_s, wacc_p, wacc_i, *, k: int, block_n: int,
+            n_hot: int, n_hot_blocks: int, warm_block_n: int, n_warm: int,
             n_probe: int, tail: int, quantized: bool):
     j = pl.program_id(0)
     nb = pl.num_programs(0)
@@ -96,51 +134,58 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
     def _init():
         acc_s[...] = jnp.full_like(acc_s, NEG_INF)
         acc_i[...] = jnp.zeros_like(acc_i)
+        wacc_s[...] = jnp.full_like(wacc_s, NEG_INF)
+        wacc_p[...] = jnp.full_like(wacc_p, POS_PAD)
+        wacc_i[...] = jnp.zeros_like(wacc_i)
 
     q = q_ref[...].astype(jnp.float32)                 # (Q, D)
     qt = qt_ref[...]                                   # (Q,)
+    Q = q.shape[0]
 
     # ---- hot tier: streamed block, tenant-masked running top-k ------
-    kblk = hk_ref[...].astype(jnp.float32)             # (BN, D)
-    s = jax.lax.dot_general(q, kblk, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32)  # (Q, BN)
-    col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    ok = (hv_ref[...] != 0)[None, :] & (ht_ref[...][None, :] == qt[:, None]) \
-        & (col < n_hot)
-    s = jnp.where(ok, s, NEG_INF)
-    blk_s, blk_i = _select_topk(s, col, k)
-    new_s, new_i = _merge(acc_s[...], acc_i[...], blk_s, blk_i, k)
-    acc_s[...] = new_s
-    acc_i[...] = new_i
+    @pl.when(j < n_hot_blocks)
+    def _hot():
+        kblk = hk_ref[...].astype(jnp.float32)         # (BN, D)
+        s = jax.lax.dot_general(q, kblk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = (hv_ref[...] != 0)[None, :] \
+            & (ht_ref[...][None, :] == qt[:, None]) & (col < n_hot)
+        s = jnp.where(ok, s, NEG_INF)
+        blk_s, blk_i = _select_topk(s, col, k)
+        new_s, new_i = _merge(acc_s[...], acc_i[...], blk_s, blk_i, k)
+        acc_s[...] = new_s
+        acc_i[...] = new_i
 
-    # ---- warm tier + merge: once, after the last hot block ----------
-    @pl.when(j == nb - 1)
-    def _finish():
-        Q = q.shape[0]
-        cap = wk_ref.shape[0]
+    # ---- warm tier: streamed block, position-keyed running top-k ----
+    @pl.when(j >= n_hot_blocks)
+    def _warm():
+        b = j - n_hot_blocks
+        base = b * warm_block_n
         bucket = mem_ref.shape[1]
         cursor = meta_ref[0]
         indexed_total = meta_ref[1]
-        wv = wv_ref[...] != 0
+        wv = wv_ref[...] != 0                          # (cap,) whole
         wt = wt_ref[...]
         wseq = wseq_ref[...]
-        rows = jnp.arange(Q)[:, None]
         if quantized:
-            # int8 warm panel stays int8-resident: dequantize one
+            # int8 warm block stays int8-resident: dequantize one
             # (Q, B, D) gather at a time, fp32 accumulation
-            wk8 = wk_ref[...]                          # (cap, D) int8 VMEM
-            wscale = wscale_ref[...]                   # (cap,) fp32
+            wkb = wk_ref[...]                          # (WB, D) int8 VMEM
+            wscaleb = wscale_ref[...]                  # (WB,) fp32
 
-            def _panel_scores(safe):
-                pan = wk8[safe].astype(jnp.float32)
-                return jnp.einsum("qd,qbd->qb", q, pan) * wscale[safe]
+            def _panel_scores(local):
+                pan = wkb[local].astype(jnp.float32)
+                return jnp.einsum("qd,qbd->qb", q, pan) * wscaleb[local]
         else:
-            wk = wk_ref[...].astype(jnp.float32)       # (cap, D) VMEM
+            wkb = wk_ref[...].astype(jnp.float32)      # (WB, D) VMEM
 
-            def _panel_scores(safe):
-                return jnp.einsum("qd,qbd->qb", q, wk[safe])
+            def _panel_scores(local):
+                return jnp.einsum("qd,qbd->qb", q, wkb[local])
 
-        # probe selection: centroid matmul + n_probe argmax rounds
+        # probe selection: centroid matmul + n_probe argmax rounds —
+        # recomputed per block from the VMEM-resident centroids (tiny,
+        # deterministic: every block sees identical probes)
         csims = jax.lax.dot_general(
             q, cent_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32)        # (Q, K)
@@ -148,36 +193,55 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
         _, probes = _select_topk(csims, pcol, n_probe)  # (Q, n_probe)
 
         # IVF gather: one (Q, bucket) candidate panel per probe, index
-        # arithmetic over the inverted lists, never leaving VMEM
+        # arithmetic over the inverted lists, restricted to candidates
+        # whose row lives in this block — each live candidate is scored
+        # exactly once across the sweep, in its own block, tagged with
+        # its flat panel position so merge order is block-invariant
         mem = mem_ref[...]                             # (K, bucket)
-        ws_acc = jnp.full((Q, k), NEG_INF, jnp.float32)
-        wi_acc = jnp.zeros((Q, k), jnp.int32)
+        ws, wp, wi = wacc_s[...], wacc_p[...], wacc_i[...]
         for p in range(n_probe):
             cand = mem[probes[:, p]]                   # (Q, bucket)
-            safe = jnp.clip(cand, 0, cap - 1)
-            sc = _panel_scores(safe)
-            okp = (cand >= 0) & wv[safe] & (wt[safe] == qt[:, None]) \
-                & (wseq[safe] <= indexed_total)
+            local = cand - base
+            inblk = (cand >= 0) & (local >= 0) & (local < warm_block_n)
+            gsafe = jnp.clip(cand, 0, n_warm - 1)
+            sc = _panel_scores(jnp.clip(local, 0, warm_block_n - 1))
+            okp = inblk & wv[gsafe] & (wt[gsafe] == qt[:, None]) \
+                & (wseq[gsafe] <= indexed_total)
             sc = jnp.where(okp, sc, NEG_INF)
-            pb_s, pb_i = _select_topk(sc, safe, k)
-            ws_acc, wi_acc = _merge(ws_acc, wi_acc, pb_s, pb_i, k)
+            fpos = p * bucket \
+                + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+            fpos = jnp.where(okp, fpos, POS_PAD)
+            pb_s, pb_p, pb_i = _select_topk_pos(sc, fpos, gsafe, k)
+            ws, wp, wi = _merge_pos(ws, wp, wi, pb_s, pb_p, pb_i, k)
 
         # unindexed-tail scan: last `tail` ring writes, newest first
         if tail:
             offs = jax.lax.broadcasted_iota(jnp.int32, (1, tail), 1)
-            pos = (cursor - 1 - offs) % cap            # (1, tail)
+            pos = (cursor - 1 - offs) % n_warm         # (1, tail)
             unindexed = wseq[pos] > indexed_total
             tcand = jnp.broadcast_to(jnp.where(unindexed, pos, -1),
                                      (Q, tail))
-            tsafe = jnp.clip(tcand, 0, cap - 1)
-            sc = _panel_scores(tsafe)
-            okt = (tcand >= 0) & wv[tsafe] & (wt[tsafe] == qt[:, None])
+            tlocal = tcand - base
+            inblk = (tcand >= 0) & (tlocal >= 0) & (tlocal < warm_block_n)
+            tsafe = jnp.clip(tcand, 0, n_warm - 1)
+            sc = _panel_scores(jnp.clip(tlocal, 0, warm_block_n - 1))
+            okt = inblk & wv[tsafe] & (wt[tsafe] == qt[:, None])
             sc = jnp.where(okt, sc, NEG_INF)
-            tb_s, tb_i = _select_topk(sc, tsafe, k)
-            ws_acc, wi_acc = _merge(ws_acc, wi_acc, tb_s, tb_i, k)
+            fpos = n_probe * bucket \
+                + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+            fpos = jnp.where(okt, fpos, POS_PAD)
+            tb_s, tb_p, tb_i = _select_topk_pos(sc, fpos, tsafe, k)
+            ws, wp, wi = _merge_pos(ws, wp, wi, tb_s, tb_p, tb_i, k)
+        wacc_s[...] = ws
+        wacc_p[...] = wp
+        wacc_i[...] = wi
 
-        # best-of-tiers merge; hot candidates first so ties stay hot
+    # ---- best-of-tiers merge: once, after the last warm block -------
+    @pl.when(j == nb - 1)
+    def _finish():
+        rows = jnp.arange(Q)[:, None]
         hs, hi = acc_s[...], acc_i[...]
+        ws_acc, wi_acc = wacc_s[...], wacc_i[...]
         hvids = jnp.where(hs > NEG_INF / 2, hvid_ref[...][hi], -1)
         wvids = jnp.where(ws_acc > NEG_INF / 2, wvid_ref[...][wi_acc], -1)
         wslot_c = jnp.where(ws_acc > NEG_INF / 2, wi_acc, -1)
@@ -197,8 +261,8 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
 
 
 @functools.partial(jax.jit, static_argnames=("k", "n_probe", "tail",
-                                             "block_n", "interpret",
-                                             "quantized"))
+                                             "block_n", "warm_block_n",
+                                             "interpret", "quantized"))
 def cascade_lookup(q, q_tenants, thresholds,
                    hot_keys, hot_valid, hot_tenants, hot_value_ids,
                    warm_keys, warm_valid, warm_tenants, warm_value_ids,
@@ -206,13 +270,17 @@ def cascade_lookup(q, q_tenants, thresholds,
                    warm_keys_q=None, warm_scales=None,
                    k: int = 1, n_probe: int = 8, tail: int = 0, *,
                    quantized: bool = False,
-                   block_n: int = DEFAULT_BLOCK_N, interpret: bool = True):
+                   block_n: int = DEFAULT_BLOCK_N,
+                   warm_block_n: int | None = None, interpret: bool = True):
     """Array-level fused cascade; signature/semantics of `ref.py`.
 
     q: (Q, D) unit-norm.  Returns (scores (Q, k), value_ids (Q, k),
     warm_slots (Q, k), hot_slots (Q,), hot_hit (Q,), hit (Q,)).
     ``quantized=True`` streams ``warm_keys_q``/``warm_scales`` instead
-    of the fp32 warm panel.
+    of the fp32 warm panel.  ``warm_block_n`` streams the warm key
+    panel in blocks of that many rows (None = one block, the old
+    whole-panel residency); results are bit-identical for every block
+    count.
     """
     q = q.astype(jnp.float32)
     q_tenants = q_tenants.astype(jnp.int32)
@@ -242,12 +310,30 @@ def cascade_lookup(q, q_tenants, thresholds,
         hot_valid = jnp.pad(hot_valid, (0, pad))
         hot_tenants = jnp.pad(hot_tenants, (0, pad), constant_values=-1)
         hot_value_ids = jnp.pad(hot_value_ids, (0, pad), constant_values=-1)
+
+    wb = min(warm_block_n or cap, cap)
+    n_wblocks = -(-cap // wb)
+    wpad = n_wblocks * wb - cap
+    wk_in = wk_in.astype(wk_dtype)
+    if wpad:
+        # only the streamed panels pad (their BlockSpec tiles the padded
+        # extent); per-slot metadata stays (cap,) — no candidate id ever
+        # reaches the pad rows, so they are dead weight, never read
+        wk_in = jnp.pad(wk_in, ((0, wpad), (0, 0)))
+        wscale_in = jnp.pad(wscale_in, (0, wpad))
     meta = jnp.stack([jnp.asarray(cursor, jnp.int32),
                       jnp.asarray(indexed_total, jnp.int32)])
 
     bucket = members.shape[1]
-    grid = (n_blocks,)
+    grid = (n_blocks + n_wblocks,)
     whole = lambda shape: pl.BlockSpec(shape, lambda j: (0,) * len(shape))
+    # clamped index maps: hot tiles only advance through the hot steps,
+    # warm tiles only through the warm steps — a revisited index fetches
+    # nothing new, so neither stream pays for the other's phase
+    hblk = lambda j: (jnp.minimum(j, n_blocks - 1),)
+    hblk2 = lambda j: (jnp.minimum(j, n_blocks - 1), 0)
+    wblk = lambda j: (jnp.maximum(j - n_blocks, 0),)
+    wblk2 = lambda j: (jnp.maximum(j - n_blocks, 0), 0)
     out_shape = (jax.ShapeDtypeStruct((Q, k), jnp.float32),
                  jax.ShapeDtypeStruct((Q, k), jnp.int32),
                  jax.ShapeDtypeStruct((Q, k), jnp.int32),
@@ -255,18 +341,20 @@ def cascade_lookup(q, q_tenants, thresholds,
                  jax.ShapeDtypeStruct((Q, 2), jnp.int32))
     fn = pl.pallas_call(
         functools.partial(_kernel, k=k, block_n=bn, n_hot=n_hot,
-                          n_probe=n_probe, tail=tail, quantized=quantized),
+                          n_hot_blocks=n_blocks, warm_block_n=wb,
+                          n_warm=cap, n_probe=n_probe, tail=tail,
+                          quantized=quantized),
         grid=grid,
         in_specs=[
             whole((Q, D)),                                # q
             whole((Q,)),                                  # q_tenants
             whole((Q,)),                                  # thresholds
-            pl.BlockSpec((bn, D), lambda j: (j, 0)),      # hot keys stream
-            pl.BlockSpec((bn,), lambda j: (j,)),          # hot valid
-            pl.BlockSpec((bn,), lambda j: (j,)),          # hot tenants
+            pl.BlockSpec((bn, D), hblk2),                 # hot keys stream
+            pl.BlockSpec((bn,), hblk),                    # hot valid
+            pl.BlockSpec((bn,), hblk),                    # hot tenants
             whole((n_blocks * bn,)),                      # hot value ids
-            whole((cap, D)),                              # warm keys (f32/i8)
-            whole((cap,)),                                # warm row scales
+            pl.BlockSpec((wb, D), wblk2),                 # warm keys stream
+            pl.BlockSpec((wb,), wblk),                    # warm row scales
             whole((cap,)),                                # warm valid
             whole((cap,)),                                # warm tenants
             whole((cap,)),                                # warm value ids
@@ -281,12 +369,15 @@ def cascade_lookup(q, q_tenants, thresholds,
         scratch_shapes=[
             pltpu.VMEM((Q, k), jnp.float32),
             pltpu.VMEM((Q, k), jnp.int32),
+            pltpu.VMEM((Q, k), jnp.float32),
+            pltpu.VMEM((Q, k), jnp.int32),
+            pltpu.VMEM((Q, k), jnp.int32),
         ],
         interpret=interpret,
     )
     out_s, out_v, out_w, hslot, flags = fn(
         q, q_tenants, thresholds.astype(jnp.float32), hot_keys, hot_valid,
-        hot_tenants, hot_value_ids, wk_in.astype(wk_dtype), wscale_in,
+        hot_tenants, hot_value_ids, wk_in, wscale_in,
         warm_valid, warm_tenants, warm_value_ids, warm_write_seq, centroids,
         members, meta)
     return (out_s, out_v, out_w, hslot[:, 0], flags[:, 1] != 0,

@@ -31,12 +31,16 @@ def cascade_lookup(q, q_tenants, thresholds,
                    k: int = 1, n_probe: int = 8, tail: int = 0, *,
                    quantized: bool = False,
                    use_kernel: bool | None = None,
-                   block_n: int = _kernel.DEFAULT_BLOCK_N):
+                   block_n: int = _kernel.DEFAULT_BLOCK_N,
+                   warm_block_n: int | None = None):
     """q: (Q, D) unit-norm -> (scores, value_ids, warm_slots, hot_slots,
     hot_hit, hit); see `ref.cascade_lookup`.
 
     use_kernel: None -> kernel on TPU, oracle elsewhere (interpret-mode
     kernels are for correctness tests, not the CPU hot path).
+    warm_block_n streams the warm panel through the kernel in blocks of
+    that many rows (None = whole panel, the pre-§12 residency); the
+    oracle ignores it — blocking never changes results.
     """
     if use_kernel is None:
         use_kernel = _on_tpu()
@@ -46,7 +50,8 @@ def cascade_lookup(q, q_tenants, thresholds,
             hot_value_ids, warm_keys, warm_valid, warm_tenants,
             warm_value_ids, warm_write_seq, centroids, members, cursor,
             indexed_total, warm_keys_q, warm_scales, k, n_probe, tail,
-            quantized=quantized, block_n=block_n, interpret=not _on_tpu())
+            quantized=quantized, block_n=block_n,
+            warm_block_n=warm_block_n, interpret=not _on_tpu())
     return _ref.cascade_lookup(
         q, q_tenants, thresholds, hot_keys, hot_valid, hot_tenants,
         hot_value_ids, warm_keys, warm_valid, warm_tenants, warm_value_ids,

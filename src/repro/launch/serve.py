@@ -12,7 +12,11 @@ mesh (local IVF probe per shard + tiny merge, DESIGN.md §8),
 points into the online feedback loop (DESIGN.md §9), and
 ``--learned-embedder`` additionally fine-tunes the compact embedder
 from pooled serving feedback in the background, hot-swapping it with a
-versioned shadow re-embed of the cached corpus (DESIGN.md §11).
+versioned shadow re-embed of the cached corpus (DESIGN.md §11), and
+``--cold-capacity N`` backs the warm ring with an N-row host-RAM cold
+tier — warm evictions demote instead of dropping, below-threshold
+queries fall through to a budgeted cold fetch, and re-hot rows promote
+back up on the idle tick (DESIGN.md §12).
 
 ``--metrics-json PATH`` dumps the telemetry registry (DESIGN.md §10)
 as JSON-lines — one meta line then one line per metric series — after
@@ -60,6 +64,14 @@ def main():
                     help="learn per-tenant thresholds/admission margins "
                          "online from observed duplicate rates "
                          "(DESIGN.md §9; implies --tiered)")
+    ap.add_argument("--cold-capacity", type=int, default=0,
+                    help="host-RAM cold-tier rows behind the warm ring "
+                         "(0 = no cold tier; DESIGN.md §12; implies "
+                         "--tiered, incompatible with --cache-shards)")
+    ap.add_argument("--warm-block", type=int, default=0,
+                    help="stream the fused kernel's warm panel in blocks "
+                         "of N rows (0 = whole-panel residency; "
+                         "DESIGN.md §12)")
     ap.add_argument("--learned-embedder", action="store_true",
                     help="refresh the compact embedder online from pooled "
                          "serving feedback and hot-swap it with a "
@@ -78,8 +90,12 @@ def main():
         ap.error("--metrics-json instruments the cached serving path; "
                  "add --cache")
     if args.cache_shards or args.warm_dtype != "float32" \
-            or args.learned_admission or args.learned_embedder:
+            or args.learned_admission or args.learned_embedder \
+            or args.cold_capacity or args.warm_block:
         args.tiered = True
+    if args.cold_capacity and args.cache_shards:
+        ap.error("--cold-capacity needs the unsharded warm ring; drop "
+                 "--cache-shards (DESIGN.md §12)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -128,6 +144,8 @@ def main():
                              embedder_tokenizer=tok
                              if args.learned_embedder else None,
                              refresh_policy=refresh,
+                             cold_capacity=args.cold_capacity,
+                             warm_block=args.warm_block or None,
                              telemetry=telemetry)
         caps = cache.capabilities()
         print(f"tiered cache: warm shards "
@@ -135,7 +153,9 @@ def main():
               f"warm dtype {caps.warm_dtype}, learned admission "
               f"{'on' if caps.learned_admission else 'off'}, "
               f"learned embedder "
-              f"{'on' if caps.learned_embedder else 'off'}")
+              f"{'on' if caps.learned_embedder else 'off'}, "
+              f"cold tier {args.cold_capacity if caps.cold_tier else 0} "
+              f"rows")
     else:
         cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
                               threshold=args.threshold, telemetry=telemetry)
@@ -163,11 +183,21 @@ def main():
           f"hit rate {svc.hit_rate:.1%} "
           f"({int(svc.stats()['hits'])} LLM calls saved)")
     stage_h = telemetry.stage_histogram()
-    for stage in ("embed", "plan", "generate", "commit", "maintenance"):
+    for stage in ("embed", "plan", "cold_fetch", "generate", "commit",
+                  "maintenance"):
         agg = stage_h.aggregate(stage=stage)
         if agg.count:
             print(f"  stage {stage:<12} p50 {agg.quantile(0.5) * 1e3:7.2f} "
                   f"ms  mean {agg.mean * 1e3:7.2f} ms  x{agg.count}")
+    if args.cold_capacity:
+        cd = cache.stats_snapshot().tiers["cold"]
+        print(f"cold tier: {cd['cold_rows']} rows "
+              f"({cd['cold_occupancy']:.0%} of {args.cold_capacity}), "
+              f"{cd['cold_hits']} hits from {cd['cold_fetches']} fetches "
+              f"({cd['cold_fetched_rows']} rows shipped, "
+              f"{cd['cold_router_skips']} router skips); "
+              f"{cd['cold_promoted']} promoted back to warm, "
+              f"{cd['cold_dropped']} final drops")
     if args.learned_admission:
         st = svc.stats()
         print(f"learned admission: {st['refits_applied']} refits from "

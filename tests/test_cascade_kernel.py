@@ -85,6 +85,60 @@ def test_fused_kernel_matches_oracle(k, n_probe, tail, block_n):
                                       err_msg=name)
 
 
+@pytest.mark.parametrize("n_wblocks", [1, 2, 8])
+@pytest.mark.parametrize("quantized", [False, True])
+def test_blockwise_warm_stream_matches_oracle(n_wblocks, quantized):
+    """DESIGN.md §12: the warm panel streams through the Pallas grid in
+    blocks, so a warm slice larger than the single-block VMEM design
+    size still runs — and every block count is bit-exact with the
+    four-op oracle (whose panel is gathered whole), fp32 and int8,
+    including ring wraparound of the tail window."""
+    hot, warm = _random_states(Nw=256, unindexed=30)
+    if quantized:
+        warm = tiers.requantize(warm)
+    q, qt, thr = _queries(9, 16)
+    args = (q, qt, thr) + _flatten(hot, warm)
+    kw = dict(k=3, n_probe=4, tail=16)
+    qkw = dict(warm_keys_q=warm.keys_q, warm_scales=warm.scales,
+               quantized=True) if quantized else {}
+    ref = cl_ref.cascade_lookup(*args, **kw, **qkw)
+    ker = cl_kernel.cascade_lookup(*args, **kw, **qkw, block_n=16,
+                                   warm_block_n=256 // n_wblocks,
+                                   interpret=True)
+    for name, a, b in zip(("scores", "value_ids", "warm_slots", "hot_slots",
+                           "hot_hit", "hit"), ref, ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=name)
+
+
+def test_blockwise_warm_stream_ragged_last_block():
+    """Warm capacity not divisible by warm_block_n: the padded rows of
+    the streamed panel must stay dead weight (no candidate can reach
+    them), so results still match the oracle bit-for-bit."""
+    hot, warm = _random_states(Nw=200, unindexed=25)
+    q, qt, thr = _queries(7, 16)
+    args = (q, qt, thr) + _flatten(hot, warm)
+    ref = cl_ref.cascade_lookup(*args, k=2, n_probe=4, tail=12)
+    ker = cl_kernel.cascade_lookup(*args, k=2, n_probe=4, tail=12,
+                                   block_n=32, warm_block_n=64,
+                                   interpret=True)
+    for a, b in zip(ref, ker):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_cascade_query_warm_block_n_matches_default():
+    """tiers-level: cascade_query(warm_block_n=...) on the kernel path
+    equals the unfused four-op result."""
+    hot, warm = _random_states(Nw=128)
+    q, qt, thr = _queries(8, 16)
+    base = tiers.cascade_query(hot, warm, q, qt, thr, k=2, n_probe=4,
+                               tail=8, fused=False)
+    blk = tiers.cascade_query(hot, warm, q, qt, thr, k=2, n_probe=4,
+                              tail=8, fused=True, use_kernel=True,
+                              warm_block_n=32)
+    _assert_same_result(base, blk)
+
+
 def test_fused_kernel_empty_warm_tier():
     """Fresh service: centroids are zero, every inverted list is empty —
     the kernel must mask all IVF candidates, not fabricate hits."""
