@@ -44,6 +44,25 @@ warning on CPU where "devices" are threads contending for the same
 cores.  Set ``BENCH_TIERED_SIZES=16384,65536`` to override the size
 sweep.
 
+The ``tiered/ensemble/*`` rows time the fused multi-embedder cascade
+(DESIGN.md §13): one pilot-routed kernel pass over E stacked key
+panels with the weighted fused score computed in-VMEM, vs the
+single-embedder cascade it must cost at most 1.6x of (the sequential
+alternative costs ~E x).  Fused recall is hard-asserted at or above
+the best single embedder's exact recall, the forced kernel is asserted
+bit-exact against the E-panel four-op oracle, and the
+``weights_uniform`` / ``weights_learned`` rows run the per-tenant
+mixture-weight refit (ridge on per-embedder score/duplicate events)
+against frozen uniform weights on a drifting stream.  Override with
+``BENCH_ENSEMBLE_SIZES`` / ``BENCH_ENSEMBLE_E``; ``--smoke`` runs
+E=2 at 16k.
+
+Platform-conditional asserts (sharded-beats-replicated at 256k, the
+fused-ensemble latency bound) are recorded in the JSON as
+``checked_asserts`` / ``skipped_asserts`` so the trajectory gate can
+verify each one was enforced — or legally skipped on CPU — rather
+than silently absent.
+
 Every row also lands in a machine-readable ``BENCH_cascade.json``
 (default ``results/BENCH_cascade.json``, override with
 ``BENCH_CASCADE_JSON``; set it empty to skip writing) so future PRs
@@ -154,6 +173,50 @@ MAINT_MAX = 1 << 16
 COLD_HOT = 1 << 10
 COLD_WARM = 1 << 14
 COLD_DEFAULT_SIZES = [1 << 20]     # 1M-row corpus; --smoke drops to 64k
+# fused multi-embedder ensemble rows (DESIGN.md §13): one kernel pass
+# over E stacked key panels, routed on the pilot embedder's centroids.
+# The p50 target vs the sequential E-pass alternative is a bandwidth
+# claim about accelerator dispatch, so it is hard-asserted off-CPU and
+# recorded as a *structured* skip on CPU (see _assert_skipped)
+ENS_DEFAULT_SIZES = [1 << 16]
+ENS_DEFAULT_E = 3
+ENS_MAX_P50_RATIO = 1.6            # fused E-panel p50 vs single-panel p50
+# the ensemble operating point sits below the single-embedder one: a
+# duplicate one embedder misses scores ((E-1)*0.98 + 0.66)/E fused —
+# above this threshold for every E >= 2, while the blind panel's 0.66
+# stays below it (the workload _ens_queries builds)
+ENS_THRESHOLD = 0.72
+
+
+def _ensemble_sizes():
+    env = os.environ.get("BENCH_ENSEMBLE_SIZES")
+    if env is None:
+        return list(ENS_DEFAULT_SIZES)
+    return [int(s) for s in env.split(",") if s.strip()]
+
+
+def _ensemble_e():
+    return int(os.environ.get("BENCH_ENSEMBLE_E", ENS_DEFAULT_E))
+
+
+# Platform-conditional asserts.  A claim that only holds on real
+# accelerator fleets (sharded beats replicated, fused-ensemble beats
+# sequential) used to degrade to a stderr warning on CPU — invisible
+# to the trajectory gate, indistinguishable from the assert site being
+# deleted.  Every such site now records itself here, and the lists
+# land in BENCH_cascade.json (``checked_asserts`` / ``skipped_asserts``)
+# so scripts/check_bench_trajectory.py can verify each applicable
+# assert was either enforced or legally skipped (CPU only).
+_ASSERTS = {"checked": [], "skipped": []}
+
+
+def _assert_checked(name):
+    _ASSERTS["checked"].append(name)
+
+
+def _assert_skipped(name, reason):
+    _ASSERTS["skipped"].append({"name": name, "reason": reason})
+    print(f"WARNING: skipped assert {name}: {reason}", file=sys.stderr)
 
 
 def _unit(x):
@@ -435,17 +498,288 @@ def _bench_sharded(tag, n_total, keys, hot, q, tenants, thresholds,
             # the scale claim: at 256k the per-shard slices + tiny merge
             # must beat the replicated cascade.  Hard-assert on real
             # accelerator fleets; on CPU the "devices" are host threads
-            # fighting for the same cores, so a miss only warns.
+            # fighting for the same cores, so the claim is recorded as
+            # a structured skip the trajectory gate can verify.
             if n_total >= 1 << 18 and shards > 1:
+                aname = f"{tag}/sharded_p50_beats_replicated"
                 rep_p50 = p50s["cascade_fused"]
-                if p50 >= rep_p50:
-                    msg = (f"{tag}: sharded p50 {p50:.0f}us does not beat "
-                           f"replicated p50 {rep_p50:.0f}us over "
-                           f"{shards} shards")
-                    if jax.default_backend() != "cpu":
-                        raise AssertionError(msg)
-                    print(f"WARNING: {msg} (CPU thread contention)",
-                          file=sys.stderr)
+                if jax.default_backend() == "cpu":
+                    _assert_skipped(
+                        aname, "cpu backend: shards are host threads "
+                        "contending for the same cores"
+                        + ("" if p50 < rep_p50 else
+                           f" (and sharded p50 {p50:.0f}us did not beat "
+                           f"replicated {rep_p50:.0f}us here)"))
+                else:
+                    _assert_checked(aname)
+                    assert p50 < rep_p50, \
+                        f"{tag}: sharded p50 {p50:.0f}us does not beat " \
+                        f"replicated p50 {rep_p50:.0f}us over " \
+                        f"{shards} shards"
+
+
+def _ens_corpus(rng, n_total, n_clusters, e):
+    """E correlated key panels over one clustered latent corpus — the
+    same paraphrase groups seen through E different embedders, each
+    with its own observation noise: (n, E, D)."""
+    z = _corpus(rng, n_total, n_clusters)
+    return np.stack(
+        [_unit(z + 0.1 * rng.standard_normal(z.shape).astype(np.float32))
+         for _ in range(e)], 1)
+
+
+def _ens_queries(rng, panels):
+    """Half near-duplicates, half novel.  Each near-duplicate is a
+    tight paraphrase of one corpus row on every panel except one:
+    panel (i mod E) is corrupted toward noise — the embedder that
+    "missed" this paraphrase (cos ~0.66, below the ensemble operating
+    point) while the others stay confident (cos ~0.98).  Every single
+    embedder therefore misses ~1/E of the duplicates; the fused score
+    keeps all of them above ENS_THRESHOLD with deterministic margin —
+    the ensemble claim as a workload, not a statistical accident."""
+    n, e, _ = panels.shape
+    idx = rng.choice(n, Q // 2, replace=False)
+    base = panels[idx]
+    pos = _unit(base + 0.0254 * rng.standard_normal(
+        base.shape).astype(np.float32))
+    noisy = _unit(base + 0.142 * rng.standard_normal(
+        base.shape).astype(np.float32))
+    rows = np.arange(Q // 2)
+    pos[rows, rows % e] = noisy[rows, rows % e]
+    neg = _unit(rng.standard_normal((Q // 2, e, DIM)).astype(np.float32))
+    return np.concatenate([pos, neg]).astype(np.float32)
+
+
+def _ens_exact(panels, qp, weights):
+    """Host-exact per-embedder best cosine (Q, E) and fused best (Q,)
+    over the full corpus, chunked like _exact_hit_mask."""
+    nq, e = qp.shape[0], qp.shape[1]
+    best_e = np.full((nq, e), -1.0, np.float32)
+    best_f = np.full(nq, -2.0, np.float32)
+    for lo in range(0, len(panels), 1 << 16):
+        blk = panels[lo:lo + (1 << 16)]
+        cos = np.einsum("qed,bed->qbe", qp, blk)
+        best_e = np.maximum(best_e, cos.max(axis=1))
+        best_f = np.maximum(
+            best_f, (cos * weights[:, None, :]).sum(-1).max(axis=1))
+    return best_e, best_f
+
+
+def _bench_ensemble(n_total):
+    """Fused E-panel ensemble cascade vs the single-embedder cascade
+    (DESIGN.md §13): one pilot-routed kernel pass over E stacked key
+    panels with the weighted fused score computed in-VMEM.
+
+    Hard asserts carried by these rows:
+
+      * fused recall >= the best single embedder's *exact* recall (the
+        ensemble claim from arxiv 2507.07061 — exact per-panel recall
+        is an upper bound on any single-embedder cascade, so this is
+        the strong form);
+      * the forced kernel is bit-exact with the E-panel four-op oracle
+        (scores, ids, hit set — every EnsembleResult field);
+      * int8 fused recall within 0.5% of fp32 fused;
+      * fused p50 <= 1.6x the single-embedder fused p50 (vs ~E x for
+        the sequential path) — asserted off-CPU, recorded as a
+        structured skip on CPU where the panels' extra flops are not
+        hidden behind the amortized bucket gather.
+    """
+    e = max(_ensemble_e(), 2)
+    n_clusters, bucket, iters = SIZES.get(
+        n_total, (max(n_total // 512, 16), 1024, 2))
+    tag = f"tiered/ensemble/{n_total // 1024}k"
+    rng = np.random.default_rng(SEED + 9)
+    panels = _ens_corpus(rng, n_total, n_clusters, e)
+    _, hot, warm = _states(panels[:, 0], n_clusters, bucket, iters)
+    warm_n = n_total - HOT
+    ens = tiers.make_ensemble(
+        jnp.asarray(panels[warm_n:].transpose(1, 0, 2)),
+        jnp.asarray(panels[:warm_n].transpose(1, 0, 2)))
+    qp = _ens_queries(rng, panels)
+    w = np.full((Q, e), 1.0 / e, np.float32)
+    tenants = jnp.zeros((Q,), jnp.int32)
+    thresholds = jnp.full((Q,), ENS_THRESHOLD, jnp.float32)
+    pos = slice(0, Q // 2)
+
+    best_e, best_f = _ens_exact(panels, qp, w)
+    single_recalls = (best_e[pos] >= ENS_THRESHOLD).mean(axis=0)
+    best_single = float(single_recalls.max())
+
+    # the single-embedder production path on the pilot panel — the
+    # latency denominator of the tentpole claim
+    single_fn = jax.jit(partial(
+        tiers.cascade_query, k=1, n_probe=N_PROBE, tail=0, fused=True))
+    qpilot = jnp.asarray(qp[:, 0])
+    res_s = single_fn(hot, warm, qpilot, tenants, thresholds)
+    jax.block_until_ready(res_s)
+    p50_single, us_single = _timed_p50(
+        lambda: jax.block_until_ready(
+            single_fn(hot, warm, qpilot, tenants, thresholds)))
+    yield f"{tag}/single_pilot", us_single / Q, {
+        "n": n_total, "e": 1, "threshold": ENS_THRESHOLD,
+        "us_per_query": us_single / Q, "p50_us": p50_single,
+        "recall_at_thr": float(np.asarray(res_s.hit)[pos].mean())}
+
+    qe, wj = jnp.asarray(qp), jnp.asarray(w)
+    ens_kw = dict(k=1, n_probe=N_PROBE, tail=0)
+    recalls = {}
+    for name, kw in (("fused", {}), ("fused_int8", {"quantized": True})):
+        fn = jax.jit(partial(tiers.ensemble_cascade_query, fused=True,
+                             **ens_kw, **kw))
+        res = fn(hot, warm, ens, qe, wj, tenants, thresholds)
+        jax.block_until_ready(res)
+        hit = np.asarray(res.hit)
+        recall = recalls[name] = float(hit[pos].mean())
+        false_hits = int(hit[Q // 2:].sum())
+        p50, us = _timed_p50(
+            lambda fn=fn: jax.block_until_ready(
+                fn(hot, warm, ens, qe, wj, tenants, thresholds)))
+        ratio = p50 / max(p50_single, 1e-9)
+        yield f"{tag}/{name}", us / Q, {
+            "n": n_total, "e": e, "threshold": ENS_THRESHOLD,
+            "us_per_query": us / Q, "p50_us": p50,
+            "recall_at_thr": recall, "false_hits": false_hits,
+            "best_single_recall": round(best_single, 4),
+            "p50_ratio_vs_single": round(ratio, 4),
+            "speedup_vs_sequential": round(
+                e * p50_single / max(p50, 1e-9), 4)}
+        if name == "fused":
+            assert recall >= best_single, \
+                f"{tag}: fused recall {recall} below the best single " \
+                f"embedder's exact recall {best_single}"
+            assert false_hits <= 2, \
+                f"{tag}: fused path leaks {false_hits} false hits on " \
+                "novel queries"
+            aname = f"{tag}/ensemble_speedup"
+            if jax.default_backend() == "cpu":
+                _assert_skipped(
+                    aname, "cpu backend: the <=1.6x claim is a "
+                    "bandwidth-amortization property of accelerator "
+                    "dispatch; host threads pay the E-panel flops "
+                    f"serially (measured ratio {ratio:.2f}x)")
+            else:
+                _assert_checked(aname)
+                assert ratio <= ENS_MAX_P50_RATIO, \
+                    f"{tag}: fused E={e} p50 {p50:.0f}us is " \
+                    f"{ratio:.2f}x the single-embedder p50 " \
+                    f"{p50_single:.0f}us (bound {ENS_MAX_P50_RATIO}x)"
+        else:
+            assert recall >= recalls["fused"] - 0.005, \
+                f"{tag}: int8 fused recall {recall} dropped > 0.5% " \
+                f"below fp32 {recalls['fused']}"
+
+    # bit-exact parity: the fused kernel (forced; interpret mode
+    # off-TPU) against the E-panel four-op oracle in ref.py
+    oracle = jax.jit(partial(tiers.ensemble_cascade_query, fused=False,
+                             **ens_kw))(
+        hot, warm, ens, qe, wj, tenants, thresholds)
+    kernel = jax.jit(partial(tiers.ensemble_cascade_query, fused=True,
+                             use_kernel=True, **ens_kw))(
+        hot, warm, ens, qe, wj, tenants, thresholds)
+    for field in tiers.EnsembleResult._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(oracle, field)),
+            np.asarray(getattr(kernel, field)),
+            err_msg=f"{tag}: fused kernel diverges from the E-panel "
+                    f"oracle on {field}")
+
+
+def _ens_stream_panels(rng, z, e, info, tight=0.03, loose=0.85):
+    """Panels of a latent batch (B, E, D): the informative embedder
+    sees a tight paraphrase of the latent, the rest mostly noise — the
+    regime where uniform weights drown the one good signal and the
+    learned mixture recovers it."""
+    return np.stack(
+        [_unit(z + (tight if j == info else loose)
+               * rng.standard_normal(z.shape).astype(np.float32))
+         for j in range(e)], 1).astype(np.float32)
+
+
+def _bench_ensemble_weights():
+    """Uniform vs learned per-tenant mixture weights on a drifting
+    stream (DESIGN.md §13).
+
+    Both services serve the same E-embedder stream in which only one
+    embedder separates duplicates from novel traffic; the stream
+    starts novel-heavy (the non-duplicate labeled events) and drifts
+    duplicate-heavy.  The uniform service averages the informative
+    panel down below the operating threshold, re-admitting every
+    near-duplicate; the learned service's ridge refit upweights the
+    informative embedder from the (per-embedder score, duplicate)
+    events and the duplicates start hitting.  Hard asserts: learned
+    duplicate admissions strictly below uniform, learned probe recall
+    strictly above uniform, the false-hit budget holds, and at least
+    one weight refit actually applied with the informative embedder
+    upweighted."""
+    e = max(_ensemble_e(), 2)
+    info = 1
+    results = {}
+    for mode in ("uniform", "learned"):
+        learned = mode == "learned"
+        rng = np.random.default_rng(SEED + 8)
+        intents = _unit(rng.standard_normal((48, DIM)).astype(np.float32))
+        svc = CacheService(
+            dim=DIM, hot_capacity=256, warm_capacity=1024, n_clusters=16,
+            bucket=128, n_probe=4, threshold=0.9, flush_size=64,
+            kmeans_iters=2, seed=SEED, embedders=e,
+            learned_admission=learned,
+            feedback_config=FeedbackConfig(
+                min_samples=48, min_class=8, refit_interval=32,
+                max_step=0.03, seed=SEED) if learned else None)
+        seen, dup_admits, admits, hits, lat = set(), 0, 0, 0, []
+        for b in range(24):
+            # drift: the first 3 batches cover every intent once
+            # (novel traffic), the rest are duplicate-heavy revisits
+            ids = (np.arange(b * 16, b * 16 + 16) % 48
+                   if b < 3 else rng.integers(0, 48, 16))
+            embs = _ens_stream_panels(rng, intents[ids], e, info)
+            t0 = time.perf_counter()
+            plan = svc.plan(CacheRequest.build(embs))
+            svc.commit(plan, [f"ans{i}" for i in ids])
+            svc.maintenance()
+            lat.append(time.perf_counter() - t0)
+            hits += int(plan.hit.sum())
+            for row in plan.miss_rows():
+                if not plan.admit[row]:
+                    continue
+                admits += 1
+                if int(ids[row]) in seen:
+                    dup_admits += 1
+                seen.add(int(ids[row]))
+        prng = np.random.default_rng(SEED + 18)
+        probe_pos = _ens_stream_panels(prng, intents, e, info)
+        probe_neg = _ens_stream_panels(
+            prng, _unit(prng.standard_normal((64, DIM)).astype(np.float32)),
+            e, info)
+        pos_plan = svc.plan(CacheRequest.build(probe_pos), coalesce=False)
+        neg_plan = svc.plan(CacheRequest.build(probe_neg), coalesce=False)
+        st = svc.feedback.state() if svc.feedback is not None else {}
+        wts = svc.policies.get_weights(0, e)
+        results[mode] = {
+            "queries": 24 * 16, "e": e, "hits": hits, "admitted": admits,
+            "dup_admissions": dup_admits,
+            "recall_probe": float(pos_plan.hit.mean()),
+            "false_hits_probe": int(neg_plan.hit.sum()),
+            "weight_refits": int(st.get("weight_refits_applied", 0)),
+            "weights_final": [round(float(x), 3) for x in wts],
+            "p50_us": float(np.percentile(np.asarray(lat) * 1e6, 50)),
+        }
+        yield f"tiered/ensemble/weights_{mode}", \
+            results[mode]["p50_us"], results[mode]
+
+    uni, lrn = results["uniform"], results["learned"]
+    # the learned-mixture rows exist to back these claims
+    assert lrn["dup_admissions"] < uni["dup_admissions"], \
+        f"learned weights did not reduce duplicate admissions " \
+        f"({lrn['dup_admissions']} vs {uni['dup_admissions']})"
+    assert lrn["recall_probe"] > uni["recall_probe"], \
+        f"learned weights did not lift probe recall " \
+        f"({lrn['recall_probe']} vs {uni['recall_probe']})"
+    assert lrn["false_hits_probe"] <= max(1, int(0.02 * 64)), \
+        f"learned weights leak false hits ({lrn['false_hits_probe']}/64)"
+    assert lrn["weight_refits"] >= 1, "no weight refit was ever applied"
+    assert lrn["weights_final"][info] > 1.0 / e, \
+        f"informative embedder not upweighted ({lrn['weights_final']})"
 
 
 def _service_on(keys, n_clusters, bucket, iters, background):
@@ -638,7 +972,10 @@ def _bench_cold_tier(n_total):
             "cold_rows": warm_lo if policy else 0,
             "us_per_query": us / Q, "p50_us": p50,
             "recall_at_thr": recall, "spurious_hits": spurious,
-            "hits": int(plan.hit.sum())}
+            "hits": int(plan.hit.sum()),
+            # under an ensemble service the cold tier is consulted on
+            # the pilot panel only (DESIGN.md §13)
+            "ensemble": "pilot"}
         if policy is not None:
             st = svc.stats_snapshot().tiers["cold"]
             consulted = max(st["cold_fetches"], 1)
@@ -957,6 +1294,9 @@ def _bench_embedder_refresh():
         tp, fp, fn = cnt["tp"], cnt["fp"], cnt["fn"]
         results[mode] = {
             "queries": 24 * 16, "tp": tp, "fp": fp, "fn": fn,
+            # the refresh cycle is mutually exclusive with ensemble
+            # serving (a panel publish is the A/B analogue, §13)
+            "ensemble": "off",
             "hit_precision": round(tp / max(tp + fp, 1), 4),
             "hit_recall": round(tp / max(tp + fn, 1), 4),
             "overlap_recall": float(probe_plan.hit.mean()),
@@ -1080,10 +1420,20 @@ def bench_tiered_cache():
     """Yields (name, us_per_call, derived_str) rows and, on completion,
     writes the raw rows to BENCH_cascade.json for the perf trajectory."""
     rows = []
+    _ASSERTS["checked"], _ASSERTS["skipped"] = [], []
     for n_total in _sizes():
         for name, us, derived in _bench_one_size(n_total):
             rows.append({"name": name, "us_per_call": us, **derived})
             yield name, us, fmt_derived(derived)
+    # fused multi-embedder ensemble: E-panel kernel pass + learned
+    # mixture weights (DESIGN.md §13)
+    for n_total in _ensemble_sizes():
+        for name, us, derived in _bench_ensemble(n_total):
+            rows.append({"name": name, "us_per_call": us, **derived})
+            yield name, us, fmt_derived(derived)
+    for name, us, derived in _bench_ensemble_weights():
+        rows.append({"name": name, "us_per_call": us, **derived})
+        yield name, us, fmt_derived(derived)
     # host-RAM cold tier: recall past device memory + overhead guard
     for n_total in _cold_sizes():
         for name, us, derived in _bench_cold_tier(n_total):
@@ -1113,7 +1463,11 @@ def bench_tiered_cache():
             "devices": len(jax.devices()),
             "sizes": _sizes(),
             "cold_sizes": _cold_sizes(),
+            "ensemble_sizes": _ensemble_sizes(),
+            "ensemble_e": _ensemble_e(),
             "q": Q, "dim": DIM, "threshold": THRESHOLD,
+            "checked_asserts": list(_ASSERTS["checked"]),
+            "skipped_asserts": list(_ASSERTS["skipped"]),
             "rows": rows,
         }, indent=1) + "\n")
         print(f"# wrote {len(rows)} rows to {path}", file=sys.stderr)
@@ -1135,6 +1489,8 @@ def main() -> None:
     if args.smoke:
         os.environ["BENCH_TIERED_SIZES"] = str(1 << 12)
         os.environ.setdefault("BENCH_COLD_SIZES", str(1 << 16))
+        os.environ.setdefault("BENCH_ENSEMBLE_SIZES", str(1 << 14))
+        os.environ.setdefault("BENCH_ENSEMBLE_E", "2")
     print("name,us_per_call,derived")
     for name, us, derived in bench_tiered_cache():
         print(f"{name},{us:.1f},{derived}", flush=True)

@@ -21,7 +21,10 @@ thresholds/margins online from observed duplicate rates (DESIGN.md
 serving feedback and hot-swap it with a versioned shadow re-embed
 (DESIGN.md §11), --cold-capacity N to back the warm ring with a
 host-RAM cold tier that catches demotions and serves them back through
-budgeted fetches + async promotion (DESIGN.md §12).  Requests flow
+budgeted fetches + async promotion (DESIGN.md §12).  For serving
+several embedders at once through the fused multi-embedder cascade
+with learned per-tenant mixture weights, see ``repro.launch.serve
+--ensemble E`` (DESIGN.md §13).  Requests flow
 through the typed plan/commit
 lifecycle (near-identical misses in a batch share one generation) and
 the summary prints the protocol's unified stats() snapshot.

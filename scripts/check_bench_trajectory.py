@@ -94,6 +94,18 @@ COLD_RATIO_ROW = "tiered/cold/p50_ratio"
 COLD_P50_RATIO_MAX = 2.0
 COLD_REQUIRED = ("warm_only", "cold_enabled", "promotion")
 
+# Fused multi-embedder ensemble rows (DESIGN.md §13): same rule.  The
+# latency claim (fused E-panel pass <= 1.6x the single-embedder p50,
+# i.e. speedup over the sequential E-pass path >= E/1.6) only holds on
+# accelerator backends; CPU runs must carry a structured skip in
+# ``skipped_asserts`` instead — verified below, so the claim can never
+# be silently absent.  --ensemble-speedup-min is stated at E=3 (3/1.6
+# = 1.875) and scaled linearly for other panel counts.
+ENS_PREFIX = "tiered/ensemble/"
+ENS_WEIGHT_ROWS = ("tiered/ensemble/weights_uniform",
+                   "tiered/ensemble/weights_learned")
+SHARDED_ASSERT_MIN_N = 1 << 18
+
 
 def load(path: str) -> Dict[str, object]:
     with open(path) as f:
@@ -106,14 +118,20 @@ def _rows(data: Dict[str, object]) -> Dict[str, Dict[str, object]]:
 
 _SIZE_RE = re.compile(r"^tiered/(\d+)k/")
 _COLD_SIZE_RE = re.compile(r"^tiered/cold/(\d+)k/")
+_ENS_SIZE_RE = re.compile(r"^tiered/ensemble/(\d+)k/")
 
 
-def _comparable(name: str, fresh_sizes, fresh_cold_sizes) -> bool:
+def _comparable(name: str, fresh_sizes, fresh_cold_sizes,
+                fresh_ens_sizes) -> bool:
     """A baseline row is only owed by the fresh run when the fresh
     sweep covers its size tier: a full-sweep baseline (16k/64k/256k
-    rows, 1M cold rows) must not make every --smoke run (4k + 64k
-    cold) fail on rows the smoke tier can never produce.
-    Size-independent rows (admission, …) are always owed."""
+    rows, 1M cold rows, 64k ensemble) must not make every --smoke run
+    (4k + 64k cold + 16k ensemble) fail on rows the smoke tier can
+    never produce.  Size-independent rows (admission, the ensemble
+    weights_* pair, …) are always owed."""
+    m = _ENS_SIZE_RE.match(name)
+    if m is not None:
+        return int(m.group(1)) * 1024 in set(fresh_ens_sizes or [])
     m = _COLD_SIZE_RE.match(name)
     if m is not None:
         return int(m.group(1)) * 1024 in set(fresh_cold_sizes or [])
@@ -127,8 +145,9 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
             recall_eps: float = 0.005,
             p50_tolerance: float = 5.0,
             stage_p50_tolerance: float = 3.0,
-            cold_hit_eps: float = 0.1) -> Tuple[List[str],
-                                                List[str]]:
+            cold_hit_eps: float = 0.1,
+            ensemble_speedup_min: float = 1.875) -> Tuple[List[str],
+                                                          List[str]]:
     """Returns (violations, notes).  Violations fail the gate; notes
     explain what was skipped or newly added."""
     violations: List[str] = []
@@ -146,11 +165,13 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
 
     fresh_sizes = fresh.get("sizes", [])
     fresh_cold_sizes = fresh.get("cold_sizes", [])
+    fresh_ens_sizes = fresh.get("ensemble_sizes", [])
     for name, base in base_rows.items():
-        if not _comparable(name, fresh_sizes, fresh_cold_sizes):
+        if not _comparable(name, fresh_sizes, fresh_cold_sizes,
+                           fresh_ens_sizes):
             notes.append(f"{name}: size tier not in the fresh sweep "
-                         f"(sizes {fresh_sizes}, cold {fresh_cold_sizes});"
-                         " skipped")
+                         f"(sizes {fresh_sizes}, cold {fresh_cold_sizes},"
+                         f" ensemble {fresh_ens_sizes}); skipped")
             continue
         row = fresh_rows.get(name)
         if row is None:
@@ -311,6 +332,103 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
             f"cold: serving p50 with the cold tier enabled is "
             f"{ratio['p50_ratio']:.2f}x the disabled p50 at a "
             f"warm-feasible size (bound {COLD_P50_RATIO_MAX}x)")
+
+    # fused-ensemble claims (DESIGN.md §13).  Latency first: the
+    # <=1.6x bound (speedup over sequential >= E/1.6) is re-checked
+    # from BOTH artifacts — the committed baseline and the fresh run —
+    # wherever that artifact came off a non-CPU backend, so a baseline
+    # update cannot smuggle in an over-budget measurement either.
+    for run_tag, run in (("baseline", baseline), ("fresh", fresh)):
+        rrows = base_rows if run_tag == "baseline" else fresh_rows
+        if run.get("backend") == "cpu":
+            continue          # must carry a structured skip; see below
+        for name, row in rrows.items():
+            if not (_ENS_SIZE_RE.match(name) and name.endswith("/fused")
+                    and "speedup_vs_sequential" in row):
+                continue
+            need = ensemble_speedup_min * row.get("e", 3) / 3.0
+            if row["speedup_vs_sequential"] < need:
+                violations.append(
+                    f"ensemble: {run_tag} {name} speedup over the "
+                    f"sequential E-pass path "
+                    f"{row['speedup_vs_sequential']:.3f} below "
+                    f"{need:.3f} (--ensemble-speedup-min "
+                    f"{ensemble_speedup_min} at E=3, scaled to "
+                    f"E={row.get('e', 3)})")
+
+    # the ensemble recall claim, re-checked from the fresh artifact:
+    # fused recall must not sit below the best single embedder's
+    for name, row in fresh_rows.items():
+        if _ENS_SIZE_RE.match(name) and name.endswith("/fused") \
+                and "best_single_recall" in row \
+                and row.get("recall_at_thr", 0.0) \
+                < row["best_single_recall"]:
+            violations.append(
+                f"ensemble: {name} fused recall "
+                f"{row.get('recall_at_thr')} below the best single "
+                f"embedder's {row['best_single_recall']}")
+
+    # learned-vs-uniform mixture weights: once either run carries the
+    # pair, the fresh run owes both rows and the learned side must
+    # strictly beat uniform on duplicate admissions and probe recall
+    if any(n in base_rows or n in fresh_rows for n in ENS_WEIGHT_ROWS):
+        missing = [n for n in ENS_WEIGHT_ROWS if n not in fresh_rows]
+        for n in missing:
+            violations.append(
+                f"ensemble: required row {n} missing from the fresh "
+                "run (weight-learning bench path dropped?)")
+        if not missing:
+            uni = fresh_rows[ENS_WEIGHT_ROWS[0]]
+            lrn = fresh_rows[ENS_WEIGHT_ROWS[1]]
+            if lrn.get("dup_admissions", 0) \
+                    >= uni.get("dup_admissions", 0):
+                violations.append(
+                    "ensemble: learned-weight dup_admissions "
+                    f"{lrn.get('dup_admissions')} not below uniform "
+                    f"{uni.get('dup_admissions')}")
+            if lrn.get("recall_probe", 0.0) \
+                    <= uni.get("recall_probe", 1.0):
+                violations.append(
+                    "ensemble: learned-weight recall_probe "
+                    f"{lrn.get('recall_probe')} not above uniform "
+                    f"{uni.get('recall_probe')}")
+            if lrn.get("weight_refits", 0) < 1:
+                violations.append(
+                    "ensemble: learned-weight row applied no weight "
+                    "refit")
+
+    # platform-conditional asserts: every one applicable to the fresh
+    # sweep must be visibly enforced (checked_asserts) or legally
+    # skipped (skipped_asserts; CPU only) — a name in neither list
+    # means the assert site itself was dropped.
+    checked = set(fresh.get("checked_asserts", []))
+    skipped = {s.get("name"): s.get("reason", "")
+               for s in fresh.get("skipped_asserts", [])
+               if isinstance(s, dict)}
+    backend = fresh.get("backend")
+    owed = []
+    if fresh.get("devices", 1) > 1:
+        owed += [f"tiered/{n // 1024}k/sharded_p50_beats_replicated"
+                 for n in fresh_sizes if n >= SHARDED_ASSERT_MIN_N]
+    owed += [f"tiered/ensemble/{n // 1024}k/ensemble_speedup"
+             for n in fresh_ens_sizes]
+    for name in owed:
+        if name in checked:
+            continue
+        if name in skipped:
+            if backend != "cpu":
+                violations.append(
+                    f"asserts: {name} skipped on backend "
+                    f"{backend!r} ({skipped[name]}) — only a cpu run "
+                    "may skip a platform-conditional assert")
+            else:
+                notes.append(f"{name}: skipped on cpu "
+                             f"({skipped[name]})")
+        else:
+            violations.append(
+                f"asserts: platform-conditional assert {name} neither "
+                "checked nor skipped in the fresh run (assert site "
+                "dropped?)")
     return violations, notes
 
 
@@ -331,13 +449,20 @@ def main(argv=None) -> int:
     ap.add_argument("--cold-hit-eps", type=float, default=0.1,
                     help="tolerated absolute cold_hit_rate drop vs the "
                          "baseline cold_enabled row")
+    ap.add_argument("--ensemble-speedup-min", type=float, default=1.875,
+                    help="min fused-ensemble speedup over the sequential "
+                         "E-pass path on accelerator runs, stated at E=3 "
+                         "(3/1.6 = 1.875 enforces the <=1.6x p50 bound) "
+                         "and scaled linearly to each row's E")
     args = ap.parse_args(argv)
 
     violations, notes = compare(load(args.baseline), load(args.fresh),
                                 recall_eps=args.recall_eps,
                                 p50_tolerance=args.p50_tolerance,
                                 stage_p50_tolerance=args.stage_p50_tolerance,
-                                cold_hit_eps=args.cold_hit_eps)
+                                cold_hit_eps=args.cold_hit_eps,
+                                ensemble_speedup_min=args
+                                .ensemble_speedup_min)
     for n in notes:
         print(f"note: {n}")
     if violations:

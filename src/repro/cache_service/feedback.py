@@ -77,6 +77,13 @@ class FeedbackConfig:
     max_margin: float = 0.25     # admission band width cap
     refit_log_cap: int = 512     # most recent decisions kept
     pair_reservoir: int = 2048   # pooled labeled text pairs kept (§11)
+    # §13 mixture-weight learning (fused multi-embedder ensemble): a
+    # closed-form ridge regression of the duplicate verdict on the
+    # per-embedder scores, under the same hysteresis discipline as the
+    # threshold refits (min_samples / min_class / refit_interval above
+    # apply to the ensemble reservoirs too)
+    weight_lambda: float = 0.05  # ridge regularizer (units of n events)
+    max_weight_step: float = 0.1  # max per-component weight move / refit
     seed: int = 0
 
 
@@ -95,6 +102,54 @@ class RefitReport:
     n_events: int = 0
     n_duplicates: int = 0
     false_hit_rate: float = 0.0  # observed, at the published threshold
+
+
+@dataclass(frozen=True)
+class WeightRefitReport:
+    """One mixture-weight refit decision for one tenant (§13)."""
+    tenant: int
+    applied: bool
+    reason: str                  # "ok" | "min-samples" | "class-starved"
+    #                            | "interval" | "degenerate" | "no-change"
+    old_weights: Tuple[float, ...]
+    new_weights: Tuple[float, ...]
+    old_threshold: float = 0.0
+    new_threshold: float = 0.0   # recalibrated against the fused score
+    step_clamped: bool = False   # max_weight_step truncated the move
+    n_events: int = 0
+    n_duplicates: int = 0
+
+
+class EnsembleReservoir:
+    """Fixed-capacity uniform sample of one tenant's
+    ``(per-embedder scores (E,), duplicate)`` events — algorithm R,
+    the §13 analogue of `TenantReservoir` with a score *vector* per
+    event (the plan's ``panel_scores`` row for a committed miss)."""
+
+    def __init__(self, capacity: int, n_embedders: int,
+                 rng: np.random.Generator):
+        self.capacity = int(capacity)
+        self.scores = np.zeros((self.capacity, int(n_embedders)),
+                               np.float32)
+        self.labels = np.zeros(self.capacity, np.int8)
+        self.fill = 0
+        self.seen = 0
+        self._rng = rng
+
+    def add(self, scores: np.ndarray, duplicate: bool) -> None:
+        self.seen += 1
+        if self.fill < self.capacity:
+            i = self.fill
+            self.fill += 1
+        else:
+            i = int(self._rng.integers(self.seen))
+            if i >= self.capacity:
+                return
+        self.scores[i] = np.clip(np.asarray(scores, np.float32), -1.0, 1.0)
+        self.labels[i] = 1 if duplicate else 0
+
+    def arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        return self.scores[:self.fill], self.labels[:self.fill]
 
 
 class TenantReservoir:
@@ -197,11 +252,16 @@ class FeedbackAccumulator:
         self._res: Dict[int, TenantReservoir] = {}
         self.pairs = PairReservoir(self.config.pair_reservoir, self._rng)
         self._seen_at_fit: Dict[int, int] = {}
+        self._ens: Dict[int, EnsembleReservoir] = {}        # §13
+        self._ens_seen_at_fit: Dict[int, int] = {}
         self.refit_log: List[RefitReport] = []
+        self.weight_refit_log: List[WeightRefitReport] = []
         self.counters = {
             "events": 0, "duplicate_events": 0, "wasted_admissions": 0,
             "plan_hits": 0, "plan_misses": 0, "pair_events": 0,
             "refits_applied": 0, "refits_skipped": 0,
+            "ensemble_events": 0, "weight_refits_applied": 0,
+            "weight_refits_skipped": 0,
         }
 
     # ------------------------------------------------------------------
@@ -236,6 +296,21 @@ class FeedbackAccumulator:
             if admitted:
                 self.counters["wasted_admissions"] += 1
 
+    def observe_ensemble(self, tenant: int, panel_scores: np.ndarray,
+                         duplicate: bool) -> None:
+        """One commit-time miss event on the ensemble path (§13): the
+        plan's unweighted per-embedder cosines of the row's best
+        same-tenant candidate, labeled with the duplicate verdict.
+        Rows with no candidate (all-(-1) panel scores) never reach here
+        — a constant row teaches the ridge nothing about mixing."""
+        t = int(tenant)
+        res = self._ens.get(t)
+        if res is None:
+            res = self._ens[t] = EnsembleReservoir(
+                self.config.reservoir, len(panel_scores), self._rng)
+        res.add(panel_scores, bool(duplicate))
+        self.counters["ensemble_events"] += 1
+
     def observe_hit_pair(self, query: str, neighbour: str) -> None:
         """A served hit is the strongest online duplicate evidence: the
         query scored above its tenant's threshold against the stored
@@ -257,6 +332,11 @@ class FeedbackAccumulator:
         fresh post-swap evidence."""
         self._res.clear()
         self._seen_at_fit.clear()
+        # ensemble reservoirs hold per-embedder cosines — every column
+        # lives in some embedder version's score space, so a panel swap
+        # invalidates them exactly like the scalar reservoirs
+        self._ens.clear()
+        self._ens_seen_at_fit.clear()
 
     # ------------------------------------------------------------------
     # refit scheduling
@@ -273,6 +353,21 @@ class FeedbackAccumulator:
         if res is None or res.fill < self.config.min_samples:
             return False
         seen_at = self._seen_at_fit.get(int(tenant), 0)
+        return res.seen - seen_at >= self.config.refit_interval \
+            or seen_at == 0
+
+    def ensemble_tenants(self) -> List[int]:
+        return sorted(self._ens)
+
+    def weight_refit_due(self, tenant: Optional[int] = None) -> bool:
+        """§13 scheduling twin of `refit_due` over the ensemble
+        reservoirs."""
+        if tenant is None:
+            return any(self.weight_refit_due(t) for t in self._ens)
+        res = self._ens.get(int(tenant))
+        if res is None or res.fill < self.config.min_samples:
+            return False
+        seen_at = self._ens_seen_at_fit.get(int(tenant), 0)
         return res.seen - seen_at >= self.config.refit_interval \
             or seen_at == 0
 
@@ -360,6 +455,105 @@ class FeedbackAccumulator:
         return replace(policy, threshold=new_thr,
                        admission_margin=new_margin, calibration=cal), rep
 
+    def fit_weights(self, tenant: int, weights: np.ndarray,
+                    policy: TenantPolicy
+                    ) -> Tuple[np.ndarray, TenantPolicy, WeightRefitReport]:
+        """Re-derive one tenant's mixture weights from its ensemble
+        reservoir (§13), then recalibrate its threshold against the
+        fused score the new weights produce.
+
+        The weight estimate is a closed-form ridge regression of the
+        duplicate verdict on the per-embedder scores —
+        ``w* = (SᵀS + λ·n·I)⁻¹ Sᵀ y`` — projected to the simplex
+        (non-negative, Σw = 1): an embedder whose score separates
+        duplicates from distincts for this tenant earns weight, one
+        that scores both alike is shrunk toward zero by the
+        regularizer.  Hysteresis mirrors `fit()` exactly: min-samples,
+        class balance, the refit interval, a per-component
+        ``max_weight_step`` clamp, and a no-change floor.
+
+        A weight move changes the score distribution every threshold
+        in §9 was calibrated against, so the same reservoir is
+        replayed under the *new* fused score and the tenant's
+        threshold follows it (``calibrate_for_false_hit_budget`` on
+        the fused scores, clamped by ``max_step`` like any refit —
+        arxiv 2606.19719's recalibrate-on-swap discipline applied to a
+        weight swap).  Returns (weights, policy, report); the caller
+        publishes both or neither.
+        """
+        t = int(tenant)
+        cfg = self.config
+        res = self._ens.get(t)
+        scores, labels = res.arrays() if res is not None \
+            else (np.zeros((0, len(weights)), np.float32),
+                  np.zeros(0, np.int8))
+        n_dup = int(labels.sum())
+        weights = np.asarray(weights, np.float64)
+
+        def skip(reason: str):
+            self.counters["weight_refits_skipped"] += 1
+            rep = WeightRefitReport(
+                tenant=t, applied=False, reason=reason,
+                old_weights=tuple(float(w) for w in weights),
+                new_weights=tuple(float(w) for w in weights),
+                old_threshold=policy.threshold,
+                new_threshold=policy.threshold,
+                n_events=len(scores), n_duplicates=n_dup)
+            self._log_weights(rep)
+            return np.asarray(weights, np.float32), policy, rep
+
+        if len(scores) < cfg.min_samples:
+            return skip("min-samples")
+        if not self.weight_refit_due(t):
+            return skip("interval")
+        self._ens_seen_at_fit[t] = res.seen
+        if n_dup < cfg.min_class or len(scores) - n_dup < cfg.min_class:
+            return skip("class-starved")
+
+        S = scores.astype(np.float64)
+        y = labels.astype(np.float64)
+        n, E = S.shape
+        lam = cfg.weight_lambda * n
+        try:
+            w_star = np.linalg.solve(S.T @ S + lam * np.eye(E), S.T @ y)
+        except np.linalg.LinAlgError:
+            return skip("degenerate")
+        w_star = np.maximum(w_star, 0.0)
+        if w_star.sum() <= 0.0:
+            # the verdict anti-correlates with every panel's score —
+            # no mixture of similarities explains it; keep serving
+            return skip("degenerate")
+        w_star = w_star / w_star.sum()
+        step = np.clip(w_star - weights, -cfg.max_weight_step,
+                       cfg.max_weight_step)
+        step_clamped = bool(np.any(np.abs(w_star - weights)
+                                   > cfg.max_weight_step + 1e-12))
+        new_w = np.maximum(weights + step, 0.0)
+        new_w = new_w / new_w.sum()
+
+        # fused-score threshold recalibration under the new weights
+        old_thr = float(policy.threshold)
+        fused = (S @ new_w).astype(np.float32)
+        cal = calibrate_for_false_hit_budget(fused, labels,
+                                             cfg.max_false_hit_rate)
+        new_thr = float(np.clip(cal.threshold, old_thr - cfg.max_step,
+                                old_thr + cfg.max_step))
+
+        if float(np.abs(new_w - weights).max()) < 1e-6 \
+                and abs(new_thr - old_thr) < 1e-6:
+            return skip("no-change")
+        self.counters["weight_refits_applied"] += 1
+        rep = WeightRefitReport(
+            tenant=t, applied=True, reason="ok",
+            old_weights=tuple(float(w) for w in weights),
+            new_weights=tuple(float(w) for w in new_w),
+            old_threshold=old_thr, new_threshold=new_thr,
+            step_clamped=step_clamped, n_events=n, n_duplicates=n_dup)
+        self._log_weights(rep)
+        new_policy = policy.with_threshold(new_thr, calibration=cal) \
+            if abs(new_thr - old_thr) >= 1e-6 else policy
+        return new_w.astype(np.float32), new_policy, rep
+
     def _log(self, rep: RefitReport) -> None:
         """Bounded decision log: a tenant stuck in a skip reason (e.g.
         class-starved) is re-examined every maintenance tick, so the
@@ -367,6 +561,11 @@ class FeedbackAccumulator:
         self.refit_log.append(rep)
         if len(self.refit_log) > self.config.refit_log_cap:
             del self.refit_log[:-self.config.refit_log_cap]
+
+    def _log_weights(self, rep: WeightRefitReport) -> None:
+        self.weight_refit_log.append(rep)
+        if len(self.weight_refit_log) > self.config.refit_log_cap:
+            del self.weight_refit_log[:-self.config.refit_log_cap]
 
     # ------------------------------------------------------------------
     def state(self) -> Dict[str, object]:
@@ -380,6 +579,11 @@ class FeedbackAccumulator:
             "feedback_tenants": len(self._res),
             "pair_events": self.counters["pair_events"],
             "pairs_held": len(self.pairs),
+            "ensemble_events": self.counters["ensemble_events"],
+            "weight_refits_applied":
+                self.counters["weight_refits_applied"],
+            "weight_refits_skipped":
+                self.counters["weight_refits_skipped"],
         }
 
 

@@ -163,11 +163,21 @@ class ColdRoutingPolicy:
 
 
 class PolicyTable:
-    """tenant id -> TenantPolicy, with a default for unknown tenants."""
+    """tenant id -> TenantPolicy, with a default for unknown tenants.
+
+    Under a fused multi-embedder ensemble (DESIGN.md §13) the table
+    also owns per-tenant **mixture weights**: the (E,) convex weights
+    the cascade fuses the per-embedder cosines with.  Like thresholds,
+    they resolve to a per-query (Q, E) array at lookup time (uniform
+    1/E for tenants with no learned weights) and are re-learned at
+    refit time from the feedback stream (`refit_weights`).
+    """
 
     def __init__(self, default: TenantPolicy):
         self.default = default
         self._by_tenant: Dict[int, TenantPolicy] = {}
+        self._weights: Dict[int, np.ndarray] = {}        # §13
+        self._default_weights: Optional[np.ndarray] = None
 
     def get(self, tenant: int) -> TenantPolicy:
         return self._by_tenant.get(int(tenant), self.default)
@@ -215,6 +225,67 @@ class PolicyTable:
                 self.set(tenant, policy)
             reports.append(report)
         return reports
+
+    # ----- §13 ensemble mixture weights --------------------------------
+    def set_default_weights(self, weights) -> None:
+        """Default mixture for tenants with no learned weights
+        (normalized to the simplex; None reverts to uniform 1/E)."""
+        if weights is None:
+            self._default_weights = None
+            return
+        w = np.asarray(weights, np.float32)
+        if w.ndim != 1 or np.any(w < 0) or w.sum() <= 0:
+            raise ValueError(f"ensemble weights must be a non-negative "
+                             f"1-D vector with positive sum, got {w!r}")
+        self._default_weights = w / w.sum()
+
+    def set_weights(self, tenant: int, weights) -> None:
+        w = np.asarray(weights, np.float32)
+        if np.any(w < 0) or w.sum() <= 0:
+            raise ValueError("tenant mixture weights must be "
+                             "non-negative with positive sum")
+        self._weights[int(tenant)] = w / w.sum()
+
+    def get_weights(self, tenant: int, n_embedders: int) -> np.ndarray:
+        w = self._weights.get(int(tenant), self._default_weights)
+        if w is None:
+            return np.full(n_embedders, 1.0 / n_embedders, np.float32)
+        if len(w) != n_embedders:
+            raise ValueError(f"weights of len {len(w)} vs "
+                             f"{n_embedders} embedders")
+        return w
+
+    def weights_for(self, tenants: np.ndarray,
+                    n_embedders: int) -> np.ndarray:
+        """Per-query (Q, E) mixture weights — the vectorized resolution
+        the cascade consumes, mirroring `thresholds_for`."""
+        return np.stack([self.get_weights(t, n_embedders)
+                         for t in tenants])
+
+    def refit_weights(self, feedback, n_embedders: int) -> List[object]:
+        """Drive `feedback.fit_weights` over every tenant whose
+        ensemble reservoir says a refit is due — the §13 twin of
+        `refit`.  An applied fit publishes the tenant's weights AND the
+        threshold recalibrated against the new fused score, atomically
+        from the table's point of view.  Returns the
+        ``WeightRefitReport`` list."""
+        reports = []
+        for tenant in feedback.ensemble_tenants():
+            if not feedback.weight_refit_due(tenant):
+                continue
+            w, policy, report = feedback.fit_weights(
+                tenant, self.get_weights(tenant, n_embedders),
+                self.get(tenant))
+            if report.applied:
+                self._weights[int(tenant)] = np.asarray(w, np.float32)
+                self.set(tenant, policy)
+            reports.append(report)
+        return reports
+
+    def weights_state(self) -> Dict[int, List[float]]:
+        """Published per-tenant mixtures (the §13 stats view)."""
+        return {t: [float(x) for x in w]
+                for t, w in sorted(self._weights.items())}
 
     def learned_state(self) -> Dict[int, Dict[str, float]]:
         """Per-tenant operating points currently published (the

@@ -68,6 +68,11 @@ class CacheCapabilities:
     learned_admission: bool = False  # maintenance() refits policies (§9)
     learned_embedder: bool = False   # maintenance() refreshes embedder (§11)
     cold_tier: bool = False          # host-RAM cold tier below warm (§12)
+    ensemble: int = 0                # embedder count of the fused multi-
+    #                                  embedder cascade (§13); 0 = single
+    #                                  embedder.  When > 0, requests carry
+    #                                  (B, E, D) embeddings and plans carry
+    #                                  per-embedder ``panel_scores``.
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +89,9 @@ class CacheRequest:
     re-embedded under a new embedder version; without texts the entry
     is still served but pinned to the embedding it was admitted with.
     """
-    embeddings: np.ndarray           # (B, D) float32, unit-norm rows
+    embeddings: np.ndarray           # (B, D) float32, unit-norm rows;
+    #                                  (B, E, D) under an ensemble backend
+    #                                  (§13), one row per embedder
     tenants: np.ndarray              # (B,)  int32 tenant per row
     trace_id: int = 0
     texts: Optional[Tuple[str, ...]] = None   # raw query strings (§11)
@@ -147,6 +154,11 @@ class CachePlan:
     top_value_ids: Optional[np.ndarray] = None  # (B,) int64, -1 = none
     plan_wall_s: float = 0.0         # host wall time of plan() (§10)
     embed_version: int = 0           # embedder version at plan time (§11)
+    # (B, E) unweighted per-embedder cosines of each row's best
+    # same-tenant candidate under the fused ensemble (§13); None off the
+    # ensemble path.  Commit feeds them — with the duplicate verdict —
+    # to the per-tenant mixture-weight learner.
+    panel_scores: Optional[np.ndarray] = None
 
     def miss_rows(self) -> np.ndarray:
         return np.nonzero(~self.hit)[0]

@@ -94,11 +94,14 @@ class ServiceStats:
 class LegacyStatsView(dict):
     """The pre-§10 flat ``stats()`` mapping, kept for one release.
 
-    Reading a key through this view warns once per process; migrate to
-    ``CacheService.stats_snapshot()`` (typed, schema-stable).  Plain
-    dict-copy operations (``{**stats}``, ``dict(stats)``) do not warn —
-    merging the mapping forward is exactly what the serving engine
-    does and is not deprecated.
+    **Removal: v2.0** — ``stats()`` and this view go away together;
+    migrate to ``CacheService.stats_snapshot()`` (typed,
+    schema-stable).  Reading a key through this view warns exactly once
+    per process (the flag is class-level, so a fleet of services emits
+    one warning, not one per instance or call).  Plain dict-copy
+    operations (``{**stats}``, ``dict(stats)``) do not warn — merging
+    the mapping forward is exactly what the serving engine does and is
+    not deprecated.
     """
     _warned = False
 
@@ -107,8 +110,9 @@ class LegacyStatsView(dict):
         if not cls._warned:
             cls._warned = True
             warnings.warn(
-                "CacheService.stats() flat keys are deprecated; use "
-                "stats_snapshot() (see DESIGN.md §10.1 for the schema)",
+                "CacheService.stats() flat keys are deprecated and will "
+                "be removed in v2.0; use stats_snapshot() (see "
+                "DESIGN.md §10.1 for the schema)",
                 DeprecationWarning, stacklevel=4)
 
     def __getitem__(self, key):
@@ -141,6 +145,7 @@ class CacheService:
                  cold_capacity: int = 0,
                  cold_policy: Optional[ColdRoutingPolicy] = None,
                  warm_block: Optional[int] = None,
+                 embedders=None, ensemble_weights=None,
                  telemetry: Optional[Telemetry] = None):
         """Build the tiered service.
 
@@ -228,9 +233,51 @@ class CacheService:
         in blocks of that many rows (DESIGN.md §12), lifting the
         single-block VMEM ceiling on warm capacity; None keeps the
         whole-panel residency.  Results are bit-identical either way.
+
+        ``embedders`` turns on the fused multi-embedder ensemble
+        (DESIGN.md §13): an int E (or a sequence of E embedder handles,
+        retained for the caller's convenience — the service itself only
+        ever sees embeddings).  Requests then carry (B, E, D)
+        embeddings — one row per embedder, row 0 the *pilot* that IVF
+        routing, the cold tier and the §11 machinery run on — and one
+        cascade pass scores all E key panels, fusing them with
+        per-tenant mixture weights (``ensemble_weights`` seeds the
+        default mixture; uniform 1/E otherwise).  With
+        ``learned_admission`` the weights are re-learned per tenant at
+        refit time from the feedback stream, and each refit
+        recalibrates the tenant's threshold against the fused score.
+        A candidate embedder hot-swaps through ``publish_panel`` — the
+        ensemble generalization of the §11 publish (serving panel e at
+        its mixture weight IS A/B shadow serving).  ``learned_embedder``
+        and ``embedders`` are mutually exclusive: the §11 refresh loop
+        retrains the single pilot embedder, while ensemble candidates
+        publish per panel.
         """
         sharded = mesh is not None
         shards = int(mesh.shape[shard_axis]) if sharded else 1
+        if embedders is None:
+            self.embedders: Optional[Tuple] = None
+            n_embedders = 0
+        elif isinstance(embedders, int):
+            self.embedders = None
+            n_embedders = embedders
+        else:
+            self.embedders = tuple(embedders)
+            n_embedders = len(self.embedders)
+        if n_embedders < 0 or n_embedders == 0 and embedders is not None:
+            raise ValueError(f"embedders must name at least one "
+                             f"embedder, got {embedders!r}")
+        self.n_embedders = n_embedders
+        if n_embedders and (learned_embedder or refresh_policy is not None
+                            or embedder_trainer is not None):
+            raise ValueError(
+                "embedders= and learned_embedder= are mutually "
+                "exclusive: the §11 refresh retrains the single pilot "
+                "embedder in place; under an ensemble a candidate "
+                "embedder is A/B-published per panel via "
+                "publish_panel() instead (DESIGN.md §13)")
+        if ensemble_weights is not None and not n_embedders:
+            raise ValueError("ensemble_weights without embedders")
         if cold_policy is not None and cold_capacity <= 0:
             cold_capacity = 4 * warm_capacity
         if cold_capacity > 0 and sharded:
@@ -297,6 +344,16 @@ class CacheService:
             self.warm = tiers.init_warm(warm_capacity, dim, n_clusters,
                                         bucket)
         self.policies = PolicyTable(TenantPolicy(threshold, admission_margin))
+        # §13: E row-aligned key panels over the shared tiers; panel 0
+        # (the pilot) duplicates the base keys, so every single-embedder
+        # code path keeps reading the state it always did
+        self.ens: Optional[tiers.EnsembleState] = None
+        if n_embedders:
+            ens = tiers.init_ensemble(n_embedders, self.hot, self.warm)
+            self.ens = tiers.place_ensemble_sharded(ens, mesh, shard_axis) \
+                if sharded else ens
+            if ensemble_weights is not None:
+                self.policies.set_default_weights(ensemble_weights)
         self.learned_admission = bool(learned_admission
                                       or feedback_config is not None)
         learned_embedder = bool(learned_embedder
@@ -439,6 +496,15 @@ class CacheService:
                                             iters=kmeans_iters, seed=seed))
         self._evict_tenant = jax.jit(tiers.evict_tenant)
         self._publish_keys = jax.jit(tiers.publish_reembedded_keys)
+        if self.ens is not None:
+            self._ens_insert = jax.jit(tiers.ensemble_hot_insert_batch)
+            self._coldest = jax.jit(partial(tiers.coldest_slots,
+                                            m=flush_size))
+            self._ens_append = jax.jit(
+                tiers.ensemble_warm_append_sharded if sharded
+                else tiers.ensemble_warm_append)
+            self._ens_publish_panel = jax.jit(tiers.publish_panel,
+                                              static_argnames=("e",))
 
     def set_fused(self, fused: bool) -> None:
         """Select the cascade execution path (four-op vs fused kernel);
@@ -450,6 +516,13 @@ class CacheService:
             quantized=self.warm_dtype == "int8",
             mesh=self._mesh, axis=self._shard_axis,
             warm_block_n=self.warm_block))
+        if getattr(self, "ens", None) is not None:
+            self._ens_lookup = jax.jit(partial(
+                tiers.ensemble_cascade_query, k=self.topk,
+                n_probe=self._n_probe, tail=self._tail, fused=self.fused,
+                quantized=self.warm_dtype == "int8",
+                mesh=self._mesh, axis=self._shard_axis,
+                warm_block_n=self.warm_block))
 
     # ------------------------------------------------------------------
     # tenant policy surface
@@ -465,6 +538,51 @@ class CacheService:
         return self.policies.calibrate(tenant, scores, labels,
                                        max_false_hit_rate)
 
+    def set_tenant_weights(self, tenant: int, weights) -> None:
+        """Pin one tenant's ensemble mixture weights (§13) — normalized
+        to the simplex; learned refits may still move them later."""
+        if self.ens is None:
+            raise ValueError("set_tenant_weights needs embedders=")
+        self.policies.set_weights(tenant, weights)
+
+    def publish_panel(self, e: int, hot_keys, warm_keys) -> None:
+        """Versioned publish of ONE embedder's key panels (DESIGN.md
+        §13) — the ensemble generalization of the §11 re-embed publish.
+
+        ``hot_keys`` is the (Nh, D) full-capacity hot panel under the
+        candidate embedder, ``warm_keys`` the (Nw, D) warm panel
+        ((S, Nw_local, D) stacked when sharded), built host-side
+        exactly like `_finish_refresh` builds them: valid rows
+        re-embedded, everything else carrying its current key.  The
+        swap is atomic between lookups; per-slot metadata and the
+        pilot-built IVF are untouched.  Serving panel ``e`` at mixture
+        weight w IS A/B shadow serving of the candidate embedder at
+        traffic share w — ramp w per tenant (or let the §9 weight
+        learner earn it) to graduate the candidate.  Publishing the
+        pilot (e=0) also swaps the base tiers' keys, since panel 0
+        duplicates them.  The embedder version bumps either way, so
+        plans embedded under the old panel set are rejected at commit
+        (§11 staleness discipline).
+        """
+        if self.ens is None:
+            raise ValueError("publish_panel needs embedders=")
+        if not 0 <= int(e) < self.n_embedders:
+            raise ValueError(f"panel {e} out of range "
+                             f"[0, {self.n_embedders})")
+        hk = jnp.asarray(hot_keys)
+        wk = jnp.asarray(warm_keys)
+        self.ens = self._ens_publish_panel(self.ens, int(e), hk, wk)
+        if int(e) == 0:
+            self.hot, self.warm = self._publish_keys(self.hot, self.warm,
+                                                     hk, wk)
+            if self._mesh is not None:
+                self.warm = tiers.place_warm_sharded(
+                    self.warm, self._mesh, self._shard_axis)
+        if self._mesh is not None:
+            self.ens = tiers.place_ensemble_sharded(
+                self.ens, self._mesh, self._shard_axis)
+        self._embed_version += 1
+
     # ------------------------------------------------------------------
     # CacheBackend protocol: plan / commit / maintenance / stats
     # ------------------------------------------------------------------
@@ -477,7 +595,8 @@ class CacheService:
                                  warm_dtype=self.warm_dtype,
                                  learned_admission=self.learned_admission,
                                  learned_embedder=self.trainer is not None,
-                                 cold_tier=self.cold is not None)
+                                 cold_tier=self.cold is not None,
+                                 ensemble=self.n_embedders)
 
     def plan(self, request: CacheRequest, *,
              coalesce: bool = True) -> CachePlan:
@@ -486,11 +605,29 @@ class CacheService:
         (``coalesce=False`` skips the O(misses²) grouping when the
         caller won't use it — the legacy lookup shim does)."""
         t0 = time.perf_counter()
-        embs = jnp.asarray(request.embeddings)
         qt = request.tenants
         thr = self.policies.thresholds_for(qt)
-        res = self._lookup(self.hot, self.warm, embs, jnp.asarray(qt),
-                           jnp.asarray(thr))
+        panel_scores = None
+        if self.ens is not None:
+            # §13: one fused pass over all E panels; the pilot slice
+            # (row 0) feeds every single-embedder consumer downstream
+            # (cold routing, miss coalescing)
+            emb_np = np.asarray(request.embeddings)
+            if emb_np.ndim != 3 or emb_np.shape[1] != self.n_embedders:
+                raise ValueError(
+                    f"ensemble backend expects (B, {self.n_embedders}, D)"
+                    f" embeddings, got {emb_np.shape}")
+            pilot = emb_np[:, 0]
+            weights = self.policies.weights_for(qt, self.n_embedders)
+            res = self._ens_lookup(self.hot, self.warm, self.ens,
+                                   jnp.asarray(emb_np),
+                                   jnp.asarray(weights), jnp.asarray(qt),
+                                   jnp.asarray(thr))
+            panel_scores = np.asarray(res.panel_scores)
+        else:
+            pilot = np.asarray(request.embeddings)
+            res = self._lookup(self.hot, self.warm, jnp.asarray(pilot),
+                               jnp.asarray(qt), jnp.asarray(thr))
         self.hot = self._touch(self.hot, res.hot_slots, res.hot_hit)
         hit = np.asarray(res.hit)
         scores = np.asarray(res.scores[:, 0])
@@ -508,7 +645,7 @@ class CacheService:
             # *before* the pre-decision/feedback/coalescing below, so
             # a cold hit is a hit everywhere downstream.
             tc = time.perf_counter()
-            qn = np.asarray(embs, np.float32)
+            qn = np.asarray(pilot, np.float32)
             qn = qn / np.maximum(
                 np.linalg.norm(qn, axis=1, keepdims=True), 1e-9)
             cf = self.cold.lookup(qn, np.asarray(qt),
@@ -532,7 +669,7 @@ class CacheService:
             self.feedback.observe_plan(hit)
         if self.telemetry.health is not None:
             self.telemetry.health.observe_plan(qt, hit)
-        leader = coalesce_misses(request.embeddings, hit, qt, thr) \
+        leader = coalesce_misses(pilot, hit, qt, thr) \
             if coalesce else ungrouped_misses(hit)
         wall = time.perf_counter() - t0
         self._stage_h.observe(wall, stage="plan", tenant=tenant_label(qt))
@@ -543,7 +680,8 @@ class CacheService:
             epoch=self._epoch,
             margins=np.asarray(thr, np.float32) - scores,
             top_value_ids=vids, plan_wall_s=wall,
-            embed_version=self._embed_version)
+            embed_version=self._embed_version,
+            panel_scores=panel_scores)
 
     def commit(self, plan: CachePlan,
                responses: Sequence[Optional[str]]) -> CommitReceipt:
@@ -601,10 +739,19 @@ class CacheService:
         evicted_before = self._n_evictions
         demoted_cold_before = self._n_demoted_cold
         if len(rows):
-            self.hot, evicted = self._insert(
-                self.hot, jnp.asarray(plan.request.embeddings[rows]),
-                jnp.asarray(vids, dtype=jnp.int32),
-                jnp.asarray(plan.request.tenants[rows]))
+            if self.ens is not None:
+                # (B, E, D) rows: the base insert takes the pilot slice,
+                # the mirrored panels take the same slot (§13)
+                self.hot, self.ens, evicted = self._ens_insert(
+                    self.hot, self.ens,
+                    jnp.asarray(plan.request.embeddings[rows]),
+                    jnp.asarray(vids, dtype=jnp.int32),
+                    jnp.asarray(plan.request.tenants[rows]))
+            else:
+                self.hot, evicted = self._insert(
+                    self.hot, jnp.asarray(plan.request.embeddings[rows]),
+                    jnp.asarray(vids, dtype=jnp.int32),
+                    jnp.asarray(plan.request.tenants[rows]))
             self._gc(evicted)
             self._maybe_flush()
         wall = time.perf_counter() - t0
@@ -670,6 +817,27 @@ class CacheService:
             refits_applied = sum(r.applied for r in reports)
             for rep in reports:
                 record_refit(self.telemetry.registry, rep)
+        if self.feedback is not None and self.ens is not None:
+            # §13: per-tenant mixture-weight refits ride the same idle
+            # tick; an applied fit republishes the tenant's weights and
+            # its fused-score-recalibrated threshold together
+            wreps = self.policies.refit_weights(self.feedback,
+                                                self.n_embedders)
+            refits_checked += len(wreps)
+            refits_applied += sum(r.applied for r in wreps)
+            wc = self.telemetry.registry.counter(
+                "ensemble_weight_refits_total",
+                "per-tenant mixture-weight refit decisions by outcome "
+                "(§13)", labels=("tenant", "outcome"))
+            wg = self.telemetry.registry.gauge(
+                "ensemble_weight", "published per-tenant mixture weight",
+                labels=("tenant", "embedder"))
+            for rep in wreps:
+                wc.inc(1, tenant=rep.tenant,
+                       outcome="applied" if rep.applied else rep.reason)
+                if rep.applied:
+                    for e, w in enumerate(rep.new_weights):
+                        wg.set(float(w), tenant=rep.tenant, embedder=e)
         cold_promoted = 0
         cold_route_rebuilt = False
         if self.cold is not None:
@@ -762,6 +930,8 @@ class CacheService:
             "warm_shards": self.warm_shards,
             "warm_dtype": self.warm_dtype,
         }
+        if self.ens is not None:
+            tiers_d["ensemble"] = self.n_embedders
         if self.cold is not None:
             tiers_d["cold"] = self.cold.stats()
         rebuild = {
@@ -776,6 +946,8 @@ class CacheService:
         if self.feedback is not None:
             learning = dict(self.feedback.state())
             learning["learned_policies"] = self.policies.learned_state()
+            if self.ens is not None:
+                learning["ensemble_weights"] = self.policies.weights_state()
         refresh = None
         if self.trainer is not None:
             refresh = {
@@ -932,6 +1104,13 @@ class CacheService:
             self.feedback.observe(int(tenants[row]), score, dup,
                                   bool(admit[pos]), text=q_text,
                                   neighbour_text=neigh_text)
+            if self.ens is not None and plan.panel_scores is not None \
+                    and vid >= 0:
+                # §13: the same verdict, labeled with the candidate's
+                # unweighted per-embedder cosines — the mixture-weight
+                # learner's training event
+                self.feedback.observe_ensemble(
+                    int(tenants[row]), plan.panel_scores[row], dup)
             if self.telemetry.health is not None:
                 self.telemetry.health.observe_admission(
                     int(tenants[row]), dup, bool(admit[pos]))
@@ -1198,7 +1377,8 @@ class CacheService:
         self._rebuild_total_s += self._last_rebuild_s
         self._c_rebuilds.inc()
 
-    def _capture_and_append(self, dem: tiers.Demoted) -> None:
+    def _capture_and_append(self, dem: tiers.Demoted,
+                            panel_keys=None) -> None:
         """Land a batch on the warm ring; route its overwrites.
 
         Without a cold tier a ring overwrite is the end of the line:
@@ -1210,9 +1390,24 @@ class CacheService:
         int8 panel rows are captured into the cold ring *before* the
         jitted append lands, and only the cold ring's own overwrites —
         the hierarchy's final drops — are GC'd.
+
+        Under an ensemble (§13) ``panel_keys`` carries the batch's
+        (E, m, D) stacked panel rows; the mirrored append replays the
+        base ring arithmetic from the pre-append state, so the panels
+        stay row-aligned.  ``None`` (the cold-promotion path, which
+        only retains pilot keys) backfills every panel with the pilot
+        row — exact for the pilot, a well-formed stand-in for the rest
+        until the row is re-admitted.
         """
+        warm_pre = self.warm
+        if self.ens is not None and panel_keys is None:
+            panel_keys = jnp.broadcast_to(
+                dem.keys[None], (self.n_embedders,) + dem.keys.shape)
         if self.cold is None:
             self.warm, evicted = self._append(self.warm, dem)
+            if self.ens is not None:
+                self.ens = self._ens_append(self.ens, warm_pre, dem,
+                                            panel_keys)
             self._c_ev_dropped.inc(self._gc(evicted))
             return
         n = int(np.asarray(dem.mask).sum())
@@ -1233,6 +1428,9 @@ class CacheService:
         # the append's own eviction report covers exactly the captured
         # rows — their strings stay alive behind the cold copies
         self.warm, _ = self._append(self.warm, dem)
+        if self.ens is not None:
+            self.ens = self._ens_append(self.ens, warm_pre, dem,
+                                        panel_keys)
 
     def _promote_into_warm(self, prom) -> None:
         """Append a drained cold `Promotion` to the warm ring through
@@ -1258,8 +1456,15 @@ class CacheService:
             self._capture_and_append(dem)
 
     def _do_flush(self, rebuild: bool) -> None:
+        pk = None
+        if self.ens is not None:
+            # gather the demoting rows' stacked panel keys before the
+            # demote flips their valid bits — `coldest_slots` is the
+            # exact selection `demote_coldest` pops (§13)
+            slots = self._coldest(self.hot)
+            pk = self.ens.hot_keys[:, slots]
         self.hot, dem = self._demote(self.hot)
-        self._capture_and_append(dem)
+        self._capture_and_append(dem, pk)
         self._c_demotions.inc(int(np.asarray(dem.mask).sum()))
         # the tail window only covers the last `tail` ring writes; a
         # rebuild is forced before the unindexed backlog outgrows it,

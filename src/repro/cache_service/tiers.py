@@ -193,6 +193,18 @@ def hot_query(state: HotState, q: jax.Array, q_tenants: jax.Array,
     return s, slots, vids
 
 
+def coldest_slots(state: HotState, m: int) -> jax.Array:
+    """The m coldest hot slots in demotion order — the exact selection
+    `demote_coldest` pops, exposed so the ensemble flush can gather the
+    same rows' panel keys before the demote (DESIGN.md §13)."""
+    big = jnp.iinfo(jnp.int32).max
+    # int32 throughout: a float32 cast would blur LRU ordering once the
+    # clock passes 2^24; invalid rows sort last via the sentinel
+    lu = jnp.where(state.valid, state.last_used, big)
+    ins = jnp.where(state.valid, state.inserted_at, big)
+    return jnp.lexsort((ins, lu))[:m]                             # coldest
+
+
 def demote_coldest(state: HotState, m: int) -> Tuple[HotState, Demoted]:
     """Pop the m least-recently-used valid rows for warm-tier flush.
 
@@ -205,12 +217,7 @@ def demote_coldest(state: HotState, m: int) -> Tuple[HotState, Demoted]:
     arbitrary.  Returned ``mask`` is False on padding rows (fewer than
     m valid).
     """
-    big = jnp.iinfo(jnp.int32).max
-    # int32 throughout: a float32 cast would blur LRU ordering once the
-    # clock passes 2^24; invalid rows sort last via the sentinel
-    lu = jnp.where(state.valid, state.last_used, big)
-    ins = jnp.where(state.valid, state.inserted_at, big)
-    idx = jnp.lexsort((ins, lu))[:m]                              # coldest
+    idx = coldest_slots(state, m)
     mask = state.valid[idx]
     new_valid = state.valid.at[idx].set(
         jnp.where(mask, False, state.valid[idx]))
@@ -693,3 +700,410 @@ def evict_tenant(hot: HotState, warm: WarmState, tenant: jax.Array
     w_ev = jnp.where(w_kill, warm.value_ids, -1)
     return (hot._replace(valid=hot.valid & ~h_kill),
             warm._replace(valid=warm.valid & ~w_kill), h_ev, w_ev)
+
+
+# ---------------------------------------------------------------------------
+# multi-embedder ensemble: E stacked key panels over the shared tiers
+# ---------------------------------------------------------------------------
+
+class EnsembleState(NamedTuple):
+    """E row-aligned key panels over the base tiers (DESIGN.md §13).
+
+    The base ``HotState``/``WarmState`` keep every per-slot column
+    (valid/tenant/value-id/write-seq), the ring counters and the IVF;
+    panel 0 (the *pilot*) duplicates the base key panels so routing,
+    rebuilds and the §11 refresh machinery stay single-embedder.  The
+    extra panels are the same rows under the other embedders — row
+    alignment is maintained by mirroring every slot decision of the
+    base mutation (`ensemble_hot_insert_batch`, `ensemble_warm_append`)
+    rather than by permuting, which `warm_rebuild` never does.  In the
+    sharded form the warm leaves gain a *leading* shard axis
+    ((S, E, cap, D) keys — detected via ``warm_keys.ndim == 4``) while
+    ``hot_keys`` stays replicated, mirroring the base tiers.
+    """
+    hot_keys: jax.Array      # (E, Nh, D) float32 unit-norm
+    warm_keys: jax.Array     # (E, Nw, D) float32 unit-norm
+    warm_keys_q: jax.Array   # (E, Nw, D) int8 per-row symmetric quant
+    warm_scales: jax.Array   # (E, Nw) float32 dequant scales
+
+
+class EnsembleResult(NamedTuple):
+    """`CascadeResult` plus the top-1 candidate's per-embedder cosines
+    (``panel_scores``, -1.0 on rows with no candidate) — the feedback
+    loop's training signal for per-tenant mixture weights."""
+    scores: jax.Array        # (Q, k) fused best-of-tiers, desc
+    value_ids: jax.Array     # (Q, k) -1 where no candidate
+    hot_slots: jax.Array     # (Q,)
+    hot_hit: jax.Array       # (Q,)
+    hit: jax.Array           # (Q,)
+    panel_scores: jax.Array  # (Q, E) unweighted per-panel cosines
+
+
+def init_ensemble(n_embedders: int, hot: HotState,
+                  warm: WarmState) -> EnsembleState:
+    """Broadcast the base key panels into E aligned copies (a fresh
+    service starts all-zero; a warm start seeds every panel with the
+    pilot keys until each embedder's `publish_panel` lands)."""
+    E = n_embedders
+    hk = jnp.broadcast_to(hot.keys[None], (E,) + hot.keys.shape) + 0.0
+    if warm.keys.ndim == 3:          # sharded: (S, cap, D) -> (S, E, cap, D)
+        exp = lambda x: jnp.broadcast_to(
+            x[:, None], (x.shape[0], E) + x.shape[1:]) + 0
+    else:
+        exp = lambda x: jnp.broadcast_to(x[None], (E,) + x.shape) + 0
+    return EnsembleState(hot_keys=hk, warm_keys=exp(warm.keys),
+                         warm_keys_q=exp(warm.keys_q),
+                         warm_scales=exp(warm.scales).astype(jnp.float32))
+
+
+def make_ensemble(hot_panels: jax.Array,
+                  warm_panels: jax.Array) -> EnsembleState:
+    """Build an `EnsembleState` from raw stacked panels ((E, Nh, D) /
+    (E, Nw, D); sharded warm accepts (S, E, Nw, D)): unit-normalize and
+    quantize — the bulk-load constructor for tests and benches."""
+    hk = _unit(hot_panels.astype(jnp.float32))
+    wk = _unit(warm_panels.astype(jnp.float32))
+    q8, sc = quantize_rows(wk)
+    return EnsembleState(hot_keys=hk, warm_keys=wk,
+                         warm_keys_q=q8, warm_scales=sc)
+
+
+def place_ensemble_sharded(ens: EnsembleState, mesh,
+                           axis: str = "model") -> EnsembleState:
+    """Commit a stacked ensemble to the mesh: warm leaves sharded on
+    their leading axis, the hot panels replicated (mirrors
+    `place_warm_sharded`)."""
+    from jax.sharding import NamedSharding
+    from jax.sharding import PartitionSpec as P
+
+    def put(x, spec):
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    shard = lambda x: put(x, P(*((axis,) + (None,) * (x.ndim - 1))))
+    return EnsembleState(hot_keys=put(ens.hot_keys, P()),
+                         warm_keys=shard(ens.warm_keys),
+                         warm_keys_q=shard(ens.warm_keys_q),
+                         warm_scales=shard(ens.warm_scales))
+
+
+def ensemble_hot_insert_batch(hot: HotState, ens: EnsembleState,
+                              embs: jax.Array, value_ids: jax.Array,
+                              tenants: jax.Array
+                              ) -> Tuple[HotState, EnsembleState, jax.Array]:
+    """`hot_insert_batch` with the E panels mirrored: embs is (B, E, D)
+    (panel 0 = pilot).  Each step recomputes `_choose_slot` on the
+    evolving hot state — the same deterministic choice `hot_insert`
+    makes internally — and writes the full (E, D) row there, so the
+    panels stay row-aligned with the base tier by construction.
+    Returns (hot, ens, evicted (B,))."""
+
+    def body(carry, xs):
+        h, ehot = carry
+        emb, vid, t = xs                                  # (E, D), (), ()
+        slot = _choose_slot(h)
+        h, ev = hot_insert(h, emb[0], vid, t)
+        en = _unit(emb.astype(jnp.float32))
+        cur = ehot[:, slot]
+        ehot = ehot.at[:, slot].set(jnp.where(vid < 0, cur, en))
+        return (h, ehot), ev
+
+    (hot, ehot), evicted = jax.lax.scan(
+        body, (hot, ens.hot_keys), (embs, value_ids, tenants))
+    return hot, ens._replace(hot_keys=ehot), evicted
+
+
+def ensemble_warm_append(ens: EnsembleState, warm: WarmState, dem: Demoted,
+                         panel_keys: jax.Array) -> EnsembleState:
+    """Mirror of `warm_append` for the stacked panels: the identical
+    ring arithmetic from the *pre-append* warm state, applied to the
+    (E, m, D) panel rows of the demoted batch (gathered by the caller
+    via `coldest_slots` before the demote).  Call `warm_append` on the
+    base state with the same ``dem`` alongside."""
+    cap = warm.keys.shape[0]
+    offs = jnp.cumsum(dem.mask.astype(jnp.int32)) - 1
+    pos = (warm.cursor + offs) % cap
+    dest = jnp.where(dem.mask, pos, cap)                  # cap = drop
+    kn = _unit(panel_keys.astype(jnp.float32))            # (E, m, D)
+    k8, sc = quantize_rows(kn)
+    set_rows = jax.vmap(lambda p, v: p.at[dest].set(v, mode="drop"))
+    return ens._replace(
+        warm_keys=set_rows(ens.warm_keys, kn),
+        warm_keys_q=set_rows(ens.warm_keys_q, k8),
+        warm_scales=set_rows(ens.warm_scales, sc))
+
+
+def ensemble_warm_append_sharded(ens: EnsembleState, warm: WarmState,
+                                 dem: Demoted, panel_keys: jax.Array
+                                 ) -> EnsembleState:
+    """`warm_append_sharded`'s round-robin, mirrored onto the stacked
+    panels: batch row j lands on shard ``j % shards`` exactly as the
+    base append routes it, so per-shard row alignment is preserved."""
+    shards = warm.keys.shape[0]
+    m = dem.keys.shape[0]
+    if m % shards:
+        raise ValueError(f"demoted batch {m} not divisible by "
+                         f"{shards} shards")
+
+    def split(x):
+        return jnp.swapaxes(x.reshape((m // shards, shards) + x.shape[1:]),
+                            0, 1)
+
+    dem_s = Demoted(*(split(x) for x in dem))
+    pk_s = jnp.transpose(
+        panel_keys.reshape(panel_keys.shape[0], m // shards, shards, -1),
+        (2, 0, 1, 3))                                     # (S, E, m/S, D)
+
+    def one(wk, wq, wsc, warm_i, dem_i, pk_i):
+        sub = EnsembleState(hot_keys=ens.hot_keys, warm_keys=wk,
+                            warm_keys_q=wq, warm_scales=wsc)
+        sub = ensemble_warm_append(sub, warm_i, dem_i, pk_i)
+        return sub.warm_keys, sub.warm_keys_q, sub.warm_scales
+
+    wk, wq, wsc = jax.vmap(one)(ens.warm_keys, ens.warm_keys_q,
+                                ens.warm_scales, warm, dem_s, pk_s)
+    return ens._replace(warm_keys=wk, warm_keys_q=wq, warm_scales=wsc)
+
+
+def publish_panel(ens: EnsembleState, e: int, hot_keys: jax.Array,
+                  warm_keys: jax.Array) -> EnsembleState:
+    """Atomically swap ONE embedder's key panels — the E-panel
+    generalization of `publish_reembedded_keys` (DESIGN.md §13): with
+    the panel's mixture weight at w, this IS A/B shadow serving of a
+    candidate embedder during a §11 hot-swap.  Rows re-normalize and
+    the int8 mirror requantizes in the same update; per-slot metadata
+    and the pilot-built IVF are untouched.  Publishing panel 0 must go
+    through `publish_reembedded_keys` on the base tiers as well — the
+    pilot panel is a duplicate of ``hot.keys``/``warm.keys``."""
+    hk = _unit(hot_keys.astype(jnp.float32))
+    wk = _unit(warm_keys.astype(jnp.float32))
+    q8, sc = quantize_rows(wk)
+    if ens.warm_keys.ndim == 4:      # sharded warm leaves: (S, E, cap, D)
+        return ens._replace(
+            hot_keys=ens.hot_keys.at[e].set(hk),
+            warm_keys=ens.warm_keys.at[:, e].set(wk),
+            warm_keys_q=ens.warm_keys_q.at[:, e].set(q8),
+            warm_scales=ens.warm_scales.at[:, e].set(sc))
+    return ens._replace(
+        hot_keys=ens.hot_keys.at[e].set(hk),
+        warm_keys=ens.warm_keys.at[e].set(wk),
+        warm_keys_q=ens.warm_keys_q.at[e].set(q8),
+        warm_scales=ens.warm_scales.at[e].set(sc))
+
+
+def _ensemble_ops(hot: HotState, warm: WarmState, ens: EnsembleState,
+                  qe, w, qt, thr, k, n_probe, tail, use_kernel, quantized,
+                  warm_block_n=None):
+    """E-panel cascade through the kernel-package dispatch; returns the
+    6-tuple (scores, vids, warm_slots, hot_slots, hot_hit, hit)."""
+    from repro.kernels.cascade_lookup import ops as _casc_ops
+    return _casc_ops.ensemble_lookup(
+        qe, w, qt, thr, ens.hot_keys, hot.valid, hot.tenants, hot.value_ids,
+        ens.warm_keys, warm.valid, warm.tenants, warm.value_ids,
+        warm.write_seq, warm.centroids, warm.members, warm.cursor,
+        warm.indexed_total, ens.warm_keys_q, ens.warm_scales,
+        k=k, n_probe=n_probe, tail=tail, quantized=quantized,
+        use_kernel=use_kernel, warm_block_n=warm_block_n)
+
+
+def _rescore_exact_fused(qe, w, warm_panels, s, wslots):
+    """Exact fp32 re-score of quantized-selected warm winners, per
+    panel, re-fused with the same stacked contraction the scan used —
+    O(Q·k·E·D) on the few selected rows (DESIGN.md §13)."""
+    E = qe.shape[0]
+    safe = jnp.clip(wslots, 0, warm_panels.shape[1] - 1)
+    pans = [jnp.einsum("qd,qkd->qk", qe[e], warm_panels[e][safe])
+            for e in range(E)]
+    exact = jnp.einsum("qke,qe->qk", jnp.stack(pans, -1), w)
+    return jnp.where(wslots >= 0, exact, s)
+
+
+def _top1_panel_scores(qe, hot_panels, warm_winner_keys, wslot0, hslots,
+                       has):
+    """Per-embedder cosines of each query's merged top-1 candidate.
+
+    ``warm_winner_keys`` is the (Q, E, D) gather of the winning warm
+    rows (caller-side, since the sharded path gathers across shards);
+    hot winners resolve through ``hslots`` — every hot candidate in a
+    merge comes from the replicated hot tier, whose best row is always
+    the hot top-1, so the slot is known whenever the winner is hot.
+    """
+    hsafe = jnp.clip(hslots, 0, hot_panels.shape[1] - 1)
+    hkeys = jnp.swapaxes(hot_panels[:, hsafe], 0, 1)      # (Q, E, D)
+    keys = jnp.where((wslot0 >= 0)[:, None, None], warm_winner_keys, hkeys)
+    ps = jnp.einsum("eqd,qed->qe", qe, keys)
+    return jnp.where(has[:, None], ps, -1.0)
+
+
+def _shard_ensemble(hot: HotState, warm: WarmState, ens: EnsembleState,
+                    qe, w, qt, thr, k, n_probe, tail, use_kernel, quantized,
+                    shard_index, warm_block_n=None):
+    """One shard's fused-ensemble candidates (mirrors `_shard_cascade`:
+    hot attributed to shard 0, exact fused re-score before the merge).
+    Returns (scores, vids, is_hot, hot_slots, warm_slots)."""
+    hot = hot._replace(valid=hot.valid & (shard_index == 0))
+    s, vids, wslots, hslots, _, _ = _ensemble_ops(
+        hot, warm, ens, qe, w, qt, thr, k, n_probe, tail, use_kernel,
+        quantized, warm_block_n)
+    if quantized:
+        s = _rescore_exact_fused(qe, w, ens.warm_keys, s, wslots)
+    is_hot = ((wslots < 0) & (s > NEG / 2)).astype(jnp.int32)
+    return s, vids, is_hot, hslots, wslots
+
+
+def _ens_shard(ens: EnsembleState, i) -> EnsembleState:
+    """Extract one shard's panel view ((S, E, …) -> (E, …)); hot panels
+    are replicated, so only the warm leaves index."""
+    return ens._replace(warm_keys=ens.warm_keys[i],
+                        warm_keys_q=ens.warm_keys_q[i],
+                        warm_scales=ens.warm_scales[i])
+
+
+def _ensemble_sharded_oracle(hot, swarm, ens, qe, w, qt, thr, k, n_probe,
+                             tail, use_kernel, quantized,
+                             warm_block_n=None) -> EnsembleResult:
+    """Single-device emulation of the sharded fused-ensemble schedule —
+    the bit-exact oracle the shard_map path is tested against."""
+    from repro.core.distrib import merge_stacked_topk
+    shards = swarm.keys.shape[0]
+    per = [_shard_ensemble(hot,
+                           jax.tree_util.tree_map(lambda x, i=i: x[i], swarm),
+                           _ens_shard(ens, i), qe, w, qt, thr, k, n_probe,
+                           tail, use_kernel, quantized, i, warm_block_n)
+           for i in range(shards)]
+    Q = qe.shape[1]
+    shard_cols = [jnp.full((Q, k), i, jnp.int32) for i in range(shards)]
+    s, vids, is_hot, wslot, wshard = merge_stacked_topk(
+        k, jnp.stack([p[0] for p in per]), jnp.stack([p[1] for p in per]),
+        jnp.stack([p[2] for p in per]), jnp.stack([p[4] for p in per]),
+        jnp.stack(shard_cols))
+    hit = s[:, 0] >= thr
+    hot_hit = hit & (is_hot[:, 0] != 0)
+    hslots = per[0][3]
+    cap = ens.warm_keys.shape[2]
+    wsafe = jnp.clip(wslot[:, 0], 0, cap - 1)
+    ssafe = jnp.clip(wshard[:, 0], 0, shards - 1)
+    wwin = ens.warm_keys[ssafe, :, wsafe]                 # (Q, E, D)
+    ps = _top1_panel_scores(qe, ens.hot_keys, wwin, wslot[:, 0], hslots,
+                            vids[:, 0] >= 0)
+    return EnsembleResult(scores=s, value_ids=vids, hot_slots=hslots,
+                          hot_hit=hot_hit, hit=hit, panel_scores=ps)
+
+
+def _ensemble_sharded(hot, swarm, ens, qe, w, qt, thr, k, n_probe, tail,
+                      use_kernel, quantized, mesh, axis,
+                      warm_block_n=None) -> EnsembleResult:
+    """shard_map execution of the sharded fused ensemble: warm tiers
+    and panel leaves split on their leading shard axis, hot panels and
+    queries replicated, one (Q, k·shards) merge carrying (vid, is_hot,
+    warm-slot, shard) payloads so the winner's panel keys can be
+    gathered after the merge."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core.distrib import merge_local_topk
+
+    def local(hot_, swarm_, ewk_, ewq_, ewsc_, ehot_, qe_, w_, qt_, thr_):
+        i = jax.lax.axis_index(axis)
+        warm_local = jax.tree_util.tree_map(lambda x: x[0], swarm_)
+        ens_local = EnsembleState(hot_keys=ehot_, warm_keys=ewk_[0],
+                                  warm_keys_q=ewq_[0], warm_scales=ewsc_[0])
+        s, vids, is_hot, hslots, wslots = _shard_ensemble(
+            hot_, warm_local, ens_local, qe_, w_, qt_, thr_, k, n_probe,
+            tail, use_kernel, quantized, i, warm_block_n)
+        shard_col = jnp.full(s.shape, i, jnp.int32)
+        sm, vm, hm, wm, cm = merge_local_topk(axis, k, s, vids, is_hot,
+                                              wslots, shard_col)
+        hit = sm[:, 0] >= thr_
+        hot_hit = hit & (hm[:, 0] != 0)
+        # only shard 0 computed real hot slots; psum broadcasts them
+        hslot0 = jax.lax.psum(jnp.where(i == 0, hslots, 0), axis)
+        return sm, vm, hslot0, hot_hit, hit, wm, cm
+
+    rep = P()
+    shard = lambda x: P(*((axis,) + (None,) * (x.ndim - 1)))
+    fn = shard_map(
+        local, mesh=mesh,
+        in_specs=(jax.tree_util.tree_map(lambda _: rep, hot),
+                  jax.tree_util.tree_map(lambda _: P(axis), swarm),
+                  shard(ens.warm_keys), shard(ens.warm_keys_q),
+                  shard(ens.warm_scales), rep, rep, rep, rep, rep),
+        out_specs=(rep,) * 7,
+        check_rep=False)
+    s, vids, hslots, hot_hit, hit, wslot, wshard = fn(
+        hot, swarm, ens.warm_keys, ens.warm_keys_q, ens.warm_scales,
+        ens.hot_keys, qe, w, qt, thr)
+    shards = swarm.keys.shape[0]
+    cap = ens.warm_keys.shape[2]
+    wsafe = jnp.clip(wslot[:, 0], 0, cap - 1)
+    ssafe = jnp.clip(wshard[:, 0], 0, shards - 1)
+    wwin = ens.warm_keys[ssafe, :, wsafe]                 # (Q, E, D)
+    ps = _top1_panel_scores(qe, ens.hot_keys, wwin, wslot[:, 0], hslots,
+                            vids[:, 0] >= 0)
+    return EnsembleResult(scores=s, value_ids=vids, hot_slots=hslots,
+                          hot_hit=hot_hit, hit=hit, panel_scores=ps)
+
+
+def ensemble_cascade_query(hot: HotState, warm: WarmState,
+                           ens: EnsembleState, q: jax.Array,
+                           weights: jax.Array, q_tenants: jax.Array,
+                           thresholds: jax.Array, k: int = 1,
+                           n_probe: int = 8, tail: int = 0,
+                           fused: bool = False,
+                           use_kernel: bool | None = None,
+                           quantized: bool = False, mesh=None,
+                           axis: str = "model",
+                           warm_block_n: int | None = None
+                           ) -> EnsembleResult:
+    """Fused multi-embedder cascade lookup (DESIGN.md §13).
+
+    q: (Q, E, D) — one embedding per embedder per query, panel 0 the
+    pilot; weights: (Q, E) per-query mixture weights (host-resolved
+    from the per-tenant policy table, like thresholds).  Execution
+    paths, sharding detection, quantization semantics and
+    ``warm_block_n`` all mirror `cascade_query`; scores everywhere are
+    the weighted fused cosine, and routing runs once on the pilot
+    panel against the base tier's (pilot-built) IVF.  The result adds
+    ``panel_scores`` — the top-1 candidate's unweighted per-embedder
+    cosines, which `feedback` records to learn the weights.
+    """
+    sharded = ens.warm_keys.ndim == 4
+    if sharded != (warm.keys.ndim == 3):
+        raise ValueError("ensemble/warm sharding mismatch: warm keys "
+                         f"ndim {warm.keys.ndim}, ensemble warm ndim "
+                         f"{ens.warm_keys.ndim}")
+    if mesh is not None and not sharded:
+        raise ValueError("ensemble_cascade_query(mesh=...) needs the "
+                         "stacked (sharded) panels; see "
+                         "place_ensemble_sharded")
+    qe = jnp.swapaxes(_unit(q.astype(jnp.float32)), 0, 1)  # (E, Q, D)
+    qt = q_tenants.astype(jnp.int32)
+    thr = jnp.asarray(thresholds, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    uk = use_kernel if fused else False
+    if sharded:
+        if mesh is None:
+            return _ensemble_sharded_oracle(hot, warm, ens, qe, w, qt, thr,
+                                            k, n_probe, tail, uk, quantized,
+                                            warm_block_n)
+        return _ensemble_sharded(hot, warm, ens, qe, w, qt, thr, k, n_probe,
+                                 tail, uk, quantized, mesh, axis,
+                                 warm_block_n)
+    s, vids, wslots, hslots, hot_hit, hit = _ensemble_ops(
+        hot, warm, ens, qe, w, qt, thr, k, n_probe, tail, uk, quantized,
+        warm_block_n)
+    if quantized:
+        # exact fused re-score may reorder the k selected candidates
+        s = _rescore_exact_fused(qe, w, ens.warm_keys, s, wslots)
+        s, idx = jax.lax.top_k(s, k)
+        rows = jnp.arange(s.shape[0])[:, None]
+        vids = vids[rows, idx]
+        wslots = wslots[rows, idx]
+        hit = s[:, 0] >= thr
+        hot_hit = hit & (wslots[:, 0] < 0)
+    cap = ens.warm_keys.shape[1]
+    wsafe = jnp.clip(wslots[:, 0], 0, cap - 1)
+    wwin = jnp.swapaxes(ens.warm_keys[:, wsafe], 0, 1)    # (Q, E, D)
+    ps = _top1_panel_scores(qe, ens.hot_keys, wwin, wslots[:, 0], hslots,
+                            vids[:, 0] >= 0)
+    return EnsembleResult(scores=s, value_ids=vids, hot_slots=hslots,
+                          hot_hit=hot_hit, hit=hit, panel_scores=ps)

@@ -260,6 +260,290 @@ def _kernel(q_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref, hvid_ref,
             [hit, hit & (out_p[:, 0] < k)], -1).astype(jnp.int32)
 
 
+def _ens_kernel(q_ref, w_ref, qt_ref, thr_ref, hk_ref, hv_ref, ht_ref,
+                hvid_ref, wk_ref, wscale_ref, wv_ref, wt_ref, wvid_ref,
+                wseq_ref, cent_ref, mem_ref, meta_ref, out_s_ref, out_v_ref,
+                out_wslot_ref, out_hslot_ref, out_flag_ref,
+                acc_s, acc_i, wacc_s, wacc_p, wacc_i, *, k: int, block_n: int,
+                n_hot: int, n_hot_blocks: int, warm_block_n: int, n_warm: int,
+                n_probe: int, tail: int, quantized: bool):
+    """E-panel variant of `_kernel` (DESIGN.md §13): the same grid,
+    phases, accumulators and merge, but every key-panel stream carries
+    E stacked panels and every score is the weighted fused similarity
+    ``sum_e w[q, e] · cos(q_e, key_e)``.  The cross-panel weighted sum
+    is one einsum contraction over the stacked per-panel scores —
+    `ref.ensemble_lookup` uses the identical primitive, which is what
+    keeps parity bit-exact (an unrolled multiply-add chain is not
+    fusion-stable across eager/jit graph boundaries).
+    Routing (probe selection and the IVF gather index arithmetic) runs
+    once, on the unweighted pilot panel — the candidate *index* stream
+    and all masks are shared across panels, which is where the
+    sequential path's E× overhead goes away."""
+    j = pl.program_id(0)
+    nb = pl.num_programs(0)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_s[...] = jnp.full_like(acc_s, NEG_INF)
+        acc_i[...] = jnp.zeros_like(acc_i)
+        wacc_s[...] = jnp.full_like(wacc_s, NEG_INF)
+        wacc_p[...] = jnp.full_like(wacc_p, POS_PAD)
+        wacc_i[...] = jnp.zeros_like(wacc_i)
+
+    q = q_ref[...].astype(jnp.float32)                 # (E, Q, D)
+    w = w_ref[...].astype(jnp.float32)                 # (Q, E)
+    qt = qt_ref[...]                                   # (Q,)
+    E = q.shape[0]
+    Q = q.shape[1]
+
+    # ---- hot tier: streamed stacked block, fused running top-k ------
+    @pl.when(j < n_hot_blocks)
+    def _hot():
+        kblk = hk_ref[...].astype(jnp.float32)         # (E, BN, D)
+        pans = [jax.lax.dot_general(q[e], kblk[e], (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+                for e in range(E)]
+        s = jnp.einsum("qne,qe->qn", jnp.stack(pans, -1), w)
+        col = j * block_n + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = (hv_ref[...] != 0)[None, :] \
+            & (ht_ref[...][None, :] == qt[:, None]) & (col < n_hot)
+        s = jnp.where(ok, s, NEG_INF)
+        blk_s, blk_i = _select_topk(s, col, k)
+        new_s, new_i = _merge(acc_s[...], acc_i[...], blk_s, blk_i, k)
+        acc_s[...] = new_s
+        acc_i[...] = new_i
+
+    # ---- warm tier: pilot-routed, fused position-keyed top-k --------
+    @pl.when(j >= n_hot_blocks)
+    def _warm():
+        b = j - n_hot_blocks
+        base = b * warm_block_n
+        bucket = mem_ref.shape[1]
+        cursor = meta_ref[0]
+        indexed_total = meta_ref[1]
+        wv = wv_ref[...] != 0                          # (cap,) whole
+        wt = wt_ref[...]
+        wseq = wseq_ref[...]
+        if quantized:
+            # int8 stacked warm block: per-panel dequant + scale, then
+            # one stacked contraction with the weights — same primitive
+            # sequence as the oracle
+            wkb = wk_ref[...]                          # (E, WB, D) int8
+            wscaleb = wscale_ref[...]                  # (E, WB) fp32
+
+            def _panel_scores(local):
+                pans = [jnp.einsum("qd,qbd->qb", q[e],
+                                   wkb[e][local].astype(jnp.float32))
+                        * wscaleb[e][local] for e in range(E)]
+                return jnp.einsum("qbe,qe->qb", jnp.stack(pans, -1), w)
+        else:
+            wkb = wk_ref[...].astype(jnp.float32)      # (E, WB, D)
+
+            def _panel_scores(local):
+                pans = [jnp.einsum("qd,qbd->qb", q[e], wkb[e][local])
+                        for e in range(E)]
+                return jnp.einsum("qbe,qe->qb", jnp.stack(pans, -1), w)
+
+        # probe selection on the pilot panel only: one centroid matmul
+        # and one set of probes shared by all E panels
+        csims = jax.lax.dot_general(
+            q[0], cent_ref[...].astype(jnp.float32), (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (Q, K)
+        pcol = jax.lax.broadcasted_iota(jnp.int32, csims.shape, 1)
+        _, probes = _select_topk(csims, pcol, n_probe)  # (Q, n_probe)
+
+        # shared IVF gather indices: the (Q, bucket) candidate id panel
+        # and its masks are computed once per probe and reused by every
+        # panel's score term inside _panel_scores
+        mem = mem_ref[...]                             # (K, bucket)
+        ws, wp, wi = wacc_s[...], wacc_p[...], wacc_i[...]
+        for p in range(n_probe):
+            cand = mem[probes[:, p]]                   # (Q, bucket)
+            local = cand - base
+            inblk = (cand >= 0) & (local >= 0) & (local < warm_block_n)
+            gsafe = jnp.clip(cand, 0, n_warm - 1)
+            sc = _panel_scores(jnp.clip(local, 0, warm_block_n - 1))
+            okp = inblk & wv[gsafe] & (wt[gsafe] == qt[:, None]) \
+                & (wseq[gsafe] <= indexed_total)
+            sc = jnp.where(okp, sc, NEG_INF)
+            fpos = p * bucket \
+                + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+            fpos = jnp.where(okp, fpos, POS_PAD)
+            pb_s, pb_p, pb_i = _select_topk_pos(sc, fpos, gsafe, k)
+            ws, wp, wi = _merge_pos(ws, wp, wi, pb_s, pb_p, pb_i, k)
+
+        # unindexed-tail scan: last `tail` ring writes, newest first
+        if tail:
+            offs = jax.lax.broadcasted_iota(jnp.int32, (1, tail), 1)
+            pos = (cursor - 1 - offs) % n_warm         # (1, tail)
+            unindexed = wseq[pos] > indexed_total
+            tcand = jnp.broadcast_to(jnp.where(unindexed, pos, -1),
+                                     (Q, tail))
+            tlocal = tcand - base
+            inblk = (tcand >= 0) & (tlocal >= 0) & (tlocal < warm_block_n)
+            tsafe = jnp.clip(tcand, 0, n_warm - 1)
+            sc = _panel_scores(jnp.clip(tlocal, 0, warm_block_n - 1))
+            okt = inblk & wv[tsafe] & (wt[tsafe] == qt[:, None])
+            sc = jnp.where(okt, sc, NEG_INF)
+            fpos = n_probe * bucket \
+                + jax.lax.broadcasted_iota(jnp.int32, sc.shape, 1)
+            fpos = jnp.where(okt, fpos, POS_PAD)
+            tb_s, tb_p, tb_i = _select_topk_pos(sc, fpos, tsafe, k)
+            ws, wp, wi = _merge_pos(ws, wp, wi, tb_s, tb_p, tb_i, k)
+        wacc_s[...] = ws
+        wacc_p[...] = wp
+        wacc_i[...] = wi
+
+    # ---- best-of-tiers merge: once, after the last warm block -------
+    @pl.when(j == nb - 1)
+    def _finish():
+        rows = jnp.arange(Q)[:, None]
+        hs, hi = acc_s[...], acc_i[...]
+        ws_acc, wi_acc = wacc_s[...], wacc_i[...]
+        hvids = jnp.where(hs > NEG_INF / 2, hvid_ref[...][hi], -1)
+        wvids = jnp.where(ws_acc > NEG_INF / 2, wvid_ref[...][wi_acc], -1)
+        wslot_c = jnp.where(ws_acc > NEG_INF / 2, wi_acc, -1)
+        cand_s = jnp.concatenate([hs, ws_acc], axis=-1)     # (Q, 2k)
+        cand_v = jnp.concatenate([hvids, wvids], axis=-1)
+        cand_w = jnp.concatenate(
+            [jnp.full((Q, k), -1, jnp.int32), wslot_c], axis=-1)
+        ppos = jax.lax.broadcasted_iota(jnp.int32, cand_s.shape, 1)
+        out_s, out_p = _select_topk(cand_s, ppos, k)
+        out_s_ref[...] = out_s
+        out_v_ref[...] = cand_v[rows, out_p]
+        out_wslot_ref[...] = cand_w[rows, out_p]
+        out_hslot_ref[...] = hi[:, :1]
+        hit = out_s[:, 0] >= thr_ref[...]
+        out_flag_ref[...] = jnp.stack(
+            [hit, hit & (out_p[:, 0] < k)], -1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "n_probe", "tail",
+                                             "block_n", "warm_block_n",
+                                             "interpret", "quantized"))
+def cascade_lookup_ensemble(q, weights, q_tenants, thresholds,
+                            hot_keys, hot_valid, hot_tenants, hot_value_ids,
+                            warm_keys, warm_valid, warm_tenants,
+                            warm_value_ids, warm_write_seq, centroids,
+                            members, cursor, indexed_total,
+                            warm_keys_q=None, warm_scales=None,
+                            k: int = 1, n_probe: int = 8, tail: int = 0, *,
+                            quantized: bool = False,
+                            block_n: int = DEFAULT_BLOCK_N,
+                            warm_block_n: int | None = None,
+                            interpret: bool = True):
+    """Fused E-panel ensemble cascade; signature/semantics of
+    `ref.ensemble_lookup`.
+
+    q: (E, Q, D) unit-norm stacked queries; weights: (Q, E) per-query
+    mixture weights; hot_keys: (E, Nh, D); warm panels (E, cap, D)
+    (int8 + (E, cap) scales when ``quantized``).  Per-slot metadata and
+    the pilot-built IVF are shared across panels.  One grid sweep
+    streams all E panels block-aligned — each grid step fetches one
+    (E, block, D) stacked tile, so HBM traffic grows with E only for
+    the key panels themselves while routing, masks, index arithmetic
+    and the running top-k stay single-copy.  Returns the 6-tuple of
+    `cascade_lookup` with fused scores.
+    """
+    q = q.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    q_tenants = q_tenants.astype(jnp.int32)
+    E, Q, D = q.shape
+    n_hot = hot_keys.shape[1]
+    n_clusters = centroids.shape[0]
+    n_probe = min(n_probe, n_clusters)
+    cap = warm_keys.shape[1]
+
+    if quantized:
+        wk_in = warm_keys_q
+        wscale_in = warm_scales.astype(jnp.float32)
+        wk_dtype = jnp.int8
+    else:
+        wk_in = warm_keys
+        wscale_in = jnp.zeros((E, cap), jnp.float32)    # unread placeholder
+        wk_dtype = jnp.float32
+
+    bn = min(block_n, n_hot)
+    n_blocks = -(-n_hot // bn)
+    pad = n_blocks * bn - n_hot
+    # bool VMEM refs are a Mosaic lowering hazard: masks travel as int32
+    hot_valid = hot_valid.astype(jnp.int32)
+    warm_valid = warm_valid.astype(jnp.int32)
+    if pad:
+        hot_keys = jnp.pad(hot_keys, ((0, 0), (0, pad), (0, 0)))
+        hot_valid = jnp.pad(hot_valid, (0, pad))
+        hot_tenants = jnp.pad(hot_tenants, (0, pad), constant_values=-1)
+        hot_value_ids = jnp.pad(hot_value_ids, (0, pad), constant_values=-1)
+
+    wb = min(warm_block_n or cap, cap)
+    n_wblocks = -(-cap // wb)
+    wpad = n_wblocks * wb - cap
+    wk_in = wk_in.astype(wk_dtype)
+    if wpad:
+        wk_in = jnp.pad(wk_in, ((0, 0), (0, wpad), (0, 0)))
+        wscale_in = jnp.pad(wscale_in, ((0, 0), (0, wpad)))
+    meta = jnp.stack([jnp.asarray(cursor, jnp.int32),
+                      jnp.asarray(indexed_total, jnp.int32)])
+
+    bucket = members.shape[1]
+    grid = (n_blocks + n_wblocks,)
+    whole = lambda shape: pl.BlockSpec(shape, lambda j: (0,) * len(shape))
+    # clamped index maps as in `cascade_lookup`, panel axis never tiled
+    hblk = lambda j: (jnp.minimum(j, n_blocks - 1),)
+    hblk3 = lambda j: (0, jnp.minimum(j, n_blocks - 1), 0)
+    wblk3 = lambda j: (0, jnp.maximum(j - n_blocks, 0), 0)
+    wblk2e = lambda j: (0, jnp.maximum(j - n_blocks, 0))
+    out_shape = (jax.ShapeDtypeStruct((Q, k), jnp.float32),
+                 jax.ShapeDtypeStruct((Q, k), jnp.int32),
+                 jax.ShapeDtypeStruct((Q, k), jnp.int32),
+                 jax.ShapeDtypeStruct((Q, 1), jnp.int32),
+                 jax.ShapeDtypeStruct((Q, 2), jnp.int32))
+    fn = pl.pallas_call(
+        functools.partial(_ens_kernel, k=k, block_n=bn, n_hot=n_hot,
+                          n_hot_blocks=n_blocks, warm_block_n=wb,
+                          n_warm=cap, n_probe=n_probe, tail=tail,
+                          quantized=quantized),
+        grid=grid,
+        in_specs=[
+            whole((E, Q, D)),                             # stacked queries
+            whole((Q, E)),                                # mixture weights
+            whole((Q,)),                                  # q_tenants
+            whole((Q,)),                                  # thresholds
+            pl.BlockSpec((E, bn, D), hblk3),              # hot panel stream
+            pl.BlockSpec((bn,), hblk),                    # hot valid
+            pl.BlockSpec((bn,), hblk),                    # hot tenants
+            whole((n_blocks * bn,)),                      # hot value ids
+            pl.BlockSpec((E, wb, D), wblk3),              # warm panel stream
+            pl.BlockSpec((E, wb), wblk2e),                # warm row scales
+            whole((cap,)),                                # warm valid
+            whole((cap,)),                                # warm tenants
+            whole((cap,)),                                # warm value ids
+            whole((cap,)),                                # warm write seq
+            whole((n_clusters, D)),                       # centroids
+            whole((n_clusters, bucket)),                  # inverted lists
+            whole((2,)),                                  # cursor/indexed
+        ],
+        out_specs=(whole((Q, k)), whole((Q, k)), whole((Q, k)),
+                   whole((Q, 1)), whole((Q, 2))),
+        out_shape=out_shape,
+        scratch_shapes=[
+            pltpu.VMEM((Q, k), jnp.float32),
+            pltpu.VMEM((Q, k), jnp.int32),
+            pltpu.VMEM((Q, k), jnp.float32),
+            pltpu.VMEM((Q, k), jnp.int32),
+            pltpu.VMEM((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )
+    out_s, out_v, out_w, hslot, flags = fn(
+        q, weights, q_tenants, thresholds.astype(jnp.float32), hot_keys,
+        hot_valid, hot_tenants, hot_value_ids, wk_in, wscale_in,
+        warm_valid, warm_tenants, warm_value_ids, warm_write_seq, centroids,
+        members, meta)
+    return (out_s, out_v, out_w, hslot[:, 0], flags[:, 1] != 0,
+            flags[:, 0] != 0)
+
+
 @functools.partial(jax.jit, static_argnames=("k", "n_probe", "tail",
                                              "block_n", "warm_block_n",
                                              "interpret", "quantized"))

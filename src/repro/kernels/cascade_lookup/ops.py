@@ -57,3 +57,39 @@ def cascade_lookup(q, q_tenants, thresholds,
         hot_value_ids, warm_keys, warm_valid, warm_tenants, warm_value_ids,
         warm_write_seq, centroids, members, cursor, indexed_total,
         warm_keys_q, warm_scales, k, n_probe, tail, quantized=quantized)
+
+
+def ensemble_lookup(q, weights, q_tenants, thresholds,
+                    hot_keys, hot_valid, hot_tenants, hot_value_ids,
+                    warm_keys, warm_valid, warm_tenants, warm_value_ids,
+                    warm_write_seq, centroids, members, cursor, indexed_total,
+                    warm_keys_q=None, warm_scales=None,
+                    k: int = 1, n_probe: int = 8, tail: int = 0, *,
+                    quantized: bool = False,
+                    use_kernel: bool | None = None,
+                    block_n: int = _kernel.DEFAULT_BLOCK_N,
+                    warm_block_n: int | None = None):
+    """E-panel fused ensemble dispatch (DESIGN.md §13): q (E, Q, D)
+    stacked unit-norm queries, weights (Q, E) mixture weights, key
+    panels stacked (E, N, D) with shared per-slot metadata and
+    pilot-built IVF -> the same 6-tuple as `cascade_lookup` with the
+    weighted fused score; see `ref.ensemble_lookup`.
+
+    Dispatch rules match `cascade_lookup`: kernel on TPU (interpret
+    mode when forced elsewhere), four-op oracle otherwise.
+    """
+    if use_kernel is None:
+        use_kernel = _on_tpu()
+    if use_kernel:
+        return _kernel.cascade_lookup_ensemble(
+            q, weights, q_tenants, thresholds, hot_keys, hot_valid,
+            hot_tenants, hot_value_ids, warm_keys, warm_valid, warm_tenants,
+            warm_value_ids, warm_write_seq, centroids, members, cursor,
+            indexed_total, warm_keys_q, warm_scales, k, n_probe, tail,
+            quantized=quantized, block_n=block_n,
+            warm_block_n=warm_block_n, interpret=not _on_tpu())
+    return _ref.ensemble_lookup(
+        q, weights, q_tenants, thresholds, hot_keys, hot_valid, hot_tenants,
+        hot_value_ids, warm_keys, warm_valid, warm_tenants, warm_value_ids,
+        warm_write_seq, centroids, members, cursor, indexed_total,
+        warm_keys_q, warm_scales, k, n_probe, tail, quantized=quantized)

@@ -100,3 +100,102 @@ def cascade_lookup(q, q_tenants, thresholds,
     hit = s[:, 0] >= thresholds
     hot_hit = hit & (i[:, 0] < k)
     return s, vids, out_wslots, hslots[:, 0], hot_hit, hit
+
+
+def ensemble_lookup(q, weights, q_tenants, thresholds,
+                    hot_keys, hot_valid, hot_tenants, hot_value_ids,
+                    warm_keys, warm_valid, warm_tenants, warm_value_ids,
+                    warm_write_seq, centroids, members, cursor, indexed_total,
+                    warm_keys_q=None, warm_scales=None,
+                    k: int = 1, n_probe: int = 8, tail: int = 0,
+                    quantized: bool = False
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                               jax.Array, jax.Array]:
+    """E-panel four-op oracle for the fused ensemble cascade
+    (DESIGN.md §13): the weighted fused similarity over E embedder key
+    panels, routed once on the *pilot* embedder (panel 0).
+
+    q: (E, Q, D) unit-norm, one query embedding per embedder;
+    weights: (Q, E) per-query mixture weights (the service resolves
+    them per tenant); hot_keys: (E, Nh, D); warm_keys: (E, cap, D)
+    (``warm_keys_q``/``warm_scales``: (E, cap, D) int8 / (E, cap) when
+    ``quantized``).  All per-slot metadata (valid/tenant/value-id/
+    write-seq columns) and the IVF (centroids + inverted lists, built
+    from the pilot panel) are shared across panels — the panels are E
+    views of the *same* rows, kept row-aligned by construction
+    (`tiers.EnsembleState`).
+
+    The fused score of a candidate row is
+    ``sum_e weights[q, e] * cos(q_e, key_e[row])``.  The cross-panel
+    weighted sum is one einsum contraction over the stacked per-panel
+    scores — a single primitive, so eager and jitted evaluation agree
+    bitwise and the kernel reproduces it exactly (an unrolled
+    multiply-add chain is NOT fusion-stable: XLA reassociates it
+    differently across surrounding graphs).  Masking applies after the
+    weighted sum.  The probe runs on the unweighted pilot query against
+    the shared (pilot-built) centroids, so the bucket gather is issued
+    once and amortized over all E panels.  Returns the same 6-tuple as
+    `cascade_lookup`, with scores fused.
+    """
+    E = q.shape[0]
+    q = q.astype(jnp.float32)
+    weights = weights.astype(jnp.float32)
+    q_tenants = q_tenants.astype(jnp.int32)
+    Q = q.shape[1]
+    rows = jnp.arange(Q)[:, None]
+
+    # hot tier: fused tenant-masked top-k over the stacked panels
+    hot_pans = [q[e] @ hot_keys[e].T for e in range(E)]            # E×(Q, Nh)
+    hs_all = jnp.einsum("qne,qe->qn", jnp.stack(hot_pans, -1), weights)
+    ok = hot_valid[None, :] & (hot_tenants[None, :] == q_tenants[:, None])
+    hs_all = jnp.where(ok, hs_all, NEG)
+    hs, hslots = jax.lax.top_k(hs_all, k)
+    hvids = jnp.where(hs > NEG / 2, hot_value_ids[hslots], -1)
+
+    # warm tier: pilot-routed IVF probe + unindexed tail, fused score
+    cap = warm_keys.shape[1] if not quantized else warm_keys_q.shape[1]
+    n_clusters, bucket = members.shape
+    n_probe = min(n_probe, n_clusters)
+    csims = q[0] @ centroids.T                  # pilot routing (Q, K)
+    _, probes = jax.lax.top_k(csims, n_probe)
+    cand = members[probes].reshape(Q, n_probe * bucket)
+    is_tail = jnp.zeros(cand.shape, bool)
+    if tail:
+        tail_idx = (cursor - 1 - jnp.arange(tail, dtype=jnp.int32)) % cap
+        unindexed = warm_write_seq[tail_idx] > indexed_total
+        tail_cand = jnp.where(unindexed, tail_idx, -1)
+        cand = jnp.concatenate(
+            [cand, jnp.broadcast_to(tail_cand[None, :], (Q, tail))], axis=1)
+        is_tail = jnp.concatenate(
+            [is_tail, jnp.ones((Q, tail), bool)], axis=1)
+    safe = jnp.clip(cand, 0, cap - 1)
+    ok = (cand >= 0) & warm_valid[safe] \
+        & (warm_tenants[safe] == q_tenants[:, None]) \
+        & (is_tail | (warm_write_seq[safe] <= indexed_total))
+
+    def _panel(e):
+        if quantized:
+            pan = warm_keys_q[e][safe].astype(jnp.float32)
+            return jnp.einsum("qd,qnd->qn", q[e], pan) \
+                * warm_scales[e][safe]
+        return jnp.einsum("qd,qnd->qn", q[e], warm_keys[e][safe])
+
+    warm_pans = [_panel(e) for e in range(E)]
+    wscores = jnp.einsum("qne,qe->qn", jnp.stack(warm_pans, -1), weights)
+    wscores = jnp.where(ok, wscores, NEG)
+    ws, wi = jax.lax.top_k(wscores, k)
+    wslots = safe[rows, wi]
+    wvids = jnp.where(ws > NEG / 2, warm_value_ids[wslots], -1)
+    wslots = jnp.where(ws > NEG / 2, wslots, -1)
+
+    # best-of-tiers merge (hot side first, so ties resolve hot)
+    all_s = jnp.concatenate([hs, ws], axis=1)                      # (Q, 2k)
+    all_v = jnp.concatenate([hvids, wvids], axis=1)
+    all_w = jnp.concatenate([jnp.full((Q, k), -1, jnp.int32),
+                             wslots.astype(jnp.int32)], axis=1)
+    s, i = jax.lax.top_k(all_s, k)
+    vids = all_v[rows, i]
+    out_wslots = all_w[rows, i]
+    hit = s[:, 0] >= thresholds
+    hot_hit = hit & (i[:, 0] < k)
+    return s, vids, out_wslots, hslots[:, 0], hot_hit, hit

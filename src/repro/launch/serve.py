@@ -16,7 +16,11 @@ versioned shadow re-embed of the cached corpus (DESIGN.md §11), and
 ``--cold-capacity N`` backs the warm ring with an N-row host-RAM cold
 tier — warm evictions demote instead of dropping, below-threshold
 queries fall through to a budgeted cold fetch, and re-hot rows promote
-back up on the idle tick (DESIGN.md §12).
+back up on the idle tick (DESIGN.md §12).  ``--ensemble E`` serves E
+embedders through the fused multi-embedder cascade — the fine-tuned
+embedder is the pilot, the extra panels are random-projection
+embedders, and the feedback loop learns per-tenant mixture weights
+(DESIGN.md §13).
 
 ``--metrics-json PATH`` dumps the telemetry registry (DESIGN.md §10)
 as JSON-lines — one meta line then one line per metric series — after
@@ -72,6 +76,13 @@ def main():
                     help="stream the fused kernel's warm panel in blocks "
                          "of N rows (0 = whole-panel residency; "
                          "DESIGN.md §12)")
+    ap.add_argument("--ensemble", type=int, default=0, metavar="E",
+                    help="serve E embedders through the fused multi-"
+                         "embedder cascade: the fine-tuned embedder is "
+                         "the pilot, panels 1..E-1 are random-projection "
+                         "embedders, mixture weights learned per tenant "
+                         "(DESIGN.md §13; implies --tiered, incompatible "
+                         "with --learned-embedder)")
     ap.add_argument("--learned-embedder", action="store_true",
                     help="refresh the compact embedder online from pooled "
                          "serving feedback and hot-swap it with a "
@@ -91,11 +102,18 @@ def main():
                  "add --cache")
     if args.cache_shards or args.warm_dtype != "float32" \
             or args.learned_admission or args.learned_embedder \
-            or args.cold_capacity or args.warm_block:
+            or args.cold_capacity or args.warm_block or args.ensemble:
         args.tiered = True
     if args.cold_capacity and args.cache_shards:
         ap.error("--cold-capacity needs the unsharded warm ring; drop "
                  "--cache-shards (DESIGN.md §12)")
+    if args.ensemble == 1:
+        ap.error("--ensemble needs E >= 2 (a single embedder is the "
+                 "default cascade)")
+    if args.ensemble and args.learned_embedder:
+        ap.error("--ensemble and --learned-embedder are exclusive: the "
+                 "§11 refresh re-embeds one key panel, the §13 ensemble "
+                 "serves several (swap panels via publish_panel instead)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -146,6 +164,7 @@ def main():
                              refresh_policy=refresh,
                              cold_capacity=args.cold_capacity,
                              warm_block=args.warm_block or None,
+                             embedders=args.ensemble or None,
                              telemetry=telemetry)
         caps = cache.capabilities()
         print(f"tiered cache: warm shards "
@@ -155,11 +174,27 @@ def main():
               f"learned embedder "
               f"{'on' if caps.learned_embedder else 'off'}, "
               f"cold tier {args.cold_capacity if caps.cold_tier else 0} "
-              f"rows")
+              f"rows, ensemble "
+              f"{f'E={caps.ensemble}' if caps.ensemble else 'off'}")
     else:
         cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
                               threshold=args.threshold, telemetry=telemetry)
-    svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
+    embed_fn = trainer.make_embed_fn(tok)
+    if args.ensemble:
+        # pilot = the fine-tuned embedder; the extra panels are cheap
+        # independent views (random projections, distinct seeds) so the
+        # fused cascade and the weight learner see genuine diversity
+        from repro.core.embedders import RandomProjectionEmbedder
+        extras = [RandomProjectionEmbedder(dim=enc_cfg.d_model,
+                                           seed=101 + e)
+                  for e in range(args.ensemble - 1)]
+        pilot_fn = embed_fn
+
+        def embed_fn(texts):
+            panels = [pilot_fn(texts)] + [np.asarray(e.embed(texts))
+                                          for e in extras]
+            return np.stack(panels, axis=1)        # (B, E, D)
+    svc = CachedLLMService(embed_fn, cache, engine, tok,
                            max_new_tokens=args.max_new_tokens)
 
     def dump_metrics(batch_idx, append):
@@ -198,6 +233,10 @@ def main():
               f"{cd['cold_router_skips']} router skips); "
               f"{cd['cold_promoted']} promoted back to warm, "
               f"{cd['cold_dropped']} final drops")
+    if args.ensemble:
+        ws = cache.policies.weights_state()
+        print(f"ensemble: {cache.capabilities().ensemble} embedders, "
+              f"{len(ws)} tenant(s) with learned mixture weights")
     if args.learned_admission:
         st = svc.stats()
         print(f"learned admission: {st['refits_applied']} refits from "

@@ -340,3 +340,38 @@ def test_cached_service_tenants_are_isolated_end_to_end():
     assert not first.cache_hit
     assert svc.handle(q, tenant=0)[0].cache_hit          # same tenant hits
     assert not svc.handle(q, tenant=1)[0].cache_hit      # other tenant not
+
+
+# ---------------------------------------------------------------------------
+# stats() deprecation (removal: v2.0)
+# ---------------------------------------------------------------------------
+
+def test_stats_flat_key_warning_fires_exactly_once_per_process():
+    """The legacy flat-key view warns on the first keyed read and then
+    never again in the process (the flag is class-level, not
+    per-instance) — and the message names the removal version so the
+    one shot carries the whole migration story."""
+    import warnings
+
+    from repro.cache_service.service import LegacyStatsView
+
+    svc = CacheService(dim=16, hot_capacity=8, warm_capacity=32,
+                       n_clusters=2, bucket=16)
+    saved = LegacyStatsView._warned
+    try:
+        LegacyStatsView._warned = False
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            s = svc.stats()
+            k = next(iter(s))
+            _ = s[k]                    # first keyed read: warns
+            _ = s.get(k)                # second read: silent
+            _ = svc.stats()[k]          # fresh view, same process: silent
+            _ = dict(s)                 # bulk copy never warns
+        deps = [w for w in rec
+                if issubclass(w.category, DeprecationWarning)]
+        assert len(deps) == 1, [str(w.message) for w in deps]
+        msg = str(deps[0].message)
+        assert "v2.0" in msg and "stats_snapshot" in msg
+    finally:
+        LegacyStatsView._warned = saved

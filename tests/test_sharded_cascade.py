@@ -466,3 +466,128 @@ def test_sharded_service_serves_identically_to_unsharded(S, warm_dtype):
         np.testing.assert_array_equal(ha, hb, err_msg=f"step {step}")
         assert va == vb
     assert b.stats()["warm_shards"] == S
+
+
+# ---------------------------------------------------------------------------
+# merge property tests: ties + duplicate value-ids across shards.  The
+# sharded cascade (and the §13 fused-ensemble merge on top of it)
+# rides on these two helpers agreeing bit-for-bit, ties included —
+# fuzzed with hypothesis when installed, else a deterministic grid.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+
+def _fuzz(fallback_cases, *strategies):
+    """``@given(*strategies)`` when hypothesis is available, else a
+    parametrize over ``fallback_cases`` (tuples of the same arity)."""
+    def deco(fn):
+        if HAVE_HYPOTHESIS:
+            return settings(max_examples=25,
+                            deadline=None)(given(*strategies)(fn))
+
+        def run(case):
+            fn(*case)
+        run.__name__ = fn.__name__      # not functools.wraps: pytest
+        run.__doc__ = fn.__doc__        # would introspect __wrapped__
+        return pytest.mark.parametrize("case", fallback_cases)(run)
+    return deco
+
+
+def _tied_candidates(S, Q, k, seed):
+    """Shard-stacked candidates engineered for collisions: scores on a
+    coarse grid (ties within and across shards) and value ids from a
+    pool smaller than the candidate count (duplicates across shards)."""
+    r = np.random.default_rng(seed)
+    s = r.integers(0, 4, (S, Q, k)).astype(np.float32) / 2.0
+    vids = r.integers(0, max(2, S * k // 2), (S, Q, k)).astype(np.int32)
+    shard = np.broadcast_to(np.arange(S, dtype=np.int32)[:, None, None],
+                            (S, Q, k)).copy()
+    return s, vids, shard
+
+
+_MERGE_CASES = [(1, 1, 1, 0), (2, 3, 2, 1), (3, 5, 3, 2), (8, 2, 4, 3),
+                (4, 7, 2, 4), (5, 4, 1, 5)]
+_merge_strategies = (st.integers(1, 8), st.integers(1, 8),
+                     st.integers(1, 4), st.integers(0, 10**6)) \
+    if HAVE_HYPOTHESIS else ()
+
+
+@_fuzz(_MERGE_CASES, *_merge_strategies)
+def test_merge_stacked_topk_is_stable_sort_of_shard_major_concat(
+        S, Q, k, seed):
+    """The oracle's winners are exactly the first k of a *stable*
+    descending sort over the shard-major concat: ties resolve to the
+    earliest (shard, candidate) position, never arbitrarily — the
+    property that makes the collective and stacked forms comparable
+    bit-for-bit at all."""
+    s, vids, _ = _tied_candidates(S, Q, k, seed)
+    sm, pm = merge_stacked_topk(k, jnp.asarray(s), jnp.asarray(vids))
+    sm, pm = np.asarray(sm), np.asarray(pm)
+    flat_s = np.moveaxis(s, 0, 1).reshape(Q, S * k)
+    flat_p = np.moveaxis(vids, 0, 1).reshape(Q, S * k)
+    for row in range(Q):
+        order = np.argsort(-flat_s[row], kind="stable")[:k]
+        np.testing.assert_array_equal(sm[row], flat_s[row][order],
+                                      err_msg=f"row {row} scores")
+        np.testing.assert_array_equal(pm[row], flat_p[row][order],
+                                      err_msg=f"row {row} payload")
+        assert (np.diff(sm[row]) <= 0).all()       # descending output
+
+
+@_fuzz(_MERGE_CASES, *_merge_strategies)
+def test_merge_payload_columns_stay_aligned_under_duplicate_vids(
+        S, Q, k, seed):
+    """With the same value id living on several shards at different
+    scores, every payload column must be gathered with the *same*
+    winner indices: each output (score, vid, shard) triple is a triple
+    that actually co-occurred at one input position (no cross-shard
+    recombination), and re-merging the merged result is the identity."""
+    s, vids, shard = _tied_candidates(S, Q, k, seed)
+    sm, pm_v, pm_s = merge_stacked_topk(
+        k, jnp.asarray(s), jnp.asarray(vids), jnp.asarray(shard))
+    sm, pm_v, pm_s = (np.asarray(x) for x in (sm, pm_v, pm_s))
+    for row in range(Q):
+        for c in range(k):
+            sh = int(pm_s[row, c])
+            assert any(s[sh, row, cc] == sm[row, c]
+                       and vids[sh, row, cc] == pm_v[row, c]
+                       for cc in range(k)), \
+                (f"row {row} col {c}: (score {sm[row, c]}, vid "
+                 f"{pm_v[row, c]}) never co-occurred on shard {sh}")
+    # idempotence: the merged panel, treated as one shard, re-merges
+    # to itself (top-k of an already sorted panel is a prefix copy)
+    sm2, pv2, ps2 = merge_stacked_topk(
+        k, jnp.asarray(sm[None]), jnp.asarray(pm_v[None]),
+        jnp.asarray(pm_s[None]))
+    np.testing.assert_array_equal(np.asarray(sm2), sm)
+    np.testing.assert_array_equal(np.asarray(pv2), pm_v)
+    np.testing.assert_array_equal(np.asarray(ps2), pm_s)
+
+
+@pytest.mark.parametrize("S", [1, 2])
+def test_merge_local_topk_collective_matches_oracle_under_ties(S):
+    """The all-gather form picks identical winners on tie-heavy,
+    duplicate-vid candidates — the exact inputs where an unstable
+    merge would diverge between the distributed and oracle paths."""
+    _need_devices(S)
+    Q, k = 5, 3
+    s, vids, shard = _tied_candidates(S, Q, k, seed=9)
+    sm_o, pv_o, ps_o = merge_stacked_topk(
+        k, jnp.asarray(s), jnp.asarray(vids), jnp.asarray(shard))
+    mesh = make_host_mesh(1, S)
+    fn = shard_map(
+        lambda sl, vl, hl: merge_local_topk(
+            "model", k, sl.reshape(Q, k), vl.reshape(Q, k),
+            hl.reshape(Q, k)),
+        mesh=mesh, in_specs=(P("model"), P("model"), P("model")),
+        out_specs=(P(), P(), P()), check_rep=False)
+    sm_c, pv_c, ps_c = jax.jit(fn)(jnp.asarray(s), jnp.asarray(vids),
+                                   jnp.asarray(shard))
+    np.testing.assert_array_equal(np.asarray(sm_c), np.asarray(sm_o))
+    np.testing.assert_array_equal(np.asarray(pv_c), np.asarray(pv_o))
+    np.testing.assert_array_equal(np.asarray(ps_c), np.asarray(ps_o))
