@@ -53,4 +53,4 @@ for q, h, s, v in zip(paraphrases, plan.hit, plan.scores, plan.responses):
     print(f"  {'HIT ' if h else 'MISS'} score={s:.3f}  {q!r}"
           + (f" -> {v!r}" if h else ""))
 print(f"cache occupancy: {cache.occupancy:.1%}  "
-      f"stats: {cache.stats()}")
+      f"stats: {cache.stats_snapshot()}")

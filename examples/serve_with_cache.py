@@ -35,7 +35,10 @@ import time
 import jax
 import numpy as np
 
-from repro.cache_service import CacheService, EmbedderRefreshPolicy
+from repro.cache_service import (
+    CacheConfig, CacheService, EmbedderRefreshPolicy, LearningConfig,
+    TieringConfig,
+)
 from repro.configs import ASSIGNED_ARCHS, get_config
 from repro.core import EmbedderTrainer, FinetuneConfig, SemanticCache
 from repro.data import HashTokenizer, make_pair_dataset, make_query_stream
@@ -127,21 +130,23 @@ def main():
             synth_domain="medical", synth_min_pairs=128,
             recalibrate=True,
         ) if args.learned_embedder else None
-        cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
-                             warm_capacity=4096, n_clusters=32, bucket=256,
-                             n_probe=4, threshold=args.threshold,
-                             admission_margin=0.02, flush_size=128,
-                             fused=args.fused,
-                             background_rebuild=args.background_rebuild,
-                             learned_admission=args.learned_admission,
-                             embedder_trainer=trainer
-                             if args.learned_embedder else None,
-                             embedder_tokenizer=tok
-                             if args.learned_embedder else None,
-                             refresh_policy=refresh,
-                             cold_capacity=args.cold_capacity,
-                             warm_block=args.warm_block or None,
-                             telemetry=telemetry)
+        cache = CacheService(CacheConfig(
+            dim=enc_cfg.d_model, threshold=args.threshold,
+            admission_margin=0.02, telemetry=telemetry,
+            tiering=TieringConfig(
+                hot_capacity=512, warm_capacity=4096, n_clusters=32,
+                bucket=256, n_probe=4, flush_size=128, fused=args.fused,
+                background_rebuild=args.background_rebuild,
+                cold_capacity=args.cold_capacity,
+                warm_block=args.warm_block or None),
+            learning=LearningConfig(
+                learned_admission=args.learned_admission,
+                learned_embedder=args.learned_embedder,
+                embedder_trainer=trainer
+                if args.learned_embedder else None,
+                embedder_tokenizer=tok
+                if args.learned_embedder else None,
+                refresh_policy=refresh)))
         print(f"cascade path: {'fused kernel' if cache.fused else 'four-op'}"
               f" (backend {jax.default_backend()})")
     svc = CachedLLMService(trainer.make_embed_fn(tok), cache, engine, tok,
@@ -169,9 +174,11 @@ def main():
               f"({dt*1e3:.0f} ms)")
     total = time.perf_counter() - t0
 
-    # one unified snapshot: serving counters + backend tiers/admission
-    # counters + rebuild accounting, all from the protocol's stats()
+    # one unified snapshot: serving counters at the top level, the
+    # backend's stats_snapshot() sections nested under "backend" (the
+    # flat stats() view was removed in v2.0)
     st = svc.stats()
+    bk = st["backend"]
     print(f"\n=== serving summary ===")
     print(f"queries: {args.queries}  batches of {args.batch}")
     print(f"cache hits: {st['hits']}  misses: {st['misses']}  "
@@ -182,15 +189,16 @@ def main():
           f"({st['hits'] * args.max_new_tokens} decode steps)")
     print(f"wall time: {total:.1f}s  cache occupancy: {cache.occupancy:.1%}")
     if not args.flat:
-        print(f"tiers: hot hits {st['hot_hits']}  warm hits "
-              f"{st['warm_hits']}  demotions {st['demotions']}  "
-              f"rebuilds {st['rebuilds']} "
-              f"(background: {st['bg_rebuilds']}, last "
-              f"{st['last_rebuild_s'] * 1e3:.0f} ms, total "
-              f"{st['rebuild_total_s'] * 1e3:.0f} ms)")
-        print(f"admission skips: {st['admission_skips']}  "
-              f"responses GC'd: {st['evictions']}  live: "
-              f"{st['live_responses']}")
+        print(f"tiers: hot hits {bk['traffic']['hot_hits']}  warm hits "
+              f"{bk['traffic']['warm_hits']}  demotions "
+              f"{bk['tiers']['demotions']}  "
+              f"rebuilds {bk['rebuild']['rebuilds']} "
+              f"(background: {bk['rebuild']['shadow_started']}, last "
+              f"{bk['rebuild']['last_wall_s'] * 1e3:.0f} ms, total "
+              f"{bk['rebuild']['total_wall_s'] * 1e3:.0f} ms)")
+        print(f"admission skips: {bk['admission']['skipped']}  "
+              f"responses GC'd: {bk['tiers']['evictions']}  live: "
+              f"{bk['tiers']['live_responses']}")
         if args.cold_capacity:
             cd = cache.stats_snapshot().tiers["cold"]
             print(f"cold tier: {cd['cold_rows']} rows "
@@ -201,23 +209,25 @@ def main():
                   f"{cd['cold_promoted']}, final drops "
                   f"{cd['cold_dropped']}")
         if args.learned_admission:
-            print(f"learned admission: {st['refits_applied']} refits "
-                  f"from {st['feedback_events']} events "
-                  f"({st['duplicate_events']} duplicates, "
-                  f"{st['wasted_admissions']} wasted admissions)")
-            for t, pol in st["learned_policies"].items():
+            lrn = bk["learning"]
+            print(f"learned admission: {lrn['refits_applied']} refits "
+                  f"from {lrn['feedback_events']} events "
+                  f"({lrn['duplicate_events']} duplicates, "
+                  f"{lrn['wasted_admissions']} wasted admissions)")
+            for t, pol in lrn["learned_policies"].items():
                 print(f"  tenant {t}: threshold "
                       f"{pol['threshold']:.3f}  margin "
                       f"{pol['admission_margin']:.3f}")
         if args.learned_embedder:
             cache.maintenance(block=True)   # join an in-flight refresh
             st = svc.stats()
-            print(f"learned embedder: version {st['embed_version']} "
-                  f"({st['refreshes_published']} published, "
-                  f"{st['refreshes_rolled_back']} rolled back from "
-                  f"{st['refreshes_started']} started; "
-                  f"{st['pairs_held']} pairs pooled, "
-                  f"{st['stale_version_commits']} stale-version "
+            rf = st["backend"]["refresh"]
+            print(f"learned embedder: version {rf['embed_version']} "
+                  f"({rf['refreshes_published']} published, "
+                  f"{rf['refreshes_rolled_back']} rolled back from "
+                  f"{rf['refreshes_started']} started; "
+                  f"{rf['pairs_held']} pairs pooled, "
+                  f"{rf['stale_version_commits']} stale-version "
                   f"commits)")
 
     # --- telemetry: stage breakdown + SLO health (DESIGN.md §10) ------

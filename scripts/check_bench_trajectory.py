@@ -432,6 +432,138 @@ def compare(baseline: Dict[str, object], fresh: Dict[str, object],
     return violations, notes
 
 
+# Scenario macro-bench rows (DESIGN.md §14.1): the asserts the bench
+# owes, restated (this gate runs without PYTHONPATH=src and must not
+# import the bench it is judging — same rule as the stage list above).
+SCENARIO_OWED_ASSERTS = (
+    "scenario_zero_stale_serves",
+    "scenario_false_hit_budgets",
+    "drift_learned_threshold_leaks",
+    "drift_conformal_holds_budget",
+    "adversarial_must_miss_budget",
+    "ttl_expiry_enforced",
+    "ttl_prewindow_hits",
+)
+
+
+def compare_scenarios(baseline: Dict[str, object],
+                      fresh: Dict[str, object],
+                      p99_tolerance: float = 5.0,
+                      hit_eps: float = 0.05) -> Tuple[List[str],
+                                                      List[str]]:
+    """Gate over ``BENCH_scenarios.json`` (DESIGN.md §14.1):
+
+      * every baseline (scenario, mode) row must survive into the
+        fresh run;
+      * stale serves must be zero in every fresh row — TTL expiry is
+        correctness, not a trajectory;
+      * every conformal-mode row must hold its own committed
+        ``false_hit_budget``; the drift *learned* row must still LEAK
+        (over budget) — if it stops leaking the contrast scenario has
+        lost its teeth and the conformal claim is unfalsifiable;
+      * ``hit_rate`` must not fall more than ``hit_eps`` below the
+        baseline per row (an eviction/threshold bug shows up here
+        before anywhere else) — same-tier only: a ``--smoke`` run
+        replays shorter traces than the committed full sweep, so its
+        rates are not comparable row-for-row;
+      * ``p99_us_per_row`` ratios are bounded like the cascade p50s —
+        same-fleet, same-tier only, wide tolerance, order-of-magnitude
+        cliffs;
+      * the owed assert names must ALL appear in the fresh run's
+        ``checked_asserts`` — a ``--scenario`` subset run writes
+        structured skips, which a gated (full) run may never carry.
+    """
+    violations: List[str] = []
+    notes: List[str] = []
+
+    def rows_of(d):
+        return {(r["scenario"], r["mode"]): r for r in d.get("rows", [])}
+
+    base_rows, fresh_rows = rows_of(baseline), rows_of(fresh)
+    same_fleet = (baseline.get("backend") == fresh.get("backend")
+                  and baseline.get("devices") == fresh.get("devices"))
+    if not same_fleet:
+        notes.append(
+            f"scenario fleet mismatch (baseline "
+            f"{baseline.get('backend')}x{baseline.get('devices')} vs "
+            f"fresh {fresh.get('backend')}x{fresh.get('devices')}): "
+            "p99 ratios not compared")
+    same_tier = bool(baseline.get("smoke")) == bool(fresh.get("smoke"))
+    if not same_tier:
+        notes.append(
+            "scenario tier mismatch (baseline smoke="
+            f"{bool(baseline.get('smoke'))} vs fresh smoke="
+            f"{bool(fresh.get('smoke'))}): traces differ, hit_rate/p99 "
+            "not compared row-for-row (budgets/stale/asserts still "
+            "gated)")
+
+    for key, base in base_rows.items():
+        row = fresh_rows.get(key)
+        tag = "/".join(key)
+        if row is None:
+            violations.append(
+                f"scenario {tag}: row present in baseline but missing "
+                "from the fresh run (scenario dropped?)")
+            continue
+        if same_tier and row.get("hit_rate", 0.0) \
+                < base.get("hit_rate", 0.0) - hit_eps:
+            violations.append(
+                f"scenario {tag}: hit_rate regressed "
+                f"{base['hit_rate']:.3f} -> {row['hit_rate']:.3f} "
+                f"(eps {hit_eps})")
+        if same_fleet and same_tier and "p99_us_per_row" in base \
+                and base["p99_us_per_row"] > 0 \
+                and row.get("p99_us_per_row", 0.0) \
+                > base["p99_us_per_row"] * p99_tolerance:
+            violations.append(
+                f"scenario {tag}: plan p99 "
+                f"{row['p99_us_per_row']:.0f}us/row exceeds "
+                f"{p99_tolerance:.1f}x the baseline "
+                f"{base['p99_us_per_row']:.0f}us/row")
+
+    for key, row in fresh_rows.items():
+        tag = "/".join(key)
+        if row.get("stale_serves", 0) != 0:
+            violations.append(
+                f"scenario {tag}: {row['stale_serves']} stale serve(s) "
+                "— an expired entry was served")
+        budget = row.get("false_hit_budget")
+        rate = row.get("false_hit_rate", 0.0)
+        if key == ("drift", "learned"):
+            if budget is not None and rate <= budget:
+                violations.append(
+                    f"scenario {tag}: the fixed learned threshold no "
+                    f"longer leaks under drift ({rate:.4f} <= budget "
+                    f"{budget}) — the conformal contrast is "
+                    "unfalsifiable; retune the scenario")
+        elif budget is not None and rate > budget:
+            violations.append(
+                f"scenario {tag}: false-hit rate {rate:.4f} over the "
+                f"committed budget {budget}")
+
+    for key in sorted(set(fresh_rows) - set(base_rows)):
+        notes.append(f"scenario {'/'.join(key)}: new row "
+                     "(not in baseline)")
+
+    checked = set(fresh.get("checked_asserts", []))
+    skipped = {s.get("name"): s.get("reason", "")
+               for s in fresh.get("skipped_asserts", [])
+               if isinstance(s, dict)}
+    for name in SCENARIO_OWED_ASSERTS:
+        if name in checked:
+            continue
+        if name in skipped:
+            violations.append(
+                f"scenario asserts: {name} skipped "
+                f"({skipped[name]}) — a gated run must be a full "
+                "sweep, which owes every scenario assert")
+        else:
+            violations.append(
+                f"scenario asserts: {name} neither checked nor "
+                "skipped in the fresh run (assert site dropped?)")
+    return violations, notes
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", default="results/BENCH_cascade.json",
@@ -454,6 +586,19 @@ def main(argv=None) -> int:
                          "E-pass path on accelerator runs, stated at E=3 "
                          "(3/1.6 = 1.875 enforces the <=1.6x p50 bound) "
                          "and scaled linearly to each row's E")
+    ap.add_argument("--scenario-baseline",
+                    default="results/BENCH_scenarios.json",
+                    help="committed scenario macro-bench baseline "
+                         "(DESIGN.md §14.1)")
+    ap.add_argument("--scenario-fresh", default=None,
+                    help="JSON written by a fresh bench_scenarios run; "
+                         "when given, the scenario gate runs too")
+    ap.add_argument("--scenario-p99-tolerance", type=float, default=5.0,
+                    help="max fresh/baseline plan-p99 ratio per scenario "
+                         "row (same fleet only)")
+    ap.add_argument("--scenario-hit-eps", type=float, default=0.05,
+                    help="tolerated absolute hit_rate drop per scenario "
+                         "row vs baseline")
     args = ap.parse_args(argv)
 
     violations, notes = compare(load(args.baseline), load(args.fresh),
@@ -463,6 +608,15 @@ def main(argv=None) -> int:
                                 cold_hit_eps=args.cold_hit_eps,
                                 ensemble_speedup_min=args
                                 .ensemble_speedup_min)
+    n_rows = len(_rows(load(args.fresh)))
+    if args.scenario_fresh:
+        sv, sn = compare_scenarios(
+            load(args.scenario_baseline), load(args.scenario_fresh),
+            p99_tolerance=args.scenario_p99_tolerance,
+            hit_eps=args.scenario_hit_eps)
+        violations += sv
+        notes += sn
+        n_rows += len(load(args.scenario_fresh).get("rows", []))
     for n in notes:
         print(f"note: {n}")
     if violations:
@@ -471,8 +625,7 @@ def main(argv=None) -> int:
         print(f"perf trajectory gate: {len(violations)} violation(s)",
               file=sys.stderr)
         return 1
-    print("perf trajectory gate: clean "
-          f"({len(_rows(load(args.fresh)))} rows vs baseline)")
+    print(f"perf trajectory gate: clean ({n_rows} rows vs baseline)")
     return 0
 
 

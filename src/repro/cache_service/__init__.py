@@ -7,9 +7,13 @@ store primitives (repro.core) and the LLM engine (repro.serving).  The
 serving pipeline drives any backend through the typed ``CacheBackend``
 protocol (plan/commit lifecycle, DESIGN.md §7).
 """
+from repro.cache_service.config import (
+    CacheConfig, EnsembleConfig, LearningConfig, ShardingConfig,
+    StalenessConfig, TieringConfig,
+)
 from repro.cache_service.feedback import (
-    FeedbackAccumulator, FeedbackConfig, RefitReport, TenantReservoir,
-    record_refit,
+    ConformalWindow, FeedbackAccumulator, FeedbackConfig, RefitReport,
+    TenantReservoir, record_refit,
 )
 from repro.cache_service.feedback import PairReservoir
 from repro.cache_service.cold import ColdFetch, ColdTier, Promotion
@@ -21,20 +25,22 @@ from repro.cache_service.protocol import (
     CommitReceipt, MaintenanceReport, coalesce_misses, ungrouped_misses,
 )
 from repro.cache_service.service import (
-    CacheService, LegacyStatsView, ServiceStats,
+    CacheService, ServiceStats,
 )
 from repro.cache_service.tiers import (
     CascadeResult, Demoted, HotState, WarmState, cascade_lookup,
     cascade_query, demote_coldest, evict_tenant, hot_insert,
     hot_insert_batch, hot_query, hot_touch, init_hot, init_warm,
-    init_warm_sharded, place_warm_sharded, publish_reembedded_keys,
-    quantize_rows, requantize, stack_warm, warm_append,
-    warm_append_sharded, warm_occupancy, warm_publish_index, warm_query,
-    warm_rebuild, warm_rebuild_sharded,
+    init_warm_sharded, mask_expired, place_warm_sharded,
+    publish_reembedded_keys, quantize_rows, reap_expired, requantize,
+    stack_warm, warm_append, warm_append_sharded, warm_occupancy,
+    warm_publish_index, warm_query, warm_rebuild, warm_rebuild_sharded,
 )
 
 __all__ = [
-    "CacheService", "ServiceStats", "LegacyStatsView",
+    "CacheService", "ServiceStats",
+    "CacheConfig", "TieringConfig", "ShardingConfig", "LearningConfig",
+    "EnsembleConfig", "StalenessConfig", "ConformalWindow",
     "ColdFetch", "ColdRoutingPolicy", "ColdTier", "Promotion",
     "EmbedderRefreshPolicy", "PolicyTable", "TenantPolicy",
     "FeedbackAccumulator", "FeedbackConfig", "PairReservoir",
@@ -45,8 +51,9 @@ __all__ = [
     "CascadeResult", "Demoted", "HotState", "WarmState", "cascade_lookup",
     "cascade_query", "demote_coldest", "evict_tenant", "hot_insert",
     "hot_insert_batch", "hot_query", "hot_touch", "init_hot", "init_warm",
-    "init_warm_sharded", "place_warm_sharded", "publish_reembedded_keys",
-    "quantize_rows", "requantize", "stack_warm", "warm_append",
-    "warm_append_sharded", "warm_occupancy", "warm_publish_index",
-    "warm_query", "warm_rebuild", "warm_rebuild_sharded",
+    "init_warm_sharded", "mask_expired", "place_warm_sharded",
+    "publish_reembedded_keys", "quantize_rows", "reap_expired",
+    "requantize", "stack_warm", "warm_append", "warm_append_sharded",
+    "warm_occupancy", "warm_publish_index", "warm_query", "warm_rebuild",
+    "warm_rebuild_sharded",
 ]

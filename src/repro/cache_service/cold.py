@@ -82,6 +82,9 @@ class Promotion(NamedTuple):
     keys: np.ndarray         # (m, D) float32 dequantized keys
     value_ids: np.ndarray    # (m,) int32
     tenants: np.ndarray      # (m,) int32
+    expires: np.ndarray      # (m,) float32 remaining wall-clock expiry
+    #                          (+inf = no TTL) — a promoted row keeps the
+    #                          deadline it was demoted with (DESIGN.md §14)
 
 
 @functools.partial(jax.jit, static_argnames=())
@@ -142,6 +145,9 @@ class ColdTier:
         self.value_ids = np.full((capacity,), -1, np.int64)
         self.tenants = np.full((capacity,), -1, np.int32)
         self.valid = np.zeros((capacity,), bool)
+        # wall-clock expiry per row, +inf = no TTL (DESIGN.md §14); the
+        # column rides demotions down and promotions back up unchanged
+        self.expires_at = np.full((capacity,), np.inf, np.float32)
         self._cursor = 0
         # coarse routing state: centroids + incremental row assignment;
         # route_slack is the calibrated cluster spread the router gate
@@ -161,6 +167,7 @@ class ColdTier:
         self.n_promoted = 0
         self.n_router_skips = 0
         self.n_route_rebuilds = 0
+        self.n_expired_reaped = 0   # rows invalidated by reap_expired
 
     # ------------------------------------------------------------------
     # occupancy / introspection
@@ -190,22 +197,29 @@ class ColdTier:
     # writes: demotion insert / bulk load / eviction
     # ------------------------------------------------------------------
     def insert(self, keys_q: np.ndarray, scales: np.ndarray,
-               value_ids: np.ndarray, tenants: np.ndarray) -> np.ndarray:
+               value_ids: np.ndarray, tenants: np.ndarray,
+               expires: Optional[np.ndarray] = None) -> np.ndarray:
         """Ring-append pre-quantized rows (the warm ring's own int8
-        panel — demotion never re-quantizes).  Returns the value ids of
-        overwritten valid cold rows (the hierarchy's final drops) for
-        host GC; empty when the ring had room.
+        panel — demotion never re-quantizes).  ``expires`` is the
+        per-row wall-clock deadline riding the demotion (None = no
+        TTL).  Returns the value ids of overwritten valid cold rows
+        (the hierarchy's final drops) for host GC; empty when the ring
+        had room.
         """
         n = len(value_ids)
         if n == 0:
             return np.empty((0,), np.int64)
+        if expires is None:
+            expires = np.full((n,), np.inf, np.float32)
+        expires = np.asarray(expires, np.float32)
         if n > self.capacity:
             # only the last `capacity` rows can survive a ring this size
             drop_head = np.asarray(value_ids[:n - self.capacity], np.int64)
             tail = self.insert(keys_q[n - self.capacity:],
                                scales[n - self.capacity:],
                                value_ids[n - self.capacity:],
-                               tenants[n - self.capacity:])
+                               tenants[n - self.capacity:],
+                               expires[n - self.capacity:])
             self.n_dropped += len(drop_head)
             return np.concatenate([drop_head, tail])
         pos = (self._cursor + np.arange(n)) % self.capacity
@@ -219,6 +233,7 @@ class ColdTier:
         self.value_ids[pos] = value_ids
         self.tenants[pos] = tenants
         self.valid[pos] = True
+        self.expires_at[pos] = expires
         if self.centroids is not None:
             sims = (keys_q.astype(np.float32) * scales[:, None]) \
                 @ self.centroids.T
@@ -234,7 +249,8 @@ class ColdTier:
         return dropped
 
     def bulk_load(self, keys: np.ndarray, value_ids: np.ndarray,
-                  tenants: np.ndarray) -> np.ndarray:
+                  tenants: np.ndarray,
+                  expires: Optional[np.ndarray] = None) -> np.ndarray:
         """Quantize (the §8 path) and insert fp32 keys, then rebuild
         the routing — for benches/migration, not the serving path."""
         from repro.cache_service import tiers
@@ -243,7 +259,7 @@ class ColdTier:
         k8, sc = tiers.quantize_rows(jnp.asarray(kn))
         dropped = self.insert(np.asarray(k8), np.asarray(sc),
                               np.asarray(value_ids, np.int64),
-                              np.asarray(tenants, np.int32))
+                              np.asarray(tenants, np.int32), expires)
         self.rebuild_routes()
         return dropped
 
@@ -255,6 +271,19 @@ class ColdTier:
         self.valid[kill] = False
         for v in vids:
             self._promote.pop(int(v), None)
+        return vids
+
+    def reap_expired(self, now: float) -> np.ndarray:
+        """Invalidate TTL-expired cold rows and purge their pending
+        promotions (DESIGN.md §14) — the maintenance-tick counterpart
+        of the plan-time masking in ``lookup``.  Returns the freed
+        value ids for host GC."""
+        kill = self.valid & (self.expires_at <= np.float32(now))
+        vids = np.asarray(self.value_ids[kill], np.int64)
+        self.valid[kill] = False
+        for v in vids:
+            self._promote.pop(int(v), None)
+        self.n_expired_reaped += len(vids)
         return vids
 
     # ------------------------------------------------------------------
@@ -303,10 +332,14 @@ class ColdTier:
     # budgeted lookup
     # ------------------------------------------------------------------
     def lookup(self, qn: np.ndarray, q_tenants: np.ndarray,
-               thresholds: np.ndarray, need: np.ndarray) -> ColdFetch:
+               thresholds: np.ndarray, need: np.ndarray,
+               now: Optional[float] = None) -> ColdFetch:
         """Consult the cold tier for the ``need`` queries (warm/hot
         verdict below threshold).  Router rule, budgeted host gather,
-        one device re-score — see the module docstring."""
+        one device re-score — see the module docstring.  ``now`` masks
+        TTL-expired rows out of the candidate set (DESIGN.md §14): an
+        expired cold row can never be served, hit, or queued for
+        promotion; reclaiming its slot waits for ``reap_expired``."""
         qn = np.asarray(qn, np.float32)
         Q = qn.shape[0]
         out = ColdFetch(scores=np.full((Q,), NEG, np.float32),
@@ -315,7 +348,9 @@ class ColdTier:
                         consulted=np.zeros((Q,), bool),
                         fetched_rows=0, router_skips=0)
         need = np.asarray(need, bool)
-        if not need.any() or not self.valid.any():
+        live = self.valid if now is None \
+            else self.valid & (self.expires_at > np.float32(now))
+        if not need.any() or not live.any():
             return out
         pol = self.policy
         B = pol.fetch_budget
@@ -345,9 +380,9 @@ class ColdTier:
         if probes is not None:
             for c in np.unique(probes[sel]):
                 members[int(c)] = np.flatnonzero(
-                    self.valid & (self._assign == c))
+                    live & (self._assign == c))
         else:
-            members[-1] = np.flatnonzero(self.valid)
+            members[-1] = np.flatnonzero(live)
         slots = np.full((Q, B), -1, np.int64)
         fetched = 0
         for q in np.flatnonzero(sel):
@@ -415,7 +450,8 @@ class ColdTier:
         prom = Promotion(keys=keys.astype(np.float32),
                          value_ids=np.asarray([v for v, _ in taken],
                                               np.int32),
-                         tenants=self.tenants[slots].copy())
+                         tenants=self.tenants[slots].copy(),
+                         expires=self.expires_at[slots].copy())
         self.valid[slots] = False
         self.n_promoted += len(taken)
         return prom
@@ -436,4 +472,5 @@ class ColdTier:
             "cold_route_rebuilds": self.n_route_rebuilds,
             "cold_routed": self.centroids is not None,
             "cold_route_slack": round(self.route_slack, 4),
+            "cold_expired_reaped": self.n_expired_reaped,
         }

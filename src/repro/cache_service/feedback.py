@@ -84,6 +84,16 @@ class FeedbackConfig:
     # apply to the ensemble reservoirs too)
     weight_lambda: float = 0.05  # ridge regularizer (units of n events)
     max_weight_step: float = 0.1  # max per-component weight move / refit
+    # §14.3 conformal hit calibration: a per-tenant *recency window*
+    # (ring, newest-wins — deliberately not a reservoir: under drift
+    # the recent negative-score distribution is the one the budget
+    # must hold on) of observed negative (non-duplicate) scores.  The
+    # split-conformal floor is the ceil((n+1)(1-alpha))-th order
+    # statistic of the window: serving only above it bounds the
+    # false-hit rate on exchangeable recent negatives by alpha.
+    conformal_window: int = 256  # per-tenant recent negatives kept
+    conformal_min: int = 64      # no floor below this many samples
+    conformal_alpha: Optional[float] = None  # None -> max_false_hit_rate
     seed: int = 0
 
 
@@ -150,6 +160,42 @@ class EnsembleReservoir:
 
     def arrays(self) -> Tuple[np.ndarray, np.ndarray]:
         return self.scores[:self.fill], self.labels[:self.fill]
+
+
+class ConformalWindow:
+    """Per-tenant recency ring of observed **negative** scores — the
+    calibration set of the §14.3 split-conformal threshold floor.
+
+    A ring, not a reservoir: reservoirs keep every era of a drifting
+    stream represented (exactly what §9's estimators want), but the
+    conformal guarantee must hold on the *current* score distribution,
+    so the window keeps only the newest ``capacity`` negatives and
+    ages the old era out as drift feeds new ones in."""
+
+    def __init__(self, capacity: int):
+        self.capacity = int(capacity)
+        self.scores = np.zeros(self.capacity, np.float32)
+        self.fill = 0
+        self._pos = 0
+        self.seen = 0
+
+    def add(self, score: float) -> None:
+        self.scores[self._pos] = np.clip(score, -1.0, 1.0)
+        self._pos = (self._pos + 1) % self.capacity
+        self.fill = min(self.fill + 1, self.capacity)
+        self.seen += 1
+
+    def floor(self, alpha: float) -> float:
+        """The split-conformal threshold floor at miscoverage
+        ``alpha``: the ceil((n+1)(1-alpha))-th smallest window score
+        (clamped to the max for tiny alpha), nudged by an epsilon so
+        a score *equal* to the quantile still counts as a negative.
+        Serving hits only at scores >= floor bounds the false-hit
+        rate on exchangeable recent negatives by alpha."""
+        n = self.fill
+        s = np.sort(self.scores[:n])
+        rank = min(int(np.ceil((n + 1) * (1.0 - alpha))), n)
+        return float(s[rank - 1]) + 1e-6
 
 
 class TenantReservoir:
@@ -254,6 +300,7 @@ class FeedbackAccumulator:
         self._seen_at_fit: Dict[int, int] = {}
         self._ens: Dict[int, EnsembleReservoir] = {}        # §13
         self._ens_seen_at_fit: Dict[int, int] = {}
+        self._conf: Dict[int, ConformalWindow] = {}         # §14.3
         self.refit_log: List[RefitReport] = []
         self.weight_refit_log: List[WeightRefitReport] = []
         self.counters = {
@@ -262,6 +309,7 @@ class FeedbackAccumulator:
             "refits_applied": 0, "refits_skipped": 0,
             "ensemble_events": 0, "weight_refits_applied": 0,
             "weight_refits_skipped": 0,
+            "hit_audits": 0, "audited_false_hits": 0,
         }
 
     # ------------------------------------------------------------------
@@ -295,6 +343,8 @@ class FeedbackAccumulator:
             self.counters["duplicate_events"] += 1
             if admitted:
                 self.counters["wasted_admissions"] += 1
+        else:
+            self._conf_add(t, float(score))
 
     def observe_ensemble(self, tenant: int, panel_scores: np.ndarray,
                          duplicate: bool) -> None:
@@ -310,6 +360,53 @@ class FeedbackAccumulator:
                 self.config.reservoir, len(panel_scores), self._rng)
         res.add(panel_scores, bool(duplicate))
         self.counters["ensemble_events"] += 1
+
+    def observe_hit_audit(self, tenant: int, score: float,
+                          duplicate: bool) -> None:
+        """Post-hoc audit of a *served hit* (§14.3): the response
+        equality check ran offline (async audit pipeline, or the bench
+        generator's ground truth) and labeled the served answer.  The
+        §9 miss stream is censored above the threshold — hit rows are
+        served uninspected — so without this channel the conformal
+        window can never learn that scores *above* the current
+        threshold are producing false hits, which is exactly the drift
+        failure mode the floor exists to stop.  A false hit feeds the
+        window as a fresh negative (raising the floor); a confirmed
+        duplicate is a true hit and feeds nothing."""
+        self.counters["hit_audits"] += 1
+        if not duplicate:
+            self.counters["audited_false_hits"] += 1
+            self._conf_add(int(tenant), float(score))
+
+    def _conf_add(self, tenant: int, score: float) -> None:
+        win = self._conf.get(tenant)
+        if win is None:
+            win = self._conf[tenant] = ConformalWindow(
+                self.config.conformal_window)
+        win.add(score)
+
+    def conformal_floor(self, tenant: int) -> Optional[float]:
+        """This tenant's §14.3 split-conformal threshold floor, or
+        None while its window holds fewer than ``conformal_min``
+        recent negatives (no guarantee worth publishing)."""
+        win = self._conf.get(int(tenant))
+        if win is None or win.fill < self.config.conformal_min:
+            return None
+        alpha = self.config.conformal_alpha
+        if alpha is None:
+            alpha = self.config.max_false_hit_rate
+        return win.floor(float(alpha))
+
+    def conformal_state(self) -> Dict[str, object]:
+        """The §14.3 stats view: per-tenant window fills and active
+        floors, plus the audit counters."""
+        return {
+            "tenants": {t: {"fill": w.fill, "seen": w.seen,
+                            "floor": self.conformal_floor(t)}
+                        for t, w in sorted(self._conf.items())},
+            "hit_audits": self.counters["hit_audits"],
+            "audited_false_hits": self.counters["audited_false_hits"],
+        }
 
     def observe_hit_pair(self, query: str, neighbour: str) -> None:
         """A served hit is the strongest online duplicate evidence: the
@@ -337,6 +434,9 @@ class FeedbackAccumulator:
         # invalidates them exactly like the scalar reservoirs
         self._ens.clear()
         self._ens_seen_at_fit.clear()
+        # conformal windows are score-space too: a floor computed on
+        # old-version cosines is meaningless after the swap (§14.3)
+        self._conf.clear()
 
     # ------------------------------------------------------------------
     # refit scheduling
@@ -584,6 +684,8 @@ class FeedbackAccumulator:
                 self.counters["weight_refits_applied"],
             "weight_refits_skipped":
                 self.counters["weight_refits_skipped"],
+            "hit_audits": self.counters["hit_audits"],
+            "audited_false_hits": self.counters["audited_false_hits"],
         }
 
 

@@ -299,6 +299,25 @@ class PolicyTable:
         return np.asarray([self.get(t).threshold for t in tenants],
                           np.float32)
 
+    def effective_thresholds(self, tenants: np.ndarray,
+                             feedback=None) -> np.ndarray:
+        """Per-query serving thresholds with the §14.3 conformal floor
+        applied: ``max(policy threshold, conformal floor)`` per tenant.
+        The learned/configured threshold still *tightens* freely; the
+        floor only ever raises it — under drift the §9 refit can lag
+        (or loosen onto a stale reservoir) while the recency-window
+        floor tracks the current negative-score distribution, so the
+        false-hit budget holds through the transition.  ``feedback``
+        None (conformal off, or no accumulator) degrades to
+        ``thresholds_for``."""
+        thr = self.thresholds_for(tenants)
+        if feedback is None:
+            return thr
+        floors = np.asarray(
+            [f if (f := feedback.conformal_floor(t)) is not None
+             else -1.0 for t in tenants], np.float32)
+        return np.maximum(thr, floors)
+
     def admit_mask(self, tenants: np.ndarray,
                    scores: Optional[np.ndarray]) -> np.ndarray:
         """Admission decision per miss: True -> cache it."""

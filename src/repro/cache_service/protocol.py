@@ -38,7 +38,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import (
-    Dict, List, Optional, Protocol, Sequence, Tuple, Union,
+    List, Optional, Protocol, Sequence, Tuple, Union,
     runtime_checkable,
 )
 
@@ -73,6 +73,11 @@ class CacheCapabilities:
     #                                  embedder.  When > 0, requests carry
     #                                  (B, E, D) embeddings and plans carry
     #                                  per-embedder ``panel_scores``.
+    ttl: bool = False                # honours CacheRequest.ttl / default
+    #                                  TTL: expired rows masked at plan
+    #                                  time, reaped on maintenance (§14.2)
+    conformal: bool = False          # per-tenant conformal threshold
+    #                                  floor rides every plan (§14.3)
 
 
 # ---------------------------------------------------------------------------
@@ -95,12 +100,19 @@ class CacheRequest:
     tenants: np.ndarray              # (B,)  int32 tenant per row
     trace_id: int = 0
     texts: Optional[Tuple[str, ...]] = None   # raw query strings (§11)
+    ttl: Optional[np.ndarray] = None  # (B,) float32 seconds-to-live per
+    #                                   row (§14.2); +inf = never expire.
+    #                                   None defers to the backend's
+    #                                   configured default TTL.
 
     @classmethod
     def build(cls, embeddings, tenant: TenantArg = 0,
               trace_id: int = 0,
-              texts: Optional[Sequence[str]] = None) -> "CacheRequest":
-        """Normalize a scalar-or-array tenant argument to a (B,) row."""
+              texts: Optional[Sequence[str]] = None,
+              ttl=None) -> "CacheRequest":
+        """Normalize a scalar-or-array tenant argument to a (B,) row;
+        likewise a scalar-or-array ``ttl`` (seconds) to a (B,) float32
+        column (NaN rows fall back to no-TTL)."""
         embs = np.asarray(embeddings)
         t = np.asarray(tenant, np.int32)
         if t.ndim == 0:
@@ -111,8 +123,22 @@ class CacheRequest:
         if texts is not None and len(texts) != embs.shape[0]:
             raise ValueError(f"texts row {len(texts)} != batch "
                              f"({embs.shape[0]},)")
+        ttl_col = None
+        if ttl is not None:
+            ttl_col = np.asarray(ttl, np.float32)
+            if ttl_col.ndim == 0:
+                ttl_col = np.full(embs.shape[0], float(ttl_col),
+                                  np.float32)
+            if ttl_col.shape != (embs.shape[0],):
+                raise ValueError(f"ttl row {ttl_col.shape} != batch "
+                                 f"({embs.shape[0]},)")
+            ttl_col = np.where(np.isnan(ttl_col), np.inf, ttl_col)
+            if np.any(ttl_col <= 0):
+                raise ValueError("ttl must be positive seconds "
+                                 "(+inf/NaN = never expire)")
         return cls(embeddings=embs, tenants=t, trace_id=trace_id,
-                   texts=tuple(texts) if texts is not None else None)
+                   texts=tuple(texts) if texts is not None else None,
+                   ttl=ttl_col)
 
     def __len__(self) -> int:
         return int(self.embeddings.shape[0])
@@ -159,6 +185,8 @@ class CachePlan:
     # ensemble path.  Commit feeds them — with the duplicate verdict —
     # to the per-tenant mixture-weight learner.
     panel_scores: Optional[np.ndarray] = None
+    expired_masked: int = 0          # stored rows masked out of this
+    #                                  plan's view as TTL-expired (§14.2)
 
     def miss_rows(self) -> np.ndarray:
         return np.nonzero(~self.hit)[0]
@@ -210,6 +238,8 @@ class MaintenanceReport:
     embed_version: int = 0           # live embedder version after the call
     cold_promoted: int = 0           # re-hot rows promoted cold -> warm (§12)
     cold_route_rebuilt: bool = False  # cold routing re-fit this tick (§12)
+    expired_reaped: int = 0          # TTL-expired rows reaped from every
+    #                                  tier this tick (§14.2)
 
 
 @dataclass(frozen=True)
@@ -226,6 +256,8 @@ class CommitReceipt:
     embed_version: int = 0           # live embedder version at commit (§11)
     stale_version_skipped: int = 0   # rows rejected: plan embedded under an
                                      # older embedder version than is live
+    ttl_stamped: int = 0             # admitted rows carrying a finite
+                                     # expiry deadline (§14.2)
     maintenance: MaintenanceReport = field(default_factory=MaintenanceReport)
     commit_wall_s: float = 0.0       # host wall time of commit() (§10)
     trace_id: int = 0                # echoed from the request (§10.2)
@@ -253,7 +285,11 @@ class CacheBackend(Protocol):
 
     def maintenance(self, block: bool = False) -> MaintenanceReport: ...
 
-    def stats(self) -> Dict[str, object]: ...
+    def stats_snapshot(self) -> object: ...
+    # a structured snapshot: a mapping, or an object with ``to_dict()``
+    # (CacheService returns its typed ServiceStats; SemanticCache a
+    # plain section dict).  The v1 flat-key ``stats()`` view was
+    # removed in v2.0 (README migration table).
 
 
 # ---------------------------------------------------------------------------

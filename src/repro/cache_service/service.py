@@ -29,8 +29,9 @@ a shadow index builds on a host thread from a snapshot while lookups
 keep reading the published index, and ``maintenance()`` performs the
 atomic publish; the tail window covers every row appended since the
 *snapshot*, so recall never dips during the overlap.  The legacy
-``lookup(embs) / insert(embs, responses)`` calls remain as deprecated
-shims delegating to plan/commit.
+``lookup(embs) / insert(embs, responses)`` shims and the flat
+``stats()`` view were removed in v2.0 — callers use plan/commit and
+``stats_snapshot()`` (README has the migration table).
 """
 from __future__ import annotations
 
@@ -55,7 +56,7 @@ from repro.cache_service.policy import (
 )
 from repro.cache_service.protocol import (
     CacheCapabilities, CachePlan, CacheRequest, CommitReceipt,
-    MaintenanceReport, TenantArg, coalesce_misses, ungrouped_misses,
+    MaintenanceReport, coalesce_misses, ungrouped_misses,
 )
 from repro.core.calibration import Calibration
 from repro.obs import Telemetry
@@ -91,65 +92,26 @@ class ServiceStats:
         }
 
 
-class LegacyStatsView(dict):
-    """The pre-§10 flat ``stats()`` mapping, kept for one release.
-
-    **Removal: v2.0** — ``stats()`` and this view go away together;
-    migrate to ``CacheService.stats_snapshot()`` (typed,
-    schema-stable).  Reading a key through this view warns exactly once
-    per process (the flag is class-level, so a fleet of services emits
-    one warning, not one per instance or call).  Plain dict-copy
-    operations (``{**stats}``, ``dict(stats)``) do not warn — merging
-    the mapping forward is exactly what the serving engine does and is
-    not deprecated.
-    """
-    _warned = False
-
-    @classmethod
-    def _warn(cls) -> None:
-        if not cls._warned:
-            cls._warned = True
-            warnings.warn(
-                "CacheService.stats() flat keys are deprecated and will "
-                "be removed in v2.0; use stats_snapshot() (see "
-                "DESIGN.md §10.1 for the schema)",
-                DeprecationWarning, stacklevel=4)
-
-    def __getitem__(self, key):
-        self._warn()
-        return super().__getitem__(key)
-
-    def get(self, key, default=None):
-        self._warn()
-        return super().get(key, default)
-
-
 class CacheService:
     supports_tenants = True          # legacy sniffing hook; see DESIGN.md §7
+    _kwargs_warned = False           # one-release flat-kwargs shim flag
 
-    def __init__(self, dim: int, *, hot_capacity: int = 1024,
-                 warm_capacity: int = 16384, n_clusters: int = 64,
-                 bucket: int = 256, n_probe: int = 8, topk: int = 1,
-                 threshold: float = 0.85, admission_margin: float = 0.0,
-                 flush_watermark: float = 0.85,
-                 flush_size: Optional[int] = None, rebuild_every: int = 1,
-                 kmeans_iters: int = 4, seed: int = 0,
-                 fused: bool = False, background_rebuild: bool = False,
-                 mesh=None, shard_axis: str = "model",
-                 warm_dtype: str = "float32",
-                 learned_admission: bool = False,
-                 feedback_config: Optional[FeedbackConfig] = None,
-                 learned_embedder: bool = False,
-                 embedder_trainer=None, embedder_tokenizer=None,
-                 refresh_policy: Optional[EmbedderRefreshPolicy] = None,
-                 cold_capacity: int = 0,
-                 cold_policy: Optional[ColdRoutingPolicy] = None,
-                 warm_block: Optional[int] = None,
-                 embedders=None, ensemble_weights=None,
-                 telemetry: Optional[Telemetry] = None):
-        """Build the tiered service.
+    def __init__(self, config=None, **kwargs):
+        """Build the tiered service from a ``CacheConfig``.
 
-        Tail invariant (see ``tiers.warm_query``): rows demoted into the
+        ``config`` is the typed v2 surface (`cache_service/config.py`):
+        top-level operating point plus grouped sub-configs — tiering,
+        sharding, learning, ensemble, staleness.  The pre-v2 flat
+        keyword form ``CacheService(dim=..., hot_capacity=..., ...)``
+        still works for one release: it warns once per process and
+        maps onto the config via ``CacheConfig.from_kwargs`` (README
+        migration table).
+
+        Feature semantics (the prose below names the legacy flat
+        keywords; each lives on the sub-config given in parentheses).
+
+        Tail invariant (``TieringConfig``; see ``tiers.warm_query``):
+        rows demoted into the
         warm ring stay unindexed until the next IVF rebuild and are only
         reachable through the brute-force tail window over the last
         ``tail`` ring writes.  The window is sized
@@ -252,7 +214,64 @@ class CacheService:
         and ``embedders`` are mutually exclusive: the §11 refresh loop
         retrains the single pilot embedder, while ensemble candidates
         publish per panel.
+
+        ``StalenessConfig`` (§14.2) turns on TTL eviction: admitted
+        rows are stamped ``now + ttl`` (the request's per-row TTL, or
+        ``default_ttl``), expired rows are masked out of every tier's
+        plan-time view — hot, warm and cold, fused and unfused — and
+        reaped (slots + host strings freed) on the maintenance tick.
+        ``clock`` injects the time source for deterministic benches.
+
+        ``LearningConfig.conformal`` (§14.3) floors each tenant's
+        serving threshold at the split-conformal quantile of its
+        recent observed negatives, so the false-hit budget holds under
+        drift even while the §9 learned threshold lags or loosens.
         """
+        from repro.cache_service.config import CacheConfig
+        if isinstance(config, CacheConfig):
+            if kwargs:
+                raise TypeError(
+                    f"CacheConfig construction takes no extra kwargs: "
+                    f"{sorted(kwargs)}")
+            cfg = config
+        else:
+            if config is not None:           # legacy positional dim
+                kwargs.setdefault("dim", config)
+            if "dim" not in kwargs:
+                raise TypeError("CacheService needs a CacheConfig "
+                                "(or the legacy dim=... kwargs form)")
+            if not CacheService._kwargs_warned:
+                CacheService._kwargs_warned = True
+                warnings.warn(
+                    "flat-kwargs CacheService(...) construction is "
+                    "deprecated and will be removed next release; "
+                    "build a CacheConfig (cache_service/config.py) — "
+                    "see the README migration table",
+                    DeprecationWarning, stacklevel=2)
+            cfg = CacheConfig.from_kwargs(kwargs.pop("dim"), **kwargs)
+        self.config = cfg
+        tc, shc, lc = cfg.tiering, cfg.sharding, cfg.learning
+        ec, stc = cfg.ensemble, cfg.staleness
+        dim = cfg.dim
+        topk, threshold = cfg.topk, cfg.threshold
+        admission_margin, seed = cfg.admission_margin, cfg.seed
+        telemetry = cfg.telemetry
+        hot_capacity, warm_capacity = tc.hot_capacity, tc.warm_capacity
+        n_clusters, bucket, n_probe = tc.n_clusters, tc.bucket, tc.n_probe
+        flush_watermark, flush_size = tc.flush_watermark, tc.flush_size
+        rebuild_every, kmeans_iters = tc.rebuild_every, tc.kmeans_iters
+        fused, background_rebuild = tc.fused, tc.background_rebuild
+        warm_dtype, warm_block = tc.warm_dtype, tc.warm_block
+        cold_capacity, cold_policy = tc.cold_capacity, tc.cold_policy
+        mesh, shard_axis = shc.mesh, shc.shard_axis
+        learned_admission = lc.learned_admission
+        feedback_config = lc.feedback
+        learned_embedder = lc.learned_embedder
+        embedder_trainer = lc.embedder_trainer
+        embedder_tokenizer = lc.embedder_tokenizer
+        refresh_policy = lc.refresh_policy
+        embedders, ensemble_weights = ec.embedders, ec.weights
+
         sharded = mesh is not None
         shards = int(mesh.shape[shard_axis]) if sharded else 1
         if embedders is None:
@@ -373,7 +392,8 @@ class CacheService:
         # texts feed the pooled pair reservoir
         self.feedback: Optional[FeedbackAccumulator] = \
             FeedbackAccumulator(feedback_config) \
-            if self.learned_admission or learned_embedder else None
+            if (self.learned_admission or learned_embedder
+                or lc.conformal) else None
         self.responses: Dict[int, str] = {}
         # raw query text per admitted value id (§11): re-embedding a
         # stored key under a refreshed embedder needs its original text
@@ -395,6 +415,20 @@ class CacheService:
         self._n_plans = 0
         self._n_evictions = 0
         self._n_demoted_cold = 0
+        # §14.2 TTL/staleness: masking only activates once any finite
+        # deadline exists (default_ttl configured, or a request carried
+        # one) — TTL-free services never pay the plan-time mask
+        self.default_ttl = stc.default_ttl
+        # deadlines live in float32 device arrays, where wall-clock
+        # epoch seconds (~1.8e9) quantize to ~256s steps — coarser
+        # than any sane TTL.  All internal times are therefore
+        # *relative* to the clock's value at construction.
+        raw_clock = stc.clock if stc.clock is not None else time.time
+        t0 = float(raw_clock())
+        self._clock = lambda: float(raw_clock()) - t0
+        self._ttl_active = stc.default_ttl is not None
+        # §14.3 conformal hit calibration (needs the feedback stream)
+        self.conformal = bool(lc.conformal)
         self.telemetry = telemetry if telemetry is not None else Telemetry()
         if self.telemetry.health is not None and self.feedback is not None:
             fb_cfg = self.feedback.config
@@ -470,6 +504,17 @@ class CacheService:
         self._c_refresh_started = c_ref.labels(outcome="started")
         self._c_refresh_published = c_ref.labels(outcome="published")
         self._c_refresh_rolled_back = c_ref.labels(outcome="rolled_back")
+        self._c_ttl_stamped = reg.counter(
+            "cache_ttl_stamped_total",
+            "admitted rows stamped with a finite expiry (§14.2)").labels()
+        self._c_expired_masked = reg.counter(
+            "cache_expired_masked_total",
+            "TTL-expired rows masked out of plan-time tier views "
+            "(§14.2)").labels()
+        self._c_expired_reaped = reg.counter(
+            "cache_expired_reaped_total",
+            "TTL-expired rows reaped by maintenance() across all "
+            "tiers (§14.2)").labels()
 
         # double-buffer state: the shadow thread re-clusters a snapshot;
         # the host publishes (atomic _replace of the index leaves) from
@@ -496,6 +541,8 @@ class CacheService:
                                             iters=kmeans_iters, seed=seed))
         self._evict_tenant = jax.jit(tiers.evict_tenant)
         self._publish_keys = jax.jit(tiers.publish_reembedded_keys)
+        self._mask_expired = jax.jit(tiers.mask_expired)
+        self._reap_expired = jax.jit(tiers.reap_expired)
         if self.ens is not None:
             self._ens_insert = jax.jit(tiers.ensemble_hot_insert_batch)
             self._coldest = jax.jit(partial(tiers.coldest_slots,
@@ -596,7 +643,8 @@ class CacheService:
                                  learned_admission=self.learned_admission,
                                  learned_embedder=self.trainer is not None,
                                  cold_tier=self.cold is not None,
-                                 ensemble=self.n_embedders)
+                                 ensemble=self.n_embedders,
+                                 ttl=True, conformal=self.conformal)
 
     def plan(self, request: CacheRequest, *,
              coalesce: bool = True) -> CachePlan:
@@ -606,7 +654,24 @@ class CacheService:
         caller won't use it — the legacy lookup shim does)."""
         t0 = time.perf_counter()
         qt = request.tenants
-        thr = self.policies.thresholds_for(qt)
+        # §14.3: the conformal floor rides every threshold resolution —
+        # a tenant whose recent negatives crowd the learned threshold
+        # serves strictly above them, budget held even mid-drift
+        thr = self.policies.effective_thresholds(
+            qt, self.feedback if self.conformal else None)
+        # §14.2: expired rows are masked out of this plan's *view* of
+        # the tiers (valid &= not-expired, before the jitted cascade —
+        # elementwise, so fused/unfused/sharded/ensemble all inherit
+        # it); the slots themselves are reclaimed by maintenance()
+        now = float(self._clock()) if self._ttl_active else None
+        hot_view, warm_view = self.hot, self.warm
+        n_masked = 0
+        if now is not None:
+            hot_view, warm_view, nm = self._mask_expired(
+                self.hot, self.warm, now)
+            n_masked = int(nm)
+            if n_masked:
+                self._c_expired_masked.inc(n_masked)
         panel_scores = None
         if self.ens is not None:
             # §13: one fused pass over all E panels; the pilot slice
@@ -619,14 +684,14 @@ class CacheService:
                     f" embeddings, got {emb_np.shape}")
             pilot = emb_np[:, 0]
             weights = self.policies.weights_for(qt, self.n_embedders)
-            res = self._ens_lookup(self.hot, self.warm, self.ens,
+            res = self._ens_lookup(hot_view, warm_view, self.ens,
                                    jnp.asarray(emb_np),
                                    jnp.asarray(weights), jnp.asarray(qt),
                                    jnp.asarray(thr))
             panel_scores = np.asarray(res.panel_scores)
         else:
             pilot = np.asarray(request.embeddings)
-            res = self._lookup(self.hot, self.warm, jnp.asarray(pilot),
+            res = self._lookup(hot_view, warm_view, jnp.asarray(pilot),
                                jnp.asarray(qt), jnp.asarray(thr))
         self.hot = self._touch(self.hot, res.hot_slots, res.hot_hit)
         hit = np.asarray(res.hit)
@@ -649,7 +714,8 @@ class CacheService:
             qn = qn / np.maximum(
                 np.linalg.norm(qn, axis=1, keepdims=True), 1e-9)
             cf = self.cold.lookup(qn, np.asarray(qt),
-                                  np.asarray(thr, np.float32), ~hit)
+                                  np.asarray(thr, np.float32), ~hit,
+                                  now=now)
             self._stage_h.observe(time.perf_counter() - tc,
                                   stage="cold_fetch",
                                   tenant=tenant_label(qt))
@@ -681,7 +747,7 @@ class CacheService:
             margins=np.asarray(thr, np.float32) - scores,
             top_value_ids=vids, plan_wall_s=wall,
             embed_version=self._embed_version,
-            panel_scores=panel_scores)
+            panel_scores=panel_scores, expired_masked=n_masked)
 
     def commit(self, plan: CachePlan,
                responses: Sequence[Optional[str]]) -> CommitReceipt:
@@ -738,7 +804,28 @@ class CacheService:
                                        tenant=int(tid), decision="skipped")
         evicted_before = self._n_evictions
         demoted_cold_before = self._n_demoted_cold
+        n_ttl = 0
         if len(rows):
+            # §14.2: stamp each admitted row's expiry deadline — the
+            # request's per-row TTL wins, else the configured default,
+            # else +inf (never expires).  The first finite deadline
+            # activates plan-time masking for the service's lifetime.
+            if plan.request.ttl is not None:
+                ttl_rows = np.asarray(plan.request.ttl, np.float32)[rows]
+            else:
+                ttl_rows = np.full(
+                    len(rows),
+                    np.inf if self.default_ttl is None
+                    else float(self.default_ttl), np.float32)
+            expires = np.full(len(rows), np.inf, np.float32)
+            fin = np.isfinite(ttl_rows)
+            if fin.any():
+                expires[fin] = np.float32(float(self._clock())) \
+                    + ttl_rows[fin]
+            n_ttl = int((fin & np.asarray(admit, bool)).sum())
+            if n_ttl:
+                self._ttl_active = True
+                self._c_ttl_stamped.inc(n_ttl)
             if self.ens is not None:
                 # (B, E, D) rows: the base insert takes the pilot slice,
                 # the mirrored panels take the same slot (§13)
@@ -746,12 +833,14 @@ class CacheService:
                     self.hot, self.ens,
                     jnp.asarray(plan.request.embeddings[rows]),
                     jnp.asarray(vids, dtype=jnp.int32),
-                    jnp.asarray(plan.request.tenants[rows]))
+                    jnp.asarray(plan.request.tenants[rows]),
+                    jnp.asarray(expires))
             else:
                 self.hot, evicted = self._insert(
                     self.hot, jnp.asarray(plan.request.embeddings[rows]),
                     jnp.asarray(vids, dtype=jnp.int32),
-                    jnp.asarray(plan.request.tenants[rows]))
+                    jnp.asarray(plan.request.tenants[rows]),
+                    jnp.asarray(expires))
             self._gc(evicted)
             self._maybe_flush()
         wall = time.perf_counter() - t0
@@ -771,6 +860,7 @@ class CacheService:
             commit_wall_s=wall, trace_id=plan.request.trace_id,
             embed_version=self._embed_version,
             stale_version_skipped=n_stale_ver,
+            ttl_stamped=n_ttl,
             demoted_cold=self._n_demoted_cold - demoted_cold_before,
             cold_maintenance_due=self.cold is not None
             and self.cold.maintenance_due)
@@ -838,6 +928,20 @@ class CacheService:
                 if rep.applied:
                     for e, w in enumerate(rep.new_weights):
                         wg.set(float(w), tenant=rep.tenant, embedder=e)
+        expired_reaped = 0
+        if self._ttl_active:
+            # §14.2 staleness reap: plan() only *masks* expired rows;
+            # this is where their slots and host strings are reclaimed.
+            # One jitted pass over both device tiers + the host cold
+            # scan, all off the serving path.
+            now = float(self._clock())
+            self.hot, self.warm, h_ev, w_ev = self._reap_expired(
+                self.hot, self.warm, now)
+            expired_reaped = self._gc(h_ev) + self._gc(w_ev)
+            if self.cold is not None:
+                expired_reaped += self._gc(self.cold.reap_expired(now))
+            if expired_reaped:
+                self._c_expired_reaped.inc(expired_reaped)
         cold_promoted = 0
         cold_route_rebuilt = False
         if self.cold is not None:
@@ -892,7 +996,8 @@ class CacheService:
             refresh_in_flight=self._refresh_thread is not None,
             refresh_wall_s=r_wall, embed_version=self._embed_version,
             cold_promoted=cold_promoted,
-            cold_route_rebuilt=cold_route_rebuilt)
+            cold_route_rebuilt=cold_route_rebuilt,
+            expired_reaped=expired_reaped)
 
     def stats_snapshot(self) -> ServiceStats:
         """The typed stats surface (DESIGN.md §10.1): every count read
@@ -934,6 +1039,16 @@ class CacheService:
             tiers_d["ensemble"] = self.n_embedders
         if self.cold is not None:
             tiers_d["cold"] = self.cold.stats()
+        if self._ttl_active:
+            tiers_d["staleness"] = {
+                "default_ttl": self.default_ttl,
+                "ttl_stamped": int(
+                    reg.value("cache_ttl_stamped_total")),
+                "expired_masked": int(
+                    reg.value("cache_expired_masked_total")),
+                "expired_reaped": int(
+                    reg.value("cache_expired_reaped_total")),
+            }
         rebuild = {
             "rebuilds": int(reg.value("cache_rebuilds_total")),
             "shadow_started": int(
@@ -948,6 +1063,8 @@ class CacheService:
             learning["learned_policies"] = self.policies.learned_state()
             if self.ens is not None:
                 learning["ensemble_weights"] = self.policies.weights_state()
+            if self.conformal:
+                learning["conformal"] = self.feedback.conformal_state()
         refresh = None
         if self.trainer is not None:
             refresh = {
@@ -973,69 +1090,6 @@ class CacheService:
                             admission=admission, tiers=tiers_d,
                             rebuild=rebuild, learning=learning,
                             health=health, refresh=refresh)
-
-    def stats(self) -> Dict[str, object]:
-        """Deprecated flat snapshot (one release): the pre-§10 key set,
-        now derived from ``stats_snapshot()``.  Key *access* through
-        the returned view warns; copying/merging it does not."""
-        s = self.stats_snapshot()
-        flat = {
-            "lookups": s.traffic["lookup_rows"],
-            "hot_hits": s.traffic["hot_hits"],
-            "warm_hits": s.traffic["warm_hits"],
-            "inserts": s.admission["admitted"],
-            "admission_skips": s.admission["skipped"],
-            "demotions": s.tiers["demotions"],
-            "rebuilds": s.rebuild["rebuilds"],
-            "bg_rebuilds": s.rebuild["shadow_started"],
-            "evictions": s.tiers["evictions"],
-            "plans": s.traffic["plans"],
-            "commits": s.traffic["commits"],
-            "stale_commits": s.traffic["stale_commits"],
-            "hot_occupancy": s.tiers["hot_occupancy"],
-            "warm_occupancy": s.tiers["warm_occupancy"],
-            "live_responses": s.tiers["live_responses"],
-            "rebuild_in_flight": s.rebuild["in_flight"],
-            "last_rebuild_s": s.rebuild["last_wall_s"],
-            "rebuild_total_s": s.rebuild["total_wall_s"],
-            "warm_shards": s.tiers["warm_shards"],
-            "warm_dtype": s.tiers["warm_dtype"],
-        }
-        if s.learning is not None:
-            flat.update(s.learning)
-        if s.refresh is not None:
-            flat.update(s.refresh)
-        return LegacyStatsView(flat)
-
-    # ------------------------------------------------------------------
-    # legacy serving surface (deprecated shims over plan/commit)
-    # ------------------------------------------------------------------
-    def lookup(self, embs, tenant: TenantArg = 0
-               ) -> Tuple[np.ndarray, np.ndarray, List[Optional[str]]]:
-        """Deprecated: use ``plan``.  embs: (B, D).  Returns
-        (hit (B,) bool, score (B,), values)."""
-        warnings.warn("CacheService.lookup is deprecated; use "
-                      "plan(CacheRequest)", DeprecationWarning, stacklevel=2)
-        plan = self.plan(CacheRequest.build(np.asarray(embs), tenant),
-                         coalesce=False)
-        return plan.hit, plan.scores, plan.responses
-
-    def insert(self, embs, responses: Sequence[str], tenant: TenantArg = 0,
-               scores: Optional[np.ndarray] = None) -> int:
-        """Deprecated: use ``commit`` on a plan.  Caches miss results;
-        ``scores`` (the best same-tenant score each query saw at lookup)
-        enables the admission rule; without it every entry is admitted.
-        Returns the number admitted."""
-        warnings.warn("CacheService.insert is deprecated; use "
-                      "commit(plan, responses)", DeprecationWarning,
-                      stacklevel=2)
-        embs = np.asarray(embs)
-        assert embs.shape[0] == len(responses)
-        req = CacheRequest.build(embs, tenant)
-        admit = self.policies.admit_mask(req.tenants, scores)
-        plan = CachePlan.for_insert(req, admit, scores, epoch=self._epoch,
-                                    embed_version=self._embed_version)
-        return self.commit(plan, list(responses)).admitted
 
     def evict_tenant(self, tenant: int) -> int:
         """Drop every entry of one tenant from both tiers; frees the
@@ -1421,7 +1475,8 @@ class CacheService:
                     np.asarray(self.warm.keys_q)[pos],
                     np.asarray(self.warm.scales)[pos],
                     np.asarray(self.warm.value_ids)[pos].astype(np.int64),
-                    np.asarray(self.warm.tenants)[pos])
+                    np.asarray(self.warm.tenants)[pos],
+                    expires=np.asarray(self.warm.expires_at)[pos])
                 self._c_ev_demoted.inc(len(pos))
                 self._n_demoted_cold += len(pos)
                 self._c_cold_evictions.inc(self._gc(dropped))
@@ -1443,6 +1498,7 @@ class CacheService:
             keys = np.asarray(prom.keys[lo:lo + m], np.float32)
             v = np.asarray(prom.value_ids[lo:lo + m], np.int32)
             t = np.asarray(prom.tenants[lo:lo + m], np.int32)
+            x = np.asarray(prom.expires[lo:lo + m], np.float32)
             pad = m - len(v)
             dem = tiers.Demoted(
                 keys=jnp.asarray(np.concatenate(
@@ -1452,7 +1508,9 @@ class CacheService:
                 tenants=jnp.asarray(np.concatenate(
                     [t, np.full(pad, -1, np.int32)])),
                 mask=jnp.asarray(np.concatenate(
-                    [np.ones(len(v), bool), np.zeros(pad, bool)])))
+                    [np.ones(len(v), bool), np.zeros(pad, bool)])),
+                expires=jnp.asarray(np.concatenate(
+                    [x, np.full(pad, np.inf, np.float32)])))
             self._capture_and_append(dem)
 
     def _do_flush(self, rebuild: bool) -> None:

@@ -61,6 +61,7 @@ class HotState(NamedTuple):
     inserted_at: jax.Array  # (N,) int32
     value_ids: jax.Array   # (N,)  int32 host-side response index
     clock: jax.Array       # ()    int32
+    expires_at: jax.Array  # (N,)  float32 wall-clock expiry, +inf = no TTL
 
 
 class WarmState(NamedTuple):
@@ -80,6 +81,7 @@ class WarmState(NamedTuple):
     indexed_total: jax.Array  # () int32: `total` at the last rebuild
     keys_q: jax.Array      # (Nw, D) int8 symmetric per-row quantization
     scales: jax.Array      # (Nw,) float32 per-row dequant scale
+    expires_at: jax.Array  # (Nw,) float32 wall-clock expiry, +inf = no TTL
 
 
 class Demoted(NamedTuple):
@@ -87,6 +89,9 @@ class Demoted(NamedTuple):
     value_ids: jax.Array   # (m,)
     tenants: jax.Array     # (m,)
     mask: jax.Array        # (m,) bool — False rows are padding
+    # per-row expiry riding along the demotion (None = no TTL anywhere,
+    # kept optional so TTL-free callers build Demoted unchanged)
+    expires: jax.Array | None = None
 
 
 class CascadeResult(NamedTuple):
@@ -114,6 +119,7 @@ def init_hot(capacity: int, dim: int) -> HotState:
         inserted_at=jnp.zeros((capacity,), jnp.int32),
         value_ids=jnp.full((capacity,), -1, jnp.int32),
         clock=jnp.zeros((), jnp.int32),
+        expires_at=jnp.full((capacity,), jnp.inf, jnp.float32),
     )
 
 
@@ -121,7 +127,7 @@ def hot_axes() -> HotState:
     """Logical sharding axes (encoded strings) for the hot pytree."""
     return HotState(keys="corpus,.", valid="corpus", tenants="corpus",
                     last_used="corpus", inserted_at="corpus",
-                    value_ids="corpus", clock="")
+                    value_ids="corpus", clock="", expires_at="corpus")
 
 
 def _choose_slot(state: HotState) -> jax.Array:
@@ -133,13 +139,18 @@ def _choose_slot(state: HotState) -> jax.Array:
 
 
 def hot_insert(state: HotState, emb: jax.Array, value_id: jax.Array,
-               tenant: jax.Array) -> Tuple[HotState, jax.Array]:
+               tenant: jax.Array, expires: jax.Array | None = None
+               ) -> Tuple[HotState, jax.Array]:
     """Insert one embedding; ``value_id < 0`` is an admission skip (no-op).
 
-    Returns (state, evicted_value_id) — the response id of an
-    overwritten valid slot (else -1) so the host can free its string.
+    ``expires`` (float32 wall-clock, None = +inf) stamps the row's TTL
+    deadline; `mask_expired` hides it at plan time and `reap_expired`
+    frees it on the maintenance tick.  Returns (state,
+    evicted_value_id) — the response id of an overwritten valid slot
+    (else -1) so the host can free its string.
     """
     emb = _unit(emb.astype(jnp.float32))
+    exp = jnp.asarray(jnp.inf if expires is None else expires, jnp.float32)
     slot = _choose_slot(state)
     clock = state.clock + 1
     skip = value_id < 0
@@ -152,6 +163,7 @@ def hot_insert(state: HotState, emb: jax.Array, value_id: jax.Array,
         inserted_at=state.inserted_at.at[slot].set(clock),
         value_ids=state.value_ids.at[slot].set(value_id.astype(jnp.int32)),
         clock=clock,
+        expires_at=state.expires_at.at[slot].set(exp),
     )
     state = jax.tree_util.tree_map(
         lambda old, upd: jnp.where(skip, old, upd), state, new)
@@ -159,15 +171,20 @@ def hot_insert(state: HotState, emb: jax.Array, value_id: jax.Array,
 
 
 def hot_insert_batch(state: HotState, embs: jax.Array, value_ids: jax.Array,
-                     tenants: jax.Array) -> Tuple[HotState, jax.Array]:
+                     tenants: jax.Array,
+                     expires: jax.Array | None = None
+                     ) -> Tuple[HotState, jax.Array]:
     """Sequential batch insert.  Returns (state, evicted (M,) int32)."""
+    if expires is None:
+        expires = jnp.full(embs.shape[:1], jnp.inf, jnp.float32)
 
     def body(s, xs):
-        e, vid, t = xs
-        s, ev = hot_insert(s, e, vid, t)
+        e, vid, t, exp = xs
+        s, ev = hot_insert(s, e, vid, t, exp)
         return s, ev
 
-    state, evicted = jax.lax.scan(body, state, (embs, value_ids, tenants))
+    state, evicted = jax.lax.scan(body, state,
+                                  (embs, value_ids, tenants, expires))
     return state, evicted
 
 
@@ -222,7 +239,8 @@ def demote_coldest(state: HotState, m: int) -> Tuple[HotState, Demoted]:
     new_valid = state.valid.at[idx].set(
         jnp.where(mask, False, state.valid[idx]))
     dem = Demoted(keys=state.keys[idx], value_ids=state.value_ids[idx],
-                  tenants=state.tenants[idx], mask=mask)
+                  tenants=state.tenants[idx], mask=mask,
+                  expires=state.expires_at[idx])
     return state._replace(valid=new_valid), dem
 
 
@@ -268,6 +286,7 @@ def init_warm(capacity: int, dim: int, n_clusters: int,
         indexed_total=jnp.zeros((), jnp.int32),
         keys_q=jnp.zeros((capacity, dim), jnp.int8),
         scales=jnp.zeros((capacity,), jnp.float32),
+        expires_at=jnp.full((capacity,), jnp.inf, jnp.float32),
     )
 
 
@@ -302,13 +321,21 @@ def place_warm_sharded(warm: WarmState, mesh, axis: str = "model"
         warm)
 
 
+def _dem_expires(dem: Demoted) -> jax.Array:
+    """The demoted batch's expiry column, defaulting to +inf (no TTL)."""
+    if dem.expires is None:
+        return jnp.full(dem.mask.shape, jnp.inf, jnp.float32)
+    return dem.expires.astype(jnp.float32)
+
+
 def warm_append(state: WarmState, dem: Demoted) -> Tuple[WarmState, jax.Array]:
     """Ring-buffer append of a demoted batch (m <= warm capacity).
 
     Returns (state, evicted (m,) int32) — response ids of overwritten
     ring slots, -1 padding.  Appended rows are unindexed until the next
     rebuild; `warm_query`'s tail window keeps them reachable.  The int8
-    panel (``keys_q``/``scales``) is maintained in the same update.
+    panel (``keys_q``/``scales``) and the TTL column (``expires_at``)
+    are maintained in the same update.
     """
     cap = state.keys.shape[0]
     offs = jnp.cumsum(dem.mask.astype(jnp.int32)) - 1              # (m,)
@@ -331,6 +358,8 @@ def warm_append(state: WarmState, dem: Demoted) -> Tuple[WarmState, jax.Array]:
         total=state.total + n,
         keys_q=state.keys_q.at[dest].set(k8, mode="drop"),
         scales=state.scales.at[dest].set(sc, mode="drop"),
+        expires_at=state.expires_at.at[dest].set(_dem_expires(dem),
+                                                 mode="drop"),
     ), evicted
 
 
@@ -346,6 +375,7 @@ def warm_append_sharded(state: WarmState, dem: Demoted
     if m % shards:
         raise ValueError(f"demoted batch {m} not divisible by "
                          f"{shards} shards")
+    dem = dem._replace(expires=_dem_expires(dem))
 
     def split(x):
         return jnp.swapaxes(x.reshape((m // shards, shards) + x.shape[1:]),
@@ -703,6 +733,47 @@ def evict_tenant(hot: HotState, warm: WarmState, tenant: jax.Array
 
 
 # ---------------------------------------------------------------------------
+# TTL / staleness (DESIGN.md §14)
+# ---------------------------------------------------------------------------
+
+def mask_expired(hot: HotState, warm: WarmState, now: jax.Array
+                 ) -> Tuple[HotState, WarmState, jax.Array]:
+    """Plan-time staleness mask: views of both tiers with every expired
+    row's ``valid`` bit cleared, so the cascade (fused or four-op,
+    sharded or not — the mask is elementwise and precedes the lookup)
+    can never serve a stale entry.  The underlying state is untouched;
+    `reap_expired` frees the rows on the maintenance tick.  Returns
+    (hot_view, warm_view, n_masked) where ``n_masked`` counts rows that
+    were valid but past their deadline.
+    """
+    now = jnp.asarray(now, jnp.float32)
+    h_live = hot.expires_at > now
+    w_live = warm.expires_at > now
+    n = (hot.valid & ~h_live).sum() + (warm.valid & ~w_live).sum()
+    return (hot._replace(valid=hot.valid & h_live),
+            warm._replace(valid=warm.valid & w_live),
+            n.astype(jnp.int32))
+
+
+def reap_expired(hot: HotState, warm: WarmState, now: jax.Array
+                 ) -> Tuple[HotState, WarmState, jax.Array, jax.Array]:
+    """Free every expired row in both tiers (the maintenance-tick side
+    of TTL, mirroring `evict_tenant`'s contract).
+
+    Returns (hot, warm, hot_reaped, warm_reaped) where the reaped
+    arrays are capacity-sized value-id lists (-1 padding) for host GC.
+    Works unchanged on the stacked (sharded) warm form.
+    """
+    now = jnp.asarray(now, jnp.float32)
+    h_kill = hot.valid & (hot.expires_at <= now)
+    w_kill = warm.valid & (warm.expires_at <= now)
+    h_ev = jnp.where(h_kill, hot.value_ids, -1)
+    w_ev = jnp.where(w_kill, warm.value_ids, -1)
+    return (hot._replace(valid=hot.valid & ~h_kill),
+            warm._replace(valid=warm.valid & ~w_kill), h_ev, w_ev)
+
+
+# ---------------------------------------------------------------------------
 # multi-embedder ensemble: E stacked key panels over the shared tiers
 # ---------------------------------------------------------------------------
 
@@ -788,7 +859,8 @@ def place_ensemble_sharded(ens: EnsembleState, mesh,
 
 def ensemble_hot_insert_batch(hot: HotState, ens: EnsembleState,
                               embs: jax.Array, value_ids: jax.Array,
-                              tenants: jax.Array
+                              tenants: jax.Array,
+                              expires: jax.Array | None = None
                               ) -> Tuple[HotState, EnsembleState, jax.Array]:
     """`hot_insert_batch` with the E panels mirrored: embs is (B, E, D)
     (panel 0 = pilot).  Each step recomputes `_choose_slot` on the
@@ -796,19 +868,21 @@ def ensemble_hot_insert_batch(hot: HotState, ens: EnsembleState,
     makes internally — and writes the full (E, D) row there, so the
     panels stay row-aligned with the base tier by construction.
     Returns (hot, ens, evicted (B,))."""
+    if expires is None:
+        expires = jnp.full(embs.shape[:1], jnp.inf, jnp.float32)
 
     def body(carry, xs):
         h, ehot = carry
-        emb, vid, t = xs                                  # (E, D), (), ()
+        emb, vid, t, exp = xs                             # (E, D), (), ()
         slot = _choose_slot(h)
-        h, ev = hot_insert(h, emb[0], vid, t)
+        h, ev = hot_insert(h, emb[0], vid, t, exp)
         en = _unit(emb.astype(jnp.float32))
         cur = ehot[:, slot]
         ehot = ehot.at[:, slot].set(jnp.where(vid < 0, cur, en))
         return (h, ehot), ev
 
     (hot, ehot), evicted = jax.lax.scan(
-        body, (hot, ens.hot_keys), (embs, value_ids, tenants))
+        body, (hot, ens.hot_keys), (embs, value_ids, tenants, expires))
     return hot, ens._replace(hot_keys=ehot), evicted
 
 
@@ -843,6 +917,7 @@ def ensemble_warm_append_sharded(ens: EnsembleState, warm: WarmState,
     if m % shards:
         raise ValueError(f"demoted batch {m} not divisible by "
                          f"{shards} shards")
+    dem = dem._replace(expires=_dem_expires(dem))
 
     def split(x):
         return jnp.swapaxes(x.reshape((m // shards, shards) + x.shape[1:]),

@@ -8,12 +8,15 @@ strings (which never live on device).
 Serving surface: the typed ``CacheBackend`` lifecycle (DESIGN.md §7) —
 ``plan(CacheRequest)`` answers the batch (read side: TTL sweep, exact
 query, LRU touch, response resolution, miss coalescing) and
-``commit(plan, responses)`` caches the generated misses.  The legacy
-two-call surface remains as deprecated shims:
+``commit(plan, responses)`` caches the generated misses:
 
     cache = SemanticCache(capacity=4096, dim=768, threshold=0.85)
-    hits, scores, values = cache.lookup(embeddings)     # (B, D)
-    cache.insert(miss_embeddings, miss_responses)
+    plan = cache.plan(CacheRequest.build(embeddings))    # (B, D)
+    cache.commit(plan, miss_responses)
+    cache.stats_snapshot()                               # flat dict
+
+(The pre-v2 ``lookup``/``insert``/``stats`` surface was removed in
+v2.0; the README has the migration table.)
 
 This backend is single-tenant (capabilities().tenants is False) and
 admits every miss (no admission policy); see
@@ -23,8 +26,7 @@ backend behind the same protocol.
 from __future__ import annotations
 
 import time
-import warnings
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -154,7 +156,9 @@ class SemanticCache:
         self._stage_h.observe(wall, stage="maintenance", tenant="-")
         return MaintenanceReport(wall_s=wall)
 
-    def stats(self) -> Dict[str, object]:
+    def stats_snapshot(self) -> Dict[str, object]:
+        """Flat backend snapshot: a plain dict (the protocol allows a
+        mapping or an object with ``to_dict()``)."""
         reg = self.telemetry.registry
         return {
             "lookups": int(reg.value("cache_lookup_rows_total")),
@@ -166,29 +170,6 @@ class SemanticCache:
             "occupancy": self.occupancy,
             "live_responses": len(self.responses),
         }
-
-    # ------------------------------------------------------------------
-    # legacy surface (deprecated shims over plan/commit)
-    # ------------------------------------------------------------------
-    def lookup(self, embs) -> Tuple[np.ndarray, np.ndarray, List[Optional[str]]]:
-        """Deprecated: use ``plan``.  embs: (B, D).  Returns
-        (hit (B,) bool, score (B,), values)."""
-        warnings.warn("SemanticCache.lookup is deprecated; use "
-                      "plan(CacheRequest)", DeprecationWarning, stacklevel=2)
-        plan = self.plan(CacheRequest.build(np.asarray(embs)),
-                         coalesce=False)
-        return plan.hit, plan.scores, plan.responses
-
-    def insert(self, embs, responses: Sequence[str]) -> None:
-        """Deprecated: use ``commit`` on a plan."""
-        warnings.warn("SemanticCache.insert is deprecated; use "
-                      "commit(plan, responses)", DeprecationWarning,
-                      stacklevel=2)
-        embs = np.asarray(embs)
-        assert embs.shape[0] == len(responses)
-        req = CacheRequest.build(embs)
-        plan = CachePlan.for_insert(req, np.ones(len(req), bool))
-        self.commit(plan, list(responses))
 
     # ------------------------------------------------------------------
     @property

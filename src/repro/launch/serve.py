@@ -44,6 +44,44 @@ from repro.obs import Telemetry, write_jsonl
 from repro.serving import CachedLLMService, ServeEngine
 
 
+def run_scenario(args):
+    """--scenario NAME: load the §14.1 trace generators by path (the
+    benchmarks tree is not a package) and replay one trace against a
+    fresh tiered cache under the trace's logical clock."""
+    import importlib.util
+    from pathlib import Path
+    bench = Path(__file__).resolve().parents[3] / "benchmarks" \
+        / "bench_scenarios.py"
+    spec = importlib.util.spec_from_file_location("bench_scenarios",
+                                                  bench)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    if args.scenario not in mod.SCENARIOS:
+        raise SystemExit(f"unknown scenario {args.scenario!r}; have "
+                         f"{sorted(mod.SCENARIOS)}")
+    trace = mod.build(args.scenario, smoke=args.smoke)
+    row = mod.replay(trace, conformal=args.conformal)
+    print(f"scenario {row['scenario']} ({row['mode']} mode): "
+          f"{row['n_queries']} queries over {row['n_steps']} steps")
+    print(f"  hit rate {row['hit_rate']:.3f}, false-hit rate "
+          f"{row['false_hit_rate']:.4f} (budget "
+          f"{row['false_hit_budget']}), stale serves "
+          f"{row['stale_serves']}")
+    print(f"  plan p50 {row['p50_us_per_row']:.0f} us/row, "
+          f"p99 {row['p99_us_per_row']:.0f} us/row "
+          f"({row['timed_batches']} timed batches)")
+    if row.get("ttl_stamped"):
+        print(f"  ttl: {row['ttl_stamped']} stamped, "
+              f"{row['expired_masked']} masked, "
+              f"{row['expired_reaped']} reaped")
+    if row.get("conformal_floors"):
+        floors = ", ".join(f"t{t}={v:.3f}"
+                           for t, v in sorted(row["conformal_floors"]
+                                              .items()))
+        print(f"  conformal: {row['hit_audits']} hits audited, "
+              f"{row['audited_false_hits']} false; floors {floors}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="phi3-mini-3.8b")
@@ -88,6 +126,22 @@ def main():
                          "serving feedback and hot-swap it with a "
                          "versioned shadow re-embed (DESIGN.md §11; "
                          "implies --tiered)")
+    ap.add_argument("--ttl", type=float, default=0.0, metavar="SECONDS",
+                    help="default TTL stamped on every admitted entry "
+                         "(0 = never expire); expired entries are masked "
+                         "at plan time and reaped on the maintenance "
+                         "tick (DESIGN.md §14.2; implies --tiered)")
+    ap.add_argument("--conformal", action="store_true",
+                    help="per-tenant split-conformal hit calibration: "
+                         "serve only above a recency-window quantile of "
+                         "observed negative scores, bounding the "
+                         "false-hit rate under drift (DESIGN.md §14.3; "
+                         "implies --tiered)")
+    ap.add_argument("--scenario", default=None, metavar="NAME",
+                    help="replay one benchmarks/scenarios.py trace "
+                         "against a fresh tiered cache under its logical "
+                         "clock and print the scored row (no LLM engine; "
+                         "DESIGN.md §14.1) — e.g. drift, ttl_churn")
     ap.add_argument("--metrics-json", default=None, metavar="PATH",
                     help="write the telemetry registry snapshot as "
                          "JSON-lines after the run (DESIGN.md §10.1; "
@@ -97,12 +151,15 @@ def main():
                     help="with --metrics-json: also append a snapshot "
                          "every N batches (0 = final snapshot only)")
     args = ap.parse_args()
+    if args.scenario:
+        return run_scenario(args)
     if args.metrics_json and not args.cache:
         ap.error("--metrics-json instruments the cached serving path; "
                  "add --cache")
     if args.cache_shards or args.warm_dtype != "float32" \
             or args.learned_admission or args.learned_embedder \
-            or args.cold_capacity or args.warm_block or args.ensemble:
+            or args.cold_capacity or args.warm_block or args.ensemble \
+            or args.ttl or args.conformal:
         args.tiered = True
     if args.cold_capacity and args.cache_shards:
         ap.error("--cold-capacity needs the unsharded warm ring; drop "
@@ -141,7 +198,11 @@ def main():
     trainer.fit(make_pair_dataset("medical", 512, seed=0), tok)
     telemetry = Telemetry()
     if args.tiered:
-        from repro.cache_service import CacheService, EmbedderRefreshPolicy
+        from repro.cache_service import (
+            CacheConfig, CacheService, EmbedderRefreshPolicy,
+            EnsembleConfig, LearningConfig, ShardingConfig,
+            StalenessConfig, TieringConfig,
+        )
         from repro.launch.mesh import make_cache_mesh
         mesh = make_cache_mesh(args.cache_shards) if args.cache_shards \
             else None
@@ -152,20 +213,26 @@ def main():
             synth_domain="medical", synth_min_pairs=128,
             recalibrate=True,
         ) if args.learned_embedder else None
-        cache = CacheService(dim=enc_cfg.d_model, hot_capacity=512,
-                             warm_capacity=4096, n_clusters=32, bucket=256,
-                             threshold=args.threshold, mesh=mesh,
-                             warm_dtype=args.warm_dtype,
-                             learned_admission=args.learned_admission,
-                             embedder_trainer=trainer
-                             if args.learned_embedder else None,
-                             embedder_tokenizer=tok
-                             if args.learned_embedder else None,
-                             refresh_policy=refresh,
-                             cold_capacity=args.cold_capacity,
-                             warm_block=args.warm_block or None,
-                             embedders=args.ensemble or None,
-                             telemetry=telemetry)
+        cache = CacheService(CacheConfig(
+            dim=enc_cfg.d_model, threshold=args.threshold,
+            telemetry=telemetry,
+            tiering=TieringConfig(hot_capacity=512, warm_capacity=4096,
+                                  n_clusters=32, bucket=256,
+                                  warm_dtype=args.warm_dtype,
+                                  warm_block=args.warm_block or None,
+                                  cold_capacity=args.cold_capacity),
+            sharding=ShardingConfig(mesh=mesh),
+            learning=LearningConfig(
+                learned_admission=args.learned_admission,
+                conformal=args.conformal,
+                learned_embedder=args.learned_embedder,
+                embedder_trainer=trainer
+                if args.learned_embedder else None,
+                embedder_tokenizer=tok
+                if args.learned_embedder else None,
+                refresh_policy=refresh),
+            ensemble=EnsembleConfig(embedders=args.ensemble or None),
+            staleness=StalenessConfig(default_ttl=args.ttl or None)))
         caps = cache.capabilities()
         print(f"tiered cache: warm shards "
               f"{cache.warm_shards if caps.warm_sharded else 0}, "
@@ -175,7 +242,9 @@ def main():
               f"{'on' if caps.learned_embedder else 'off'}, "
               f"cold tier {args.cold_capacity if caps.cold_tier else 0} "
               f"rows, ensemble "
-              f"{f'E={caps.ensemble}' if caps.ensemble else 'off'}")
+              f"{f'E={caps.ensemble}' if caps.ensemble else 'off'}, "
+              f"ttl {args.ttl or 'off'}, conformal "
+              f"{'on' if caps.conformal else 'off'}")
     else:
         cache = SemanticCache(capacity=4096, dim=enc_cfg.d_model,
                               threshold=args.threshold, telemetry=telemetry)
@@ -237,23 +306,36 @@ def main():
         ws = cache.policies.weights_state()
         print(f"ensemble: {cache.capabilities().ensemble} embedders, "
               f"{len(ws)} tenant(s) with learned mixture weights")
+    # backend sections nest under svc.stats()["backend"] since the flat
+    # stats() view was removed in v2.0
     if args.learned_admission:
-        st = svc.stats()
-        print(f"learned admission: {st['refits_applied']} refits from "
-              f"{st['feedback_events']} events "
-              f"({st['duplicate_events']} duplicates, "
-              f"{st['wasted_admissions']} wasted admissions); "
-              f"policies {st['learned_policies']}")
+        lrn = svc.stats()["backend"]["learning"]
+        print(f"learned admission: {lrn['refits_applied']} refits from "
+              f"{lrn['feedback_events']} events "
+              f"({lrn['duplicate_events']} duplicates, "
+              f"{lrn['wasted_admissions']} wasted admissions); "
+              f"policies {lrn['learned_policies']}")
     if args.learned_embedder:
-        st = svc.stats()
-        print(f"learned embedder: version {st['embed_version']} "
-              f"({st['refreshes_published']} published, "
-              f"{st['refreshes_rolled_back']} rolled back from "
-              f"{st['refreshes_started']} started; "
-              f"{st['pairs_held']} pairs pooled, "
-              f"{st['stale_version_commits']} stale-version commits; "
+        bk = svc.stats()["backend"]
+        rf, lrn = bk["refresh"], bk["learning"]
+        print(f"learned embedder: version {rf['embed_version']} "
+              f"({rf['refreshes_published']} published, "
+              f"{rf['refreshes_rolled_back']} rolled back from "
+              f"{rf['refreshes_started']} started; "
+              f"{rf['pairs_held']} pairs pooled, "
+              f"{rf['stale_version_commits']} stale-version commits; "
               f"recalibrated threshold "
-              f"{st['recalibrated_threshold']})")
+              f"{rf['recalibrated_threshold']})")
+    if args.ttl:
+        stl = cache.stats_snapshot().tiers["staleness"]
+        print(f"ttl: {stl['ttl_stamped']} stamped, "
+              f"{stl['expired_masked']} masked at plan time, "
+              f"{stl['expired_reaped']} reaped")
+    if args.conformal:
+        cs = cache.stats_snapshot().learning["conformal"]
+        print(f"conformal: {cs['hit_audits']} hit audits "
+              f"({cs['audited_false_hits']} false), "
+              f"{len(cs['tenants'])} tenant window(s)")
     if args.metrics_json:
         dump_metrics(args.requests // args.batch, append=wrote)
         print(f"metrics -> {args.metrics_json}")

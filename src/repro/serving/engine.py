@@ -117,7 +117,8 @@ class CachedLLMService:
             raise TypeError(
                 f"cache backend {type(cache).__name__} does not implement "
                 "the CacheBackend protocol (capabilities/plan/commit/"
-                "maintenance/stats); see repro.cache_service.protocol")
+                "maintenance/stats_snapshot); see "
+                "repro.cache_service.protocol")
         self.cache = cache
         self.caps = cache.capabilities()
         self.engine = engine
@@ -228,13 +229,16 @@ class CachedLLMService:
         return out  # type: ignore
 
     def stats(self) -> Dict[str, object]:
-        """Unified telemetry snapshot: the backend's counters (lookups,
-        hit tiers, admissions, rebuild timings) overlaid with the
-        serving counters — serving keys win collisions (a flat
-        backend's plan-level "hits" must not shadow the pipeline's).
-        All counts are read back from the shared registry."""
+        """Unified telemetry snapshot: the serving counters plus the
+        backend's ``stats_snapshot()`` nested under ``"backend"`` (the
+        protocol allows a mapping or a typed object with ``to_dict()``
+        — both normalise to a plain dict here).  Serving keys live at
+        the top level, so a backend's plan-level "hits" can never
+        shadow the pipeline's."""
         reg = self.telemetry.registry
-        return {**self.cache.stats(),
+        snap = self.cache.stats_snapshot()
+        backend = snap.to_dict() if hasattr(snap, "to_dict") else dict(snap)
+        return {"backend": backend,
                 "requests": int(reg.value("serve_requests_total")),
                 "hits": int(reg.value("serve_hits_total")),
                 "misses": int(reg.value("serve_misses_total")),

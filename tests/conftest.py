@@ -15,3 +15,31 @@ def rng():
 def _x64_off():
     # keep default f32 semantics everywhere
     yield
+
+
+# ---------------------------------------------------------------------------
+# plan/commit one-liners (the v2.0-removed lookup/insert shims, inlined
+# as test helpers — tests that only exercise tier mechanics keep their
+# two-call shape without resurrecting the deprecated surface)
+# ---------------------------------------------------------------------------
+
+def plan_lookup(svc, embs, tenant=0):
+    """(hit, scores, responses) via one uncoalesced plan()."""
+    from repro.cache_service.protocol import CacheRequest
+    plan = svc.plan(CacheRequest.build(np.asarray(embs), tenant),
+                    coalesce=False)
+    return plan.hit, plan.scores, plan.responses
+
+
+def commit_insert(svc, embs, responses, tenant=0, scores=None):
+    """Commit a batch as admitted misses; returns the number admitted.
+    ``scores`` (best same-tenant score at lookup) enables the
+    admission rule, as the old insert shim did."""
+    from repro.cache_service.protocol import CachePlan, CacheRequest
+    embs = np.asarray(embs)
+    assert embs.shape[0] == len(responses)
+    req = CacheRequest.build(embs, tenant)
+    admit = svc.policies.admit_mask(req.tenants, scores)
+    plan = CachePlan.for_insert(req, admit, scores, epoch=svc._epoch,
+                                embed_version=svc._embed_version)
+    return svc.commit(plan, list(responses)).admitted

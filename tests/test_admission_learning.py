@@ -228,7 +228,7 @@ def test_learned_admission_beats_fixed_on_drifting_stream():
     assert recall_learned >= recall_fixed - 0.02, \
         (recall_learned, recall_fixed)
     assert fh_learned <= max(1, fh_fixed), (fh_learned, fh_fixed)
-    st = svc.stats()
+    st = svc.stats_snapshot().learning
     assert st["refits_applied"] >= 1
     assert st["duplicate_events"] > 0
     assert svc.capabilities().learned_admission
@@ -254,7 +254,7 @@ def test_wasted_admissions_are_counted():
     plan = svc.plan(CacheRequest.build(near))
     assert not plan.hit[0]                   # strict threshold: a miss
     svc.commit(plan, ["same-answer"])        # ... with the same answer
-    st = svc.stats()
+    st = svc.stats_snapshot().learning
     assert st["duplicate_events"] == 1
     assert st["wasted_admissions"] == 1
     assert st["feedback_events"] == 2
@@ -301,7 +301,7 @@ def test_refit_via_continuous_batcher_maintenance():
     b.run(max_ticks=30)
     assert b.maintenance_runs > 0
     # the idle-tick hook applied a refit and reported it upward
-    assert svc.stats()["refits_applied"] >= 1
+    assert svc.stats_snapshot().learning["refits_applied"] >= 1
     assert b.last_maintenance is not None
     assert b.last_maintenance.refits_checked >= 0
     applied = [r for r in svc.feedback.refit_log if r.applied]
@@ -310,10 +310,10 @@ def test_refit_via_continuous_batcher_maintenance():
         for r in applied)
     # hysteresis under the hook: repeated ticks with no new evidence
     # must not keep republishing (interval / no-change guards)
-    n_applied = svc.stats()["refits_applied"]
+    n_applied = svc.stats_snapshot().learning["refits_applied"]
     for _ in range(5):
         svc.maintenance()
-    assert svc.stats()["refits_applied"] == n_applied
+    assert svc.stats_snapshot().learning["refits_applied"] == n_applied
 
 
 # ---------------------------------------------------------------------------

@@ -4,10 +4,10 @@ build, during the overlap (including extra demotion flushes), across
 the atomic publish, and under sustained traffic.  Also covers the
 maintenance obligations surfaced by CommitReceipt and the pipeline."""
 import threading
-import warnings
 
 import numpy as np
 import pytest
+from conftest import commit_insert, plan_lookup
 
 from repro.cache_service import CacheRequest, CacheService
 from repro.core.embedders import HashNgramEmbedder
@@ -47,15 +47,11 @@ def _gate_first_rebuild(svc):
 
 
 def _lookup(svc, keys, tenant=0):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return svc.lookup(keys, tenant=tenant)
+    return plan_lookup(svc, keys, tenant=tenant)
 
 
 def _insert(svc, keys, texts, tenant=0):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return svc.insert(keys, texts, tenant=tenant)
+    return commit_insert(svc, keys, texts, tenant=tenant)
 
 
 def test_mid_rebuild_lookup_reads_old_published_index():
@@ -67,8 +63,8 @@ def test_mid_rebuild_lookup_reads_old_published_index():
     _insert(svc, keys, [f"r{i}" for i in range(16)])
 
     svc.flush(rebuild=True)                    # starts the gated shadow
-    st = svc.stats()
-    assert st["rebuild_in_flight"] and st["bg_rebuilds"] == 1
+    st = svc.stats_snapshot().rebuild
+    assert st["in_flight"] and st["shadow_started"] == 1
     assert st["rebuilds"] == 0                 # nothing published yet
     idx_before = int(np.asarray(svc.warm.indexed_total))
 
@@ -86,14 +82,14 @@ def test_mid_rebuild_lookup_reads_old_published_index():
     svc.flush(rebuild=False)
     hit, _, _ = _lookup(svc, np.concatenate([keys, keys2]))
     assert hit.all()
-    assert svc.stats()["rebuild_in_flight"]    # still the same build
+    assert svc.stats_snapshot().rebuild["in_flight"]   # same build
 
     gate.set()
     rep = svc.maintenance(block=True)
     assert rep.rebuild_published and not rep.rebuild_in_flight
     assert rep.rebuild_wall_s > 0
-    st = svc.stats()
-    assert st["rebuilds"] == 1 and not st["rebuild_in_flight"]
+    st = svc.stats_snapshot().rebuild
+    assert st["rebuilds"] == 1 and not st["in_flight"]
     # the publish kept indexed_total at the SNAPSHOT's total: rows
     # appended during the overlap stay in the tail window
     assert int(np.asarray(svc.warm.indexed_total)) > idx_before
@@ -121,9 +117,9 @@ def test_background_mode_never_strands_rows_under_sustained_traffic():
         np.testing.assert_array_equal(hb, hi, err_msg=f"step {step}")
         assert len(bg.responses) == len(inline.responses)
     bg.maintenance(block=True)
-    st = bg.stats()
-    assert st["bg_rebuilds"] > 0
-    assert st["rebuilds"] + int(st["rebuild_in_flight"]) >= 1
+    st = bg.stats_snapshot().rebuild
+    assert st["shadow_started"] > 0
+    assert st["rebuilds"] + int(st["in_flight"]) >= 1
 
 
 def test_commit_receipt_surfaces_maintenance_obligation():
@@ -136,7 +132,7 @@ def test_commit_receipt_surfaces_maintenance_obligation():
         due = due or receipt.rebuild_due
     assert due                                  # obligation surfaced
     svc.maintenance(block=True)
-    assert svc.stats()["rebuilds"] > 0
+    assert svc.stats_snapshot().rebuild["rebuilds"] > 0
 
 
 def test_pipeline_drives_maintenance_between_batches():
@@ -152,7 +148,7 @@ def test_pipeline_drives_maintenance_between_batches():
         assert all(r.response is not None for r in out)
     cache.maintenance(block=True)
     st = svc.stats()
-    assert st["bg_rebuilds"] > 0, st
+    assert st["backend"]["rebuild"]["shadow_started"] > 0, st
     assert st["maintenance_calls"] > 0, st
 
 

@@ -3,6 +3,7 @@ tenant isolation, admission, response GC, and the serving wiring."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import commit_insert, plan_lookup
 
 from repro.cache_service import CacheService, tiers
 from repro.core.calibration import calibrate_for_false_hit_budget
@@ -40,8 +41,10 @@ def test_cascade_recall_matches_flat_exact():
                        n_clusters=16, bucket=128, n_probe=6, threshold=thr,
                        flush_size=32, rebuild_every=2, kmeans_iters=6)
     for i in range(0, N, 32):
-        svc.insert(keys[i:i + 32], [f"r{j}" for j in range(i, i + 32)])
-    assert svc.stats()["demotions"] > N // 2  # most entries live in warm
+        commit_insert(svc, keys[i:i + 32],
+                      [f"r{j}" for j in range(i, i + 32)])
+    # most entries live in warm
+    assert svc.stats_snapshot().tiers["demotions"] > N // 2
 
     q = _unit(keys + 0.02 * rng.standard_normal(keys.shape
                                                 ).astype(np.float32))
@@ -53,7 +56,7 @@ def test_cascade_recall_matches_flat_exact():
     exact = query(flat, jnp.asarray(queries), threshold=thr, k=1)
     exact_hit = np.asarray(exact.hit)
 
-    hit, scores, values = svc.lookup(queries)
+    hit, scores, values = plan_lookup(svc, queries)
     recall = (hit & exact_hit).sum() / max(exact_hit.sum(), 1)
     assert recall >= 0.95, recall
     # no spurious hits the exact store would miss
@@ -66,12 +69,12 @@ def test_cascade_is_one_jitted_call_and_mixed_batches_dont_retrace():
     svc = CacheService(dim=16, hot_capacity=32, warm_capacity=128,
                        n_clusters=4, bucket=32)
     e = _unit(rng.standard_normal((8, 16)).astype(np.float32))
-    svc.insert(e, [f"r{i}" for i in range(8)], tenant=0)
-    svc.lookup(e, tenant=0)
+    commit_insert(svc, e, [f"r{i}" for i in range(8)], tenant=0)
+    plan_lookup(svc, e, tenant=0)
     sizes = svc._lookup._cache_size()
-    svc.lookup(e, tenant=np.arange(8) % 3)      # mixed-tenant batch
+    plan_lookup(svc, e, tenant=np.arange(8) % 3)   # mixed-tenant batch
     svc.set_tenant_policy(2, threshold=0.5)
-    svc.lookup(e, tenant=2)                     # new per-tenant threshold
+    plan_lookup(svc, e, tenant=2)           # new per-tenant threshold
     assert svc._lookup._cache_size() == sizes   # same trace: no recompile
 
 
@@ -90,14 +93,15 @@ def test_cross_tenant_queries_never_hit():
     for step in range(12):
         t = step % 3
         e = _unit(rng.standard_normal((8, d)).astype(np.float32))
-        svc.insert(e, [f"t{t}-{step}-{i}" for i in range(8)], tenant=t)
+        commit_insert(svc, e, [f"t{t}-{step}-{i}" for i in range(8)],
+                      tenant=t)
         for row in e:
             owner[row.tobytes()] = t
         # every tenant queries every key ever inserted
         all_keys = np.asarray([np.frombuffer(b, np.float32)
                                for b in owner])
         for qt in range(3):
-            hit, scores, values = svc.lookup(all_keys, tenant=qt)
+            hit, scores, values = plan_lookup(svc, all_keys, tenant=qt)
             for j, b in enumerate(owner):
                 if owner[b] != qt:
                     assert not hit[j], (step, qt, j)
@@ -115,7 +119,7 @@ def test_evict_tenant_between_plan_and_commit():
     svc = CacheService(dim=d, hot_capacity=32, warm_capacity=64,
                        n_clusters=4, bucket=32, threshold=0.9)
     e0 = _unit(rng.standard_normal((8, d)).astype(np.float32))
-    svc.insert(e0, [f"old{i}" for i in range(8)], tenant=0)
+    commit_insert(svc, e0, [f"old{i}" for i in range(8)], tenant=0)
 
     fresh = _unit(rng.standard_normal((4, d)).astype(np.float32))
     q = np.concatenate([e0[:4], fresh])
@@ -126,7 +130,7 @@ def test_evict_tenant_between_plan_and_commit():
     assert svc.evict_tenant(0) == 8          # the race: plan is now stale
     receipt = svc.commit(plan, [None] * 4 + [f"new{i}" for i in range(4)])
     assert receipt.admitted == 4
-    assert svc.stats()["stale_commits"] == 1
+    assert svc.stats_snapshot().traffic["stale_commits"] == 1
     # value ids 0..7 were freed; commit must have minted fresh ones only
     assert svc.responses and min(svc.responses) >= 8
     assert sorted(svc.responses.values()) == [f"new{i}" for i in range(4)]
@@ -134,7 +138,7 @@ def test_evict_tenant_between_plan_and_commit():
     # plan-time responses were already resolved, so the requests that
     # were promised a hit still got a real string (asserted above); but
     # the evicted keys themselves are gone from the device tiers
-    hit, _, _ = svc.lookup(e0, tenant=0)
+    hit, _, _ = plan_lookup(svc, e0, tenant=0)
     assert not hit.any()
 
 
@@ -144,11 +148,11 @@ def test_evict_tenant_only_touches_that_tenant():
                        n_clusters=4, bucket=32, threshold=0.9)
     e0 = _unit(rng.standard_normal((4, d)).astype(np.float32))
     e1 = _unit(rng.standard_normal((4, d)).astype(np.float32))
-    svc.insert(e0, ["a"] * 4, tenant=0)
-    svc.insert(e1, ["b"] * 4, tenant=1)
+    commit_insert(svc, e0, ["a"] * 4, tenant=0)
+    commit_insert(svc, e1, ["b"] * 4, tenant=1)
     assert svc.evict_tenant(0) == 4
-    assert not svc.lookup(e0, tenant=0)[0].any()
-    assert svc.lookup(e1, tenant=1)[0].all()
+    assert not plan_lookup(svc, e0, tenant=0)[0].any()
+    assert plan_lookup(svc, e1, tenant=1)[0].all()
     assert len(svc.responses) == 4
 
 
@@ -162,19 +166,19 @@ def test_admission_skips_well_covered_misses():
                        n_clusters=4, bucket=32, threshold=0.95,
                        admission_margin=0.2)
     base = _unit(rng.standard_normal((1, d)).astype(np.float32))
-    svc.insert(base, ["orig"])
+    commit_insert(svc, base, ["orig"])
     orth = rng.standard_normal((1, d)).astype(np.float32)
     orth = _unit(orth - (orth @ base.T) * base)
     near = 0.85 * base + np.sqrt(1 - 0.85 ** 2) * orth  # cos(base,near)=.85
-    hit, scores, _ = svc.lookup(near)
+    hit, scores, _ = plan_lookup(svc, near)
     assert not hit[0] and scores[0] > 0.75  # miss, but well-covered
-    admitted = svc.insert(near, ["dup"], scores=scores)
+    admitted = commit_insert(svc, near, ["dup"], scores=scores)
     assert admitted == 0
-    assert svc.stats()["admission_skips"] == 1
+    assert svc.stats_snapshot().admission["skipped"] == 1
     assert len(svc.responses) == 1          # no string leaked for the skip
     far = _unit(rng.standard_normal((1, d)).astype(np.float32))
-    hit, scores, _ = svc.lookup(far)
-    assert svc.insert(far, ["new"], scores=scores) == 1
+    hit, scores, _ = plan_lookup(svc, far)
+    assert commit_insert(svc, far, ["new"], scores=scores) == 1
 
 
 def test_response_gc_bounds_host_memory():
@@ -188,11 +192,11 @@ def test_response_gc_bounds_host_memory():
     total = 0
     for step in range(40):
         e = _unit(rng.standard_normal((8, d)).astype(np.float32))
-        total += svc.insert(e, [f"s{step}-{i}" for i in range(8)])
+        total += commit_insert(svc, e, [f"s{step}-{i}" for i in range(8)])
     assert total == 320
     assert len(svc.responses) <= hot_cap + warm_cap
     assert len(svc.responses) == len(svc)   # exactly the live entries
-    assert svc.stats()["evictions"] == total - len(svc)
+    assert svc.stats_snapshot().tiers["evictions"] == total - len(svc)
 
 
 def test_manual_flushes_never_strand_entries_past_tail():
@@ -204,10 +208,10 @@ def test_manual_flushes_never_strand_entries_past_tail():
                        n_clusters=4, bucket=32, threshold=0.9,
                        flush_size=8, rebuild_every=2)
     e = _unit(rng.standard_normal((32, d)).astype(np.float32))
-    svc.insert(e, [f"r{i}" for i in range(32)])
+    commit_insert(svc, e, [f"r{i}" for i in range(32)])
     for _ in range(4):
         svc.flush(rebuild=False)
-    hit, _, _ = svc.lookup(e)
+    hit, _, _ = plan_lookup(svc, e)
     assert hit.all(), int(hit.sum())
     assert len(svc.responses) == len(svc)
 
@@ -343,35 +347,42 @@ def test_cached_service_tenants_are_isolated_end_to_end():
 
 
 # ---------------------------------------------------------------------------
-# stats() deprecation (removal: v2.0)
+# the one-release flat-kwargs construction shim (CacheConfig is the v2
+# surface; the v2.0-removed lookup/insert/stats shims must stay gone)
 # ---------------------------------------------------------------------------
 
-def test_stats_flat_key_warning_fires_exactly_once_per_process():
-    """The legacy flat-key view warns on the first keyed read and then
+def test_flat_kwargs_shim_warns_exactly_once_per_process():
+    """Legacy flat-kwargs construction warns on the first use and then
     never again in the process (the flag is class-level, not
-    per-instance) — and the message names the removal version so the
-    one shot carries the whole migration story."""
+    per-instance) — and the message points at the migration table so
+    the one shot carries the whole story."""
     import warnings
 
-    from repro.cache_service.service import LegacyStatsView
-
-    svc = CacheService(dim=16, hot_capacity=8, warm_capacity=32,
-                       n_clusters=2, bucket=16)
-    saved = LegacyStatsView._warned
+    saved = CacheService._kwargs_warned
     try:
-        LegacyStatsView._warned = False
+        CacheService._kwargs_warned = False
         with warnings.catch_warnings(record=True) as rec:
             warnings.simplefilter("always")
-            s = svc.stats()
-            k = next(iter(s))
-            _ = s[k]                    # first keyed read: warns
-            _ = s.get(k)                # second read: silent
-            _ = svc.stats()[k]          # fresh view, same process: silent
-            _ = dict(s)                 # bulk copy never warns
+            CacheService(dim=16, hot_capacity=8, warm_capacity=32,
+                         n_clusters=2, bucket=16)
+            # second construction, same process: silent
+            CacheService(dim=16, hot_capacity=8, warm_capacity=32,
+                         n_clusters=2, bucket=16)
         deps = [w for w in rec
-                if issubclass(w.category, DeprecationWarning)]
+                if issubclass(w.category, DeprecationWarning)
+                and "CacheConfig" in str(w.message)]
         assert len(deps) == 1, [str(w.message) for w in deps]
-        msg = str(deps[0].message)
-        assert "v2.0" in msg and "stats_snapshot" in msg
     finally:
-        LegacyStatsView._warned = saved
+        CacheService._kwargs_warned = saved
+
+
+def test_v2_removals_are_gone():
+    """The deprecated surface announced for v2.0 must actually be
+    removed: lookup/insert shims, the flat stats() view, and the
+    LegacyStatsView helper class."""
+    svc = CacheService(dim=16, hot_capacity=8, warm_capacity=32,
+                       n_clusters=2, bucket=16)
+    for name in ("lookup", "insert", "stats"):
+        assert not hasattr(svc, name), name
+    import repro.cache_service as cs
+    assert not hasattr(cs, "LegacyStatsView")

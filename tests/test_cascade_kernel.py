@@ -7,6 +7,7 @@ import warnings
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import commit_insert, plan_lookup
 
 from repro.cache_service import CacheService, tiers
 from repro.core import ivf as ivf_lib
@@ -200,10 +201,10 @@ def test_cascade_query_fused_matches_unfused_after_flush_rebuild():
                        flush_size=8, rebuild_every=2)
     for step in range(10):
         e = _unit(rng.standard_normal((8, d)).astype(np.float32))
-        svc.insert(e, [f"s{step}-{i}" for i in range(8)],
-                   tenant=step % 3)
-    st = svc.stats()
-    assert st["demotions"] > 0 and st["rebuilds"] > 0
+        commit_insert(svc, e, [f"s{step}-{i}" for i in range(8)],
+                      tenant=step % 3)
+    st = svc.stats_snapshot()
+    assert st.tiers["demotions"] > 0 and st.rebuild["rebuilds"] > 0
     # the warm ring now holds indexed rows AND a post-rebuild tail
     assert int(svc.warm.total - svc.warm.indexed_total) > 0
 
@@ -230,11 +231,11 @@ def test_service_fused_flag_serves_identically():
     for step in range(8):
         e = _unit(rng.standard_normal((8, d)).astype(np.float32))
         texts = [f"s{step}-{i}" for i in range(8)]
-        a.insert(e, texts, tenant=step % 2)
-        b.insert(e, texts, tenant=step % 2)
+        commit_insert(a, e, texts, tenant=step % 2)
+        commit_insert(b, e, texts, tenant=step % 2)
         for t in range(2):
-            ha, sa, va = a.lookup(e, tenant=t)
-            hb, sb, vb = b.lookup(e, tenant=t)
+            ha, sa, va = plan_lookup(a, e, tenant=t)
+            hb, sb, vb = plan_lookup(b, e, tenant=t)
             np.testing.assert_array_equal(ha, hb)
             np.testing.assert_allclose(sa, sb)
             assert va == vb

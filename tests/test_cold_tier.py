@@ -5,6 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import commit_insert, plan_lookup
 
 from repro.cache_service import (
     CacheRequest, CacheService, ColdRoutingPolicy, ColdTier, tiers,
@@ -242,7 +243,7 @@ def test_evict_tenant_between_cold_hit_and_maintenance():
     svc = _service(d, cold_capacity=512)
     _fill(svc, keys, tenant=0)
     other = _unit(rng.standard_normal((8, d)).astype(np.float32))
-    svc.insert(other, [f"t1-{i}" for i in range(8)], tenant=1)
+    commit_insert(svc, other, [f"t1-{i}" for i in range(8)], tenant=1)
     cold_vids = sorted(int(v) for v in svc.cold.value_ids[svc.cold.valid])
     plan = svc.plan(CacheRequest.build(keys[cold_vids[:8]], 0))
     assert plan.hit.all() and svc.cold.pending_promotions >= 8
@@ -255,7 +256,7 @@ def test_evict_tenant_between_cold_hit_and_maintenance():
     assert not plan2.hit.any()
     # tenant 1 is untouched; tenant 0's strings are gone
     assert sorted(svc.responses.values()) == [f"t1-{i}" for i in range(8)]
-    hit, _, vals = svc.lookup(other, tenant=1)
+    hit, _, vals = plan_lookup(svc, other, tenant=1)
     assert hit.all() and all(v.startswith("t1-") for v in vals)
 
 

@@ -61,19 +61,23 @@ def test_store_ttl_eviction():
 
 
 def test_semantic_cache_end_to_end():
+    from repro.cache_service.protocol import CacheRequest
     cache = SemanticCache(capacity=32, dim=16, threshold=0.9)
     e = _unit(rng.standard_normal((4, 16)).astype(np.float32))
-    hits, scores, values = cache.lookup(e)
-    assert not hits.any()
-    cache.insert(e[:2], ["resp-a", "resp-b"])
-    hits, scores, values = cache.lookup(e)
-    assert list(hits) == [True, True, False, False]
-    assert values[0] == "resp-a" and values[1] == "resp-b"
+    plan = cache.plan(CacheRequest.build(e))
+    assert not plan.hit.any()
+    cache.commit(cache.plan(CacheRequest.build(e[:2])),
+                 ["resp-a", "resp-b"])
+    # re-planning after the commit: first two rows now hit
+    plan = cache.plan(CacheRequest.build(e))
+    assert list(plan.hit) == [True, True, False, False]
+    assert plan.responses[0] == "resp-a"
+    assert plan.responses[1] == "resp-b"
     assert len(cache) == 2
     # near-duplicate (small perturbation) still hits
     e_near = _unit(e[:1] + 0.01 * rng.standard_normal((1, 16)))
-    hits, scores, values = cache.lookup(e_near)
-    assert hits[0] and values[0] == "resp-a"
+    plan = cache.plan(CacheRequest.build(e_near))
+    assert plan.hit[0] and plan.responses[0] == "resp-a"
 
 
 # ---------------------------------------------------------------------------

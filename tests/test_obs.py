@@ -3,13 +3,12 @@ round-trip, span trees through the full serving pipeline, SLO health,
 the batcher's maintenance accounting, and the stats() migration."""
 import json
 import threading
-import warnings
 
 import jax
 import numpy as np
 import pytest
 
-from repro.cache_service import CacheService, LegacyStatsView
+from repro.cache_service import CacheService
 from repro.core import SemanticCache
 from repro.core.embedders import HashNgramEmbedder
 from repro.data import HashTokenizer
@@ -333,10 +332,10 @@ def test_flat_cache_shares_telemetry_with_engine():
 
 
 # ---------------------------------------------------------------------------
-# stats() migration + batcher accounting
+# stats_snapshot schema + batcher accounting
 # ---------------------------------------------------------------------------
 
-def test_stats_snapshot_schema_and_legacy_view():
+def test_stats_snapshot_schema():
     _, cache, svc = _service(fused=False)
     svc.handle(["one query", "two query"], tenant=1)
     snap = cache.stats_snapshot()
@@ -347,21 +346,9 @@ def test_stats_snapshot_schema_and_legacy_view():
     assert d["traffic"]["plans"] == 1
     assert d["admission"]["admitted"] >= 1
     assert d["health"]["tenants"]["1"]["hit"]["events"] == 2
-
-    st = cache.stats()
-    assert isinstance(st, LegacyStatsView)
-    # merges/copies stay silent (engine.stats() spreads the dict)...
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        merged = {**st}
-    assert merged["plans"] == 1
-    # ...key access warns, once per process
-    LegacyStatsView._warned = False
-    with pytest.warns(DeprecationWarning, match="stats_snapshot"):
-        assert st["plans"] == 1
-    with warnings.catch_warnings():
-        warnings.simplefilter("error")
-        assert st.get("commits") == 1      # second access: no warning
+    # v2.0: the flat stats() view is gone — the typed snapshot is the
+    # only stats surface
+    assert not hasattr(cache, "stats")
 
 
 def test_batcher_idle_tick_accounts_exactly_once():

@@ -1,15 +1,16 @@
-"""Golden parity: the typed plan/commit lifecycle is bit-exact with the
-legacy lookup/insert serving loop — hits, scores, value ids, admissions,
-evictions and the full device tier state — for both backends
-(SemanticCache and CacheService) and both cascade paths (fused and
-unfused).  The query mix includes exact in-batch duplicates, so miss
-coalescing is exercised while keeping even the host strings identical."""
-import warnings
-
+"""Golden parity: the coalesced plan/commit pipeline is bit-exact with
+the naive two-call serving loop (uncoalesced per-batch plan, then a
+fresh for_insert commit of the misses — the v2.0-removed lookup/insert
+shims, inlined) — hits, scores, value ids, admissions, evictions and
+the full device tier state — for both backends (SemanticCache and
+CacheService) and both cascade paths (fused and unfused).  The query
+mix includes exact in-batch duplicates, so miss coalescing is exercised
+while keeping even the host strings identical."""
 import numpy as np
 import pytest
+from conftest import commit_insert, plan_lookup
 
-from repro.cache_service import CacheRequest, CacheService
+from repro.cache_service import CachePlan, CacheRequest, CacheService
 from repro.core import SemanticCache
 
 rng = np.random.default_rng(29)
@@ -37,24 +38,28 @@ def _batches(d, n_batches=8, batch=8, repeat_frac=0.4):
     return out
 
 
-def _legacy_serve(cache, embs, tenant, tenant_aware):
-    """The pre-protocol serving loop, verbatim (lookup -> generate
-    misses -> insert with observed scores)."""
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
+def _two_call_serve(cache, embs, tenant, tenant_aware):
+    """The naive serving loop: one uncoalesced read plan, generate
+    every miss, commit them through a fresh for_insert plan with the
+    observed scores (exactly what the removed lookup/insert shims
+    did)."""
+    if tenant_aware:
+        hits, scores, values = plan_lookup(cache, embs, tenant=tenant)
+    else:
+        plan = cache.plan(CacheRequest.build(np.asarray(embs)),
+                          coalesce=False)
+        hits, scores, values = plan.hit, plan.scores, plan.responses
+    miss = [i for i, h in enumerate(hits) if not h]
+    if miss:
+        answers = [f"gen({embs[i].tobytes().hex()[:12]})" for i in miss]
+        sel = np.asarray(miss)
         if tenant_aware:
-            hits, scores, values = cache.lookup(embs, tenant=tenant)
+            commit_insert(cache, embs[sel], answers, tenant=tenant,
+                          scores=scores[sel])
         else:
-            hits, scores, values = cache.lookup(embs)
-        miss = [i for i, h in enumerate(hits) if not h]
-        if miss:
-            answers = [f"gen({embs[i].tobytes().hex()[:12]})" for i in miss]
-            sel = np.asarray(miss)
-            if tenant_aware:
-                cache.insert(embs[sel], answers, tenant=tenant,
-                             scores=scores[sel])
-            else:
-                cache.insert(embs[sel], answers)
+            req = CacheRequest.build(np.asarray(embs[sel]))
+            cache.commit(CachePlan.for_insert(
+                req, np.ones(len(req), bool)), answers)
     return np.asarray(hits), np.asarray(scores), values
 
 
@@ -76,55 +81,66 @@ def _assert_tree_equal(a, b, names):
                                       err_msg=name)
 
 
-PARITY_KEYS = ("lookups", "hot_hits", "warm_hits", "inserts",
-               "admission_skips", "demotions", "rebuilds", "evictions")
+def _parity_counts(svc):
+    s = svc.stats_snapshot()
+    return {"lookups": s.traffic["lookup_rows"],
+            "hot_hits": s.traffic["hot_hits"],
+            "warm_hits": s.traffic["warm_hits"],
+            "inserts": s.admission["admitted"],
+            "admission_skips": s.admission["skipped"],
+            "demotions": s.tiers["demotions"],
+            "rebuilds": s.rebuild["rebuilds"],
+            "evictions": s.tiers["evictions"]}
 
 
 @pytest.mark.parametrize("fused", [False, True])
-def test_cache_service_plan_commit_matches_legacy(fused):
+def test_cache_service_plan_commit_matches_two_call_loop(fused):
     d = 24
     mk = lambda: CacheService(
         dim=d, hot_capacity=16, warm_capacity=64, n_clusters=4, bucket=32,
         n_probe=4, threshold=0.85, admission_margin=0.05, flush_size=8,
         rebuild_every=2, fused=fused)
-    legacy, typed = mk(), mk()
+    naive, typed = mk(), mk()
     for b, embs in enumerate(_batches(d)):
         tenant = b % 3
-        lh, ls, lv = _legacy_serve(legacy, embs, tenant, tenant_aware=True)
+        lh, ls, lv = _two_call_serve(naive, embs, tenant,
+                                     tenant_aware=True)
         th, ts, tv = _plan_commit_serve(typed, embs, tenant)
         np.testing.assert_array_equal(lh, th, err_msg=f"batch {b} hits")
         np.testing.assert_array_equal(ls, ts, err_msg=f"batch {b} scores")
         assert lv == tv, f"batch {b} hit responses"
         # full device-state parity after every batch: same admissions,
         # same value-id assignment, same demotions/evictions
-        _assert_tree_equal(legacy.hot, typed.hot,
-                           [f"hot.{f}" for f in legacy.hot._fields])
-        _assert_tree_equal(legacy.warm, typed.warm,
-                           [f"warm.{f}" for f in legacy.warm._fields])
-        assert legacy.responses == typed.responses, f"batch {b}"
-    sl, st = legacy.stats(), typed.stats()
-    assert {k: sl[k] for k in PARITY_KEYS} == {k: st[k] for k in PARITY_KEYS}
+        _assert_tree_equal(naive.hot, typed.hot,
+                           [f"hot.{f}" for f in naive.hot._fields])
+        _assert_tree_equal(naive.warm, typed.warm,
+                           [f"warm.{f}" for f in naive.warm._fields])
+        assert naive.responses == typed.responses, f"batch {b}"
+    assert _parity_counts(naive) == _parity_counts(typed)
 
 
-def test_semantic_cache_plan_commit_matches_legacy():
+def test_semantic_cache_plan_commit_matches_two_call_loop():
     d = 24
-    legacy = SemanticCache(capacity=64, dim=d, threshold=0.85)
+    naive = SemanticCache(capacity=64, dim=d, threshold=0.85)
     typed = SemanticCache(capacity=64, dim=d, threshold=0.85)
     for b, embs in enumerate(_batches(d)):
-        lh, ls, lv = _legacy_serve(legacy, embs, 0, tenant_aware=False)
+        lh, ls, lv = _two_call_serve(naive, embs, 0, tenant_aware=False)
         th, ts, tv = _plan_commit_serve(typed, embs, 0)
         np.testing.assert_array_equal(lh, th, err_msg=f"batch {b} hits")
         np.testing.assert_array_equal(ls, ts, err_msg=f"batch {b} scores")
         assert lv == tv
-        _assert_tree_equal(legacy.state, typed.state,
-                           [f"state.{f}" for f in legacy.state._fields])
-        assert legacy.responses == typed.responses
-    assert legacy.stats()["inserts"] == typed.stats()["inserts"]
+        _assert_tree_equal(naive.state, typed.state,
+                           [f"state.{f}" for f in naive.state._fields])
+        assert naive.responses == typed.responses
+    assert naive.stats_snapshot()["inserts"] \
+        == typed.stats_snapshot()["inserts"]
 
 
-def test_insert_shim_is_commit_for_every_row():
-    """The deprecated insert() must behave exactly like committing a
-    plan whose rows are all ungrouped misses (admission included)."""
+def test_for_insert_plan_applies_admission_like_serve_path():
+    """Committing through a for_insert plan (the helper the removed
+    insert shim compiled down to) must admit exactly the rows the
+    policy's admission mask selects, and leave identical device
+    state to an explicit for_insert commit."""
     d = 16
     a = CacheService(dim=d, hot_capacity=16, warm_capacity=32, n_clusters=2,
                      bucket=16, threshold=0.9, admission_margin=0.1)
@@ -132,11 +148,8 @@ def test_insert_shim_is_commit_for_every_row():
                      bucket=16, threshold=0.9, admission_margin=0.1)
     e = _unit(rng.standard_normal((6, d)).astype(np.float32))
     scores = np.asarray([0.0, 0.85, 0.3, 0.95, 0.5, 0.82], np.float32)
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        n_a = a.insert(e, [f"r{i}" for i in range(6)], tenant=1,
-                       scores=scores)
-    from repro.cache_service import CachePlan
+    n_a = commit_insert(a, e, [f"r{i}" for i in range(6)], tenant=1,
+                        scores=scores)
     req = CacheRequest.build(e, 1)
     admit = b.policies.admit_mask(req.tenants, scores)
     n_b = b.commit(CachePlan.for_insert(req, admit, scores),

@@ -9,12 +9,12 @@ CI job); below that device count they skip, the single-device cases
 always run."""
 import re
 import threading
-import warnings
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import commit_insert, plan_lookup
 from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
@@ -359,15 +359,11 @@ def _svc(S, **kw):
 
 
 def _insert(svc, keys, texts, tenant=0):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return svc.insert(keys, texts, tenant=tenant)
+    return commit_insert(svc, keys, texts, tenant=tenant)
 
 
 def _lookup(svc, keys, tenant=0):
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        return svc.lookup(keys, tenant=tenant)
+    return plan_lookup(svc, keys, tenant=tenant)
 
 
 @pytest.mark.parametrize("S", [2])
@@ -392,7 +388,7 @@ def test_sharded_warm_publish_swap_mid_stream(S):
     keys = _unit(rng.standard_normal((16, 16)).astype(np.float32))
     _insert(svc, keys, [f"r{i}" for i in range(16)])
     svc.flush(rebuild=True)                    # starts the gated shadow
-    assert svc.stats()["rebuild_in_flight"]
+    assert svc.stats_snapshot().rebuild["in_flight"]
     idx_before = np.asarray(svc.warm.indexed_total).copy()
 
     # mid-rebuild: old index + per-shard tail windows serve everything
@@ -427,7 +423,7 @@ def test_evict_tenant_on_sharded_warm_tier(S):
         e = _unit(rng.standard_normal((8, 16)).astype(np.float32))
         all_keys[t].append(e)
         _insert(svc, e, [f"t{t}-{step}-{i}" for i in range(8)], tenant=t)
-    assert svc.stats()["demotions"] > 0        # warm shards are populated
+    assert svc.stats_snapshot().tiers["demotions"] > 0   # warm populated
     live_before = len(svc.responses)
     n = svc.evict_tenant(0)
     assert n > 0 and len(svc.responses) == live_before - n
@@ -465,7 +461,7 @@ def test_sharded_service_serves_identically_to_unsharded(S, warm_dtype):
         hb, _, vb = _lookup(b, keys)
         np.testing.assert_array_equal(ha, hb, err_msg=f"step {step}")
         assert va == vb
-    assert b.stats()["warm_shards"] == S
+    assert b.stats_snapshot().tiers["warm_shards"] == S
 
 
 # ---------------------------------------------------------------------------
